@@ -1,0 +1,57 @@
+"""Kernel micro-benchmarks (interpret-mode correctness timing on CPU;
+on TPU these time the Mosaic kernels) + oracle agreement."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+from repro.kernels.distill_loss import distill_loss_pallas
+from repro.kernels.mixup_kernel import mixup_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+from .common import save_result, time_call
+
+
+def main():
+    rows = []
+    k = jax.random.PRNGKey(0)
+
+    # mixup
+    a = jax.random.normal(k, (512, 784))
+    b = jax.random.normal(jax.random.fold_in(k, 1), (512, 784))
+    la = jnp.full((512,), 0.3)
+    us = time_call(lambda: mixup_pallas(a, b, la, 1 - la))
+    err = float(jnp.max(jnp.abs(mixup_pallas(a, b, la, 1 - la) -
+                                ref.mixup_ref(a, b, la, 1 - la))))
+    rows.append(f"kernel/mixup_512x784,{us:.0f},maxerr={err:.2e}")
+
+    # distill loss
+    logits = jax.random.normal(k, (1024, 10))
+    labels = jax.random.randint(jax.random.fold_in(k, 2), (1024,), 0, 10)
+    g = jax.nn.softmax(jax.random.normal(jax.random.fold_in(k, 3),
+                                         (1024, 10)))
+    us = time_call(lambda: distill_loss_pallas(logits, labels, g, 0.01))
+    err = float(jnp.max(jnp.abs(
+        distill_loss_pallas(logits, labels, g, 0.01) -
+        ref.distill_loss_ref(logits, labels, g, 0.01))))
+    rows.append(f"kernel/distill_loss_1024x10,{us:.0f},maxerr={err:.2e}")
+
+    # ssd scan
+    xdt = jax.random.normal(k, (8, 256, 32)) * 0.3
+    B = jax.random.normal(jax.random.fold_in(k, 4), (8, 256, 16)) * 0.3
+    C = jax.random.normal(jax.random.fold_in(k, 5), (8, 256, 16)) * 0.3
+    dA = -jnp.abs(jax.random.normal(jax.random.fold_in(k, 6), (8, 256)))
+    us = time_call(lambda: ssd_scan_pallas(xdt, B, C, dA, chunk=64),
+                   repeats=2, warmup=1)
+    err = float(jnp.max(jnp.abs(ssd_scan_pallas(xdt, B, C, dA, chunk=64) -
+                                ref.ssd_ref(xdt, B, C, dA))))
+    rows.append(f"kernel/ssd_scan_8x256,{us:.0f},maxerr={err:.2e}")
+
+    save_result("kernels", {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(main()))

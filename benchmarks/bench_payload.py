@@ -1,0 +1,67 @@
+"""Sec. II-C / IV payload + latency accounting: uplink payload ratios
+(the paper's "up to 42.4x" reduction) and per-round link latency under
+the paper's exact channel parameters."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from repro.channel import ChannelConfig, payload_bits
+from repro.channel.model import simulate_link
+
+from .common import save_result
+
+N_MOD = 12544
+N_L = 10
+
+
+def run():
+    cfg = ChannelConfig()
+    out = {}
+    for proto in ("fl", "fd", "fld", "mixfld", "mix2fld"):
+        up1, dn1 = payload_bits(proto, n_mod=N_MOD, n_labels=N_L,
+                                sample_bits=6272, n_seed=10,
+                                first_round=True)
+        up, dn = payload_bits(proto, n_mod=N_MOD, n_labels=N_L,
+                              first_round=False)
+        lat_up, ok_up = simulate_link(jax.random.PRNGKey(0), cfg, up, True,
+                                      2000)
+        lat_dn, ok_dn = simulate_link(jax.random.PRNGKey(1), cfg, dn, False,
+                                      2000)
+        out[proto] = {
+            "uplink_bits_first_round": up1,
+            "uplink_bits_steady": up,
+            "downlink_bits": dn,
+            "uplink_success_rate": float(np.mean(np.asarray(ok_up))),
+            "uplink_mean_latency_slots": float(np.mean(np.asarray(lat_up))),
+            "downlink_success_rate": float(np.mean(np.asarray(ok_dn))),
+        }
+    fl_up = out["fl"]["uplink_bits_steady"]
+    out["ratios"] = {
+        "fl_over_fd_steady": fl_up / out["fd"]["uplink_bits_steady"],
+        "fl_over_mix2fld_steady": fl_up / out["mix2fld"]["uplink_bits_steady"],
+        "fl_over_mix2fld_first": fl_up /
+            out["mix2fld"]["uplink_bits_first_round"],
+    }
+    save_result("payload_latency", out)
+    return out
+
+
+def main():
+    out = run()
+    rows = []
+    for proto, v in out.items():
+        if proto == "ratios":
+            continue
+        rows.append(f"payload/{proto},0,up={v['uplink_bits_steady']}"
+                    f";ok={v['uplink_success_rate']:.3f}")
+    r = out["ratios"]
+    rows.append(f"payload/uplink_reduction_steady,0,"
+                f"{r['fl_over_mix2fld_steady']:.1f}x")
+    rows.append(f"payload/uplink_reduction_first_round,0,"
+                f"{r['fl_over_mix2fld_first']:.1f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    print(main())

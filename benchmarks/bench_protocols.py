@@ -1,0 +1,63 @@
+"""Fig. 2 reproduction: learning curves of FL / FD / MixFLD / Mix2FLD
+under asymmetric vs symmetric channels, IID vs non-IID data.
+
+Reduced iteration counts (documented) keep the CPU container tractable;
+the paper's *relative* claims are what EXPERIMENTS.md reports.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.channel import ChannelConfig
+from repro.core.protocols import FederatedConfig, FederatedTrainer
+from repro.models.cnn import CNN
+
+from .common import protocol_dataset, save_result
+
+PROTOCOLS = ("fl", "fd", "mixfld", "mix2fld")
+
+
+def run(local_iters=150, server_iters=150, max_rounds=8, num_devices=10,
+        quick=False):
+    if quick:
+        local_iters, server_iters, max_rounds, num_devices = 40, 40, 2, 5
+    results = {}
+    for iid in (True, False):
+        dev = protocol_dataset(num_devices=num_devices, iid=iid)
+        for sym in (False, True):
+            ch = ChannelConfig(num_devices=num_devices,
+                               p_up_dbm=40.0 if sym else 23.0)
+            for proto in PROTOCOLS:
+                fc = FederatedConfig(
+                    protocol=proto, num_devices=num_devices,
+                    local_iters=local_iters, local_batch=32,
+                    server_iters=server_iters, server_batch=32,
+                    max_rounds=max_rounds, seed=1)
+                t0 = time.time()
+                h = FederatedTrainer(CNN(), fc, ch).run(*dev)
+                key = f"{proto}_{'iid' if iid else 'noniid'}_" \
+                      f"{'sym' if sym else 'asym'}"
+                results[key] = {
+                    "acc": h["acc"],
+                    "cum_time_s": h["cum_time_s"],
+                    "uplink_ok": h["uplink_ok"],
+                    "converged_round": h["converged_round"],
+                    "wall_s": round(time.time() - t0, 1),
+                }
+                print(f"{key}: final_acc={h['acc'][-1]:.3f} "
+                      f"up_ok={h['uplink_ok']}")
+    save_result("protocols_fig2", results)
+    return results
+
+
+def main(quick=True):
+    res = run(quick=quick)
+    rows = []
+    for k, v in res.items():
+        rows.append(f"fig2/{k},{v['wall_s']*1e6:.0f},"
+                    f"final_acc={v['acc'][-1]:.4f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick=False)

@@ -1,0 +1,86 @@
+"""Roofline table from the dry-run results (one row per arch x shape x
+mesh) + the FL-vs-FD sync-step collective comparison (the paper's uplink
+asymmetry argument at pod scale)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.roofline.analysis import improvement_hint, summarize_combo
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_records():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def table(mesh: str = "16x16"):
+    rows = []
+    for r in load_records():
+        if r["mesh"] != mesh or r["shape"] in ("fl_sync", "fd_sync"):
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"{r['arch']:20s} {r['shape']:12s} {mesh:9s} "
+                        f"SKIPPED ({r['reason'][:60]}...)")
+        elif r["status"] == "ok":
+            rows.append(summarize_combo(r))
+            rows.append(f"{'':43s}-> {improvement_hint(r)}")
+        else:
+            rows.append(f"{r['arch']:20s} {r['shape']:12s} {mesh:9s} "
+                        f"ERROR {r['error'][:60]}")
+    return rows
+
+
+def sync_comparison():
+    """FL vs FD sync **cross-pod** bytes per arch — the paper's scarce
+    uplink direction at pod granularity.  (Total collective bytes include
+    the conversion's intra-pod FSDP traffic, which rides the fat
+    intra-pod links — the exact asymmetry the paper exploits.)"""
+    recs = {(r["arch"], r["shape"]): r for r in load_records()
+            if r["shape"] in ("fl_sync", "fd_sync") and r["status"] == "ok"}
+    rows = []
+    for arch in sorted({a for a, _ in recs}):
+        fl = recs.get((arch, "fl_sync"))
+        fd = recs.get((arch, "fd_sync"))
+        if not fl or not fd:
+            continue
+        xfl = fl.get("cross_pod_bytes_per_device", 0)
+        xfd = fd.get("cross_pod_bytes_per_device", 0)
+        rows.append(
+            f"{arch:20s} "
+            f"fl_cross={xfl/2**20:9.2f}MiB fd_cross={xfd/2**20:9.2f}MiB "
+            f"cross_reduction={xfl/max(xfd,1):7.1f}x "
+            f"(fd total={fd['collective_bytes_per_device']/2**20:9.1f}MiB"
+            f" intra-pod)")
+    return rows
+
+
+def main():
+    out = []
+    for r in load_records():
+        if r["status"] != "ok" or r["shape"] in ("fl_sync", "fd_sync"):
+            continue
+        t = r["roofline"]
+        bound = max(t.values())
+        out.append(
+            f"roofline/{r['arch']}_{r['shape']}_{r['mesh']},"
+            f"{bound*1e6:.0f},dom={r['dominant']}")
+    for row in sync_comparison():
+        parts = row.split()
+        out.append(f"sync/{parts[0]},0,{parts[-1]}")
+    return out
+
+
+if __name__ == "__main__":
+    print("== roofline 16x16 ==")
+    print("\n".join(table("16x16")))
+    print("== roofline 2x16x16 ==")
+    print("\n".join(table("2x16x16")))
+    print("== FL vs FD sync ==")
+    print("\n".join(sync_comparison()))

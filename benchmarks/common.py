@@ -1,0 +1,47 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+
+def save_result(name: str, payload) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def time_call(fn, *args, repeats: int = 5, warmup: int = 2):
+    """us/call of a jitted fn (blocking)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6
+
+
+def protocol_dataset(num_devices: int = 10, per_device: int = 500,
+                     iid: bool = True, n_test: int = 1000, seed: int = 0):
+    import jax.numpy as jnp
+
+    from repro.data import partition_iid, partition_noniid, synthetic_images
+
+    n = num_devices * per_device + n_test
+    x, y = synthetic_images(jax.random.PRNGKey(seed), n)
+    ntr = num_devices * per_device
+    if iid:
+        dev_x, dev_y = partition_iid(x[:ntr], y[:ntr], num_devices,
+                                     per_device, 10, seed=seed)
+    else:
+        dev_x, dev_y = partition_noniid(x[:ntr], y[:ntr], num_devices,
+                                        seed=seed)
+    return dev_x, dev_y, jnp.asarray(x[ntr:]), jnp.asarray(y[ntr:])

@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Full (paper-scale) variants
+run via each module's __main__; here the quick variants keep the whole
+suite CPU-tractable.
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_kernels, bench_payload, bench_privacy,
+                   bench_protocols, bench_roofline, bench_scalability,
+                   bench_seed_sweep)
+
+    modules = [
+        ("payload", bench_payload),      # Sec. II-C / IV payload ratios
+        ("privacy", bench_privacy),      # Tables II & III
+        ("kernels", bench_kernels),      # Pallas kernels vs oracles
+        ("roofline", bench_roofline),    # dry-run roofline terms
+        ("protocols", bench_protocols),  # Fig. 2 (quick)
+        ("seed_sweep", bench_seed_sweep),  # (N_S, N_I) tradeoff (quick)
+        ("scalability", bench_scalability),  # Fig. 3 (quick)
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in modules:
+        try:
+            for row in mod.main():
+                print(row)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},0,ERROR", file=sys.stderr)
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark module(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Quickstart: one Mix2FLD round, end to end, in under a minute on CPU.
+
+Shows the whole pipeline of Algorithm 1:
+  1. devices mix up seed samples (eq. 6) and upload them with their
+     per-label average outputs (eq. 2) over the fading uplink,
+  2. the server inversely mixes the seeds (eq. 7 / Prop. 1), builds
+     G_out, and runs the output-to-model conversion (eq. 5),
+  3. devices download the converted global model (FL-style downlink).
+
+Run: PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.channel import ChannelConfig
+from repro.core.protocols import FederatedConfig, FederatedTrainer
+from repro.data import partition_iid, synthetic_images
+from repro.models.cnn import CNN
+
+
+def main():
+    key = jax.random.PRNGKey(0)
+    x, y = synthetic_images(key, 3500)
+    dev_x, dev_y = partition_iid(x[:2500], y[:2500], 5, 500, 10)
+    test_x, test_y = jnp.asarray(x[2500:]), jnp.asarray(y[2500:])
+
+    fc = FederatedConfig(protocol="mix2fld", num_devices=5, local_iters=60,
+                         local_batch=32, server_iters=60, max_rounds=2)
+    ch = ChannelConfig(num_devices=5)  # paper's asymmetric 23/40 dBm
+    trainer = FederatedTrainer(CNN(), fc, ch)
+    h = trainer.run(dev_x, dev_y, test_x, test_y, log=print)
+
+    seeds = h["seeds"]
+    print(f"\nuploaded mixed-up seeds : {seeds['uploaded'].shape[0]}")
+    print(f"inversely mixed-up seeds: {seeds['train_x'].shape[0]} "
+          f"(augmented, hard labels)")
+    print(f"accuracy after {fc.max_rounds} rounds: {h['acc'][-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+"""Batched serving example: prefill + KV-cache greedy decode on any
+assigned architecture (smoke-size on CPU).
+
+Run: PYTHONPATH=src python examples/serve_batched.py --arch qwen3-14b
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main()

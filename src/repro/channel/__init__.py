@@ -1,0 +1,4 @@
+"""Wireless channel model (Sec. II-C): Rayleigh block fading, SNR-threshold
+decoding, FDMA uplink / multicast downlink, latency and outage."""
+from .model import ChannelConfig, simulate_link, round_trip  # noqa: F401
+from .payload import payload_bits  # noqa: F401

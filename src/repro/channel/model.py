@@ -1,0 +1,76 @@
+"""Rayleigh block-fading link simulation (eq. 4).
+
+SNR_{d,t} = P h_{d,t} r_d^-alpha / (W^y N_0),  h ~ Exp(1) IID.
+A slot decodes iff SNR >= theta, delivering tau * W^y * log2(1 + theta)
+bits.  Latency T^y = first slot where cumulative bits >= payload;
+outage if T^y > T_max.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelConfig:
+    """Paper Sec. IV defaults."""
+    num_devices: int = 10
+    num_channels: int = 2          # N_ch
+    bandwidth_hz: float = 10e6     # W
+    p_up_dbm: float = 23.0
+    p_dn_dbm: float = 40.0
+    distance_m: float = 1000.0     # r_d
+    pathloss_exp: float = 4.0      # alpha
+    noise_dbm_hz: float = -174.0   # N_0
+    theta: float = 3.0             # target SNR (linear)
+    tau_s: float = 1e-3            # slot / coherence time
+    t_max_slots: int = 100
+
+    def link_budget(self, up: bool) -> tuple[float, float]:
+        """Returns (success probability per slot, bits per good slot)."""
+        w = self.bandwidth_hz * (self.num_channels / self.num_devices
+                                 if up else 1.0)
+        p_tx = 10 ** (((self.p_up_dbm if up else self.p_dn_dbm) - 30) / 10)
+        n0 = 10 ** ((self.noise_dbm_hz - 30) / 10)
+        noise = w * n0
+        mean_snr = p_tx * self.distance_m ** (-self.pathloss_exp) / noise
+        p_success = math.exp(-self.theta / mean_snr)  # P(h >= theta/meanSNR)
+        bits = self.tau_s * w * math.log2(1.0 + self.theta)
+        return p_success, bits
+
+
+def simulate_link(key, cfg: ChannelConfig, payload_bits: float, up: bool,
+                  n_links: int):
+    """Simulate ``n_links`` independent links for one global update.
+
+    Returns (latency_slots (n,), success (n,) bool).  Latency is t_max for
+    outage links (they spent the whole window trying), per Sec. II-C.
+    """
+    p, bits = cfg.link_budget(up)
+    slots_needed = max(1, math.ceil(payload_bits / bits))
+    good = jax.random.bernoulli(key, p, (n_links, cfg.t_max_slots))
+    cum = jnp.cumsum(good.astype(jnp.int32), axis=1)
+    reached = cum >= slots_needed
+    latency = jnp.where(reached.any(axis=1),
+                        jnp.argmax(reached, axis=1) + 1,
+                        cfg.t_max_slots)
+    return latency, reached.any(axis=1)
+
+
+def round_trip(key, cfg: ChannelConfig, up_bits: float, dn_bits: float):
+    """One global update: per-device uplink (FDMA unicast) + downlink
+    (multicast: one transmission, every device must decode it).
+
+    Returns dict with per-device success masks and the round's latency in
+    seconds: tau * (max successful T_up + max T_dn), as the server waits
+    for the slowest non-outage device (T_max bounds stragglers).
+    """
+    ku, kd = jax.random.split(key)
+    t_up, ok_up = simulate_link(ku, cfg, up_bits, True, cfg.num_devices)
+    t_dn, ok_dn = simulate_link(kd, cfg, dn_bits, False, cfg.num_devices)
+    latency_s = cfg.tau_s * (float(jnp.max(t_up)) + float(jnp.max(t_dn)))
+    return {"up_ok": ok_up, "dn_ok": ok_dn, "t_up": t_up, "t_dn": t_dn,
+            "latency_s": latency_s}

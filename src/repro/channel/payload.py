@@ -1,0 +1,27 @@
+"""Per-protocol payload accounting (Sec. II-C / III-A).
+
+FL : B_up = B_dn = b_mod * N_mod
+FD : B_up = B_dn = b_out * N_L^2
+FLD-family: B_up = b_out * N_L^2 (+ b_s * N_s on the first round),
+            B_dn = b_mod * N_mod
+"""
+from __future__ import annotations
+
+B_MOD = 32  # bits per weight
+B_OUT = 32  # bits per output element
+
+
+def payload_bits(protocol: str, *, n_mod: int, n_labels: int,
+                 sample_bits: int = 0, n_seed: int = 0,
+                 first_round: bool = False) -> tuple[float, float]:
+    """Returns (uplink_bits, downlink_bits) per device for one round."""
+    out_bits = B_OUT * n_labels * n_labels
+    mod_bits = B_MOD * n_mod
+    if protocol == "fl":
+        return mod_bits, mod_bits
+    if protocol == "fd":
+        return out_bits, out_bits
+    if protocol in ("fld", "mixfld", "mix2fld"):
+        up = out_bits + (sample_bits * n_seed if first_round else 0)
+        return up, mod_bits
+    raise ValueError(protocol)

@@ -1,0 +1,72 @@
+"""Checkpointing: numpy ``.npz`` of a flattened pytree + JSON treedef.
+
+No orbax/flax in the container; this is deliberately simple but complete:
+atomic writes, step-tagged directories, latest-pointer, restore onto an
+arbitrary target structure (e.g. sharded params via ``jax.device_put``).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+
+def _flatten_with_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [leaf for _, leaf in flat]
+    return paths, leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree) -> str:
+    paths, leaves, _ = _flatten_with_paths(tree)
+    os.makedirs(ckpt_dir, exist_ok=True)
+    target = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=ckpt_dir)
+    try:
+        arrays = {f"a{i}": np.asarray(leaf) for i, leaf in enumerate(leaves)}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "paths": paths}, f)
+        if os.path.isdir(target):
+            shutil.rmtree(target)
+        os.rename(tmp, target)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    with open(os.path.join(ckpt_dir, "LATEST"), "w") as f:
+        f.write(os.path.basename(target))
+    return target
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    try:
+        with open(os.path.join(ckpt_dir, "LATEST")) as f:
+            return int(f.read().strip().split("_")[-1])
+    except FileNotFoundError:
+        return None
+
+
+def restore(ckpt_dir: str, target_tree, step: int | None = None):
+    """Restore into the structure of ``target_tree`` (shape/dtype checked)."""
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    data = np.load(os.path.join(d, "arrays.npz"))
+    leaves, treedef = jax.tree_util.tree_flatten(target_tree)
+    loaded = [data[f"a{i}"] for i in range(len(data.files))]
+    if len(loaded) != len(leaves):
+        raise ValueError(f"checkpoint has {len(loaded)} leaves, "
+                         f"target has {len(leaves)}")
+    out = []
+    for tgt, arr in zip(leaves, loaded):
+        if hasattr(tgt, "shape") and tuple(tgt.shape) != tuple(arr.shape):
+            raise ValueError(f"shape mismatch {tgt.shape} vs {arr.shape}")
+        out.append(jax.numpy.asarray(arr, dtype=getattr(tgt, "dtype", None)))
+    return jax.tree_util.tree_unflatten(treedef, out)

@@ -1,0 +1,26 @@
+"""DeepSeek-V2 236B — MLA + 160-expert MoE (2 shared, top-6). [arXiv:2405.04434]"""
+from . import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="deepseek-v2-236b",
+    family="moe",
+    source="arXiv:2405.04434",
+    num_layers=60,
+    d_model=5120,
+    num_heads=128,
+    num_kv_heads=128,   # MLA: logical heads; cache is the 512-d latent
+    head_dim=128,
+    d_ff=1536,          # routed expert intermediate (assignment sheet)
+    vocab_size=102400,
+    attn_type="mla",
+    kv_lora_rank=512,
+    q_lora_rank=1536,
+    rope_head_dim=64,
+    v_head_dim=128,
+    num_experts=160,
+    num_shared_experts=2,
+    top_k=6,
+    moe_d_ff=1536,
+    rope_theta=1e4,
+    grad_accum=4,   # 32-seq microbatches at train_4k: fits 16 GB/chip HBM
+))

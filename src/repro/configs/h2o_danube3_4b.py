@@ -1,0 +1,16 @@
+"""H2O-Danube3 4B — llama/mistral mix with sliding-window attention. [arXiv:2401.16818]"""
+from . import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="h2o-danube-3-4b",
+    family="dense",
+    source="arXiv:2401.16818",
+    num_layers=24,
+    d_model=3840,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=120,        # 3840 / 32
+    d_ff=10240,
+    vocab_size=32000,
+    sliding_window=4096,  # SWA => long_500k admissible with bounded cache
+))

@@ -1,0 +1,20 @@
+"""Qwen2-MoE A2.7B — 4 shared + 60 routed experts, top-4. [hf:Qwen/Qwen1.5-MoE-A2.7B]"""
+from . import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen2-moe-a2.7b",
+    family="moe",
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,           # routed expert intermediate (assignment sheet)
+    vocab_size=151936,
+    num_experts=60,
+    num_shared_experts=4,
+    top_k=4,
+    moe_d_ff=1408,
+    grad_accum=2,   # MoE dispatch tensors at train_4k: fits 16 GB/chip
+))

@@ -1,0 +1,21 @@
+"""Qwen2-VL 72B — VLM backbone, M-RoPE, GQA(64/8). Vision tower is a stub:
+``input_specs`` supplies precomputed patch embeddings. [arXiv:2409.12191]"""
+from . import ArchConfig, register
+
+CONFIG = register(ArchConfig(
+    name="qwen2-vl-72b",
+    family="vlm",
+    source="arXiv:2409.12191",
+    num_layers=80,
+    d_model=8192,
+    num_heads=64,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=29568,
+    vocab_size=152064,
+    mrope=True,
+    qkv_bias=True,
+    embed_input=True,    # patch/token embeddings provided by the stub frontend
+    rope_theta=1e6,
+    grad_accum=4,   # 64-seq microbatches at train_4k: fits 16 GB/chip HBM
+))

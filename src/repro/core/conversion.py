@@ -1,0 +1,45 @@
+"""Server-side output-to-model conversion (eq. 5, Algorithm 1 line 10).
+
+The server transfers the knowledge in the global average output vectors
+G_out into the global model by running K_s SGD-with-KD iterations over the
+collected (and for Mix2FLD, inversely mixed-up) seed samples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .losses import cross_entropy, kd_regularizer
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5, 6, 7))
+def output_to_model(model_apply, params, seeds_x, seeds_y, gout,
+                    iters: int, batch: int, eta: float, beta: float, key=None):
+    """K_s iterations of eq. (5). seeds_y can be int labels (FLD, Mix2FLD
+    hard labels) or soft label vectors (MixFLD).  KD target row is chosen
+    by the (arg-max for soft) ground-truth label.
+    Returns (params, losses (iters,))."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    hard = seeds_y.ndim == 1
+    n = seeds_x.shape[0]
+
+    def step(carry, k):
+        p = carry
+        idx = jax.random.randint(k, (batch,), 0, n)
+        xb, yb = seeds_x[idx], seeds_y[idx]
+
+        def loss_fn(p_):
+            logits = model_apply(p_, xb)
+            phi = cross_entropy(logits, yb)
+            row = yb if hard else jnp.argmax(yb, axis=-1)
+            psi = kd_regularizer(logits, gout[row])
+            return phi + beta * psi
+
+        l, g = jax.value_and_grad(loss_fn)(p)
+        p = jax.tree.map(lambda a, b: a - eta * b, p, g)
+        return p, l
+
+    params, losses = jax.lax.scan(step, params, jax.random.split(key, iters))
+    return params, losses

@@ -1,0 +1,37 @@
+"""Losses: cross-entropy phi (eq. 1) and the KD regularizer psi (eq. 3/5).
+
+The paper writes psi = sum_m G_m log F_m; as a *loss* to descend this is
+the cross-entropy between the global average output G and the local
+prediction F (we use the conventional -sum G log F; the sign in the letter
+is a typo — descending +sum G log F would push F *away* from G).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits, labels, num_classes=None):
+    """phi: mean CE. logits (..., C); labels int (...,) or one-hot/soft."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    if labels.dtype in (jnp.int32, jnp.int64):
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        return -jnp.mean(ll)
+    return -jnp.mean(jnp.sum(labels * logp, axis=-1))
+
+
+def kd_regularizer(logits, target_probs):
+    """psi: CE between teacher distribution and student prediction.
+    logits (..., C); target_probs (..., C) (rows of G_out)."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(target_probs * logp, axis=-1))
+
+
+def fd_loss(logits, labels, gout, beta: float):
+    """eq. (3)/(5): phi + beta * psi, with the KD target row selected by the
+    ground-truth label.  gout: (C, C) — row n is the global average output
+    vector for ground-truth label n."""
+    phi = cross_entropy(logits, labels)
+    target = gout[labels]  # (..., C)
+    psi = kd_regularizer(logits, target)
+    return phi + beta * psi, (phi, psi)

@@ -1,0 +1,120 @@
+"""Mixup (eq. 6) and inverse-Mixup (eq. 7-10, Proposition 1).
+
+Mixup at a device:        s_hat = lam * s_i + (1 - lam) * s_j
+Inverse-Mixup at server:  s_tilde_n = sum_d lam_hat[n, d] * s_hat_d
+where lam_hat = inv(circulant(lams)) (Prop. 1).  For N = 2 and the target
+hard label on the lam-class:  lam_hat = lam / (2*lam - 1)  (an
+*extrapolation* — the ratios are negative for lam < 0.5, which is exactly
+how unmixing works without ever reconstructing a raw sample).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Proposition 1
+# ---------------------------------------------------------------------------
+
+def circulant(lams):
+    """Rows are cyclic shifts of (lam_1 .. lam_N) per eq. (8)."""
+    lams = jnp.asarray(lams, jnp.float32)
+    n = lams.shape[0]
+    idx = (jnp.arange(n)[:, None] + jnp.arange(n)[None, :]) % n
+    return lams[idx]
+
+
+def inverse_mixup_ratios(lams):
+    """(N,) mixing ratios -> (N, N) inverse ratios; row n yields the sample
+    whose hard label is the n-th constituent's label."""
+    return jnp.linalg.inv(circulant(lams))
+
+
+# ---------------------------------------------------------------------------
+# Device-side Mixup (eq. 6)
+# ---------------------------------------------------------------------------
+
+def mixup_pairs(key, labels, n_pairs: int, num_classes: int):
+    """Sample ``n_pairs`` index pairs (i, j) with different labels.
+
+    Rejection-free: draw i uniformly, then draw j uniformly among samples of
+    a uniformly-drawn *other* class.  Returns (idx_i, idx_j): (n_pairs,).
+    """
+    n = labels.shape[0]
+    k1, k2, k3 = jax.random.split(key, 3)
+    idx_i = jax.random.randint(k1, (n_pairs,), 0, n)
+    li = labels[idx_i]
+    # draw a different class uniformly
+    shift = jax.random.randint(k2, (n_pairs,), 1, num_classes)
+    lj = (li + shift) % num_classes
+    # pick a uniform sample of class lj via gumbel-max over the class mask
+    g = jax.random.gumbel(k3, (n_pairs, n))
+    mask = labels[None, :] == lj[:, None]
+    idx_j = jnp.argmax(jnp.where(mask, g, -jnp.inf), axis=1)
+    return idx_i, idx_j
+
+
+def make_mixup_batch(x, y, idx_i, idx_j, lam: float, num_classes: int):
+    """eq. (6): mixed samples + soft labels + (minor, major) class metadata."""
+    xi, xj = x[idx_i], x[idx_j]
+    mixed = lam * xi + (1.0 - lam) * xj
+    yi = jax.nn.one_hot(y[idx_i], num_classes)
+    yj = jax.nn.one_hot(y[idx_j], num_classes)
+    soft = lam * yi + (1.0 - lam) * yj
+    return mixed, soft, (y[idx_i], y[idx_j])  # minor (lam) / major (1-lam)
+
+
+# ---------------------------------------------------------------------------
+# Server-side pairing + inverse-Mixup (eq. 7)
+# ---------------------------------------------------------------------------
+
+def pair_symmetric(minor, major, device_ids):
+    """Greedy pairing of mixed samples with *symmetric* labels from
+    *different* devices: (a, b) pairs with (b, a), d != d'.
+
+    Pure-numpy helper (host-side, runs once per training job on the
+    collected seed set).  Returns a list of (idx1, idx2).
+    """
+    import numpy as np
+
+    minor = np.asarray(minor)
+    major = np.asarray(major)
+    device_ids = np.asarray(device_ids)
+    by_pair: dict[tuple[int, int], list[int]] = {}
+    for idx, (a, b) in enumerate(zip(minor.tolist(), major.tolist())):
+        by_pair.setdefault((a, b), []).append(idx)
+    pairs = []
+    used = set()
+    for (a, b), lst in by_pair.items():
+        partners = by_pair.get((b, a), [])
+        for i in lst:
+            if i in used:
+                continue
+            for j in partners:
+                if j in used or j == i or device_ids[j] == device_ids[i]:
+                    continue
+                pairs.append((i, j))
+                used.add(i)
+                used.add(j)
+                break
+    return pairs
+
+
+def inverse_mixup(mixed_a, mixed_b, lam: float):
+    """eq. (7) for N=2 on a symmetric pair: returns the two inversely
+    mixed-up samples (hard label = lam-class of a, resp. of b)."""
+    lam_hat = lam / (2.0 * lam - 1.0)
+    s1 = lam_hat * mixed_a + (1.0 - lam_hat) * mixed_b
+    s2 = (1.0 - lam_hat) * mixed_a + lam_hat * mixed_b
+    return s1, s2
+
+
+def inverse_mixup_n(mixed_stack, lams):
+    """General-N inverse-Mixup: mixed_stack (N, ...) built with cyclic ratio
+    shifts (row d of circulant(lams)).  Returns (N, ...) hard-label samples
+    via Prop. 1."""
+    ratios = inverse_mixup_ratios(lams)  # (N, N)
+    flat = mixed_stack.reshape(mixed_stack.shape[0], -1)
+    out = ratios @ flat
+    return out.reshape(mixed_stack.shape)

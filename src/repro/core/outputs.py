@@ -1,0 +1,51 @@
+"""Per-label average output vectors (eq. 2) — the FD uplink payload — and
+the vocab-bucketed LM adaptation (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def label_averaged_outputs(probs, labels, num_classes: int):
+    """eq. (2): F_bar[n] = mean of prob vectors over samples with label n.
+
+    probs: (..., C) softmax outputs; labels: (...,) int.
+    Returns (F_bar (num_classes, C), counts (num_classes,)).
+    Rows with zero count are zeros.
+    """
+    flat_p = probs.reshape(-1, probs.shape[-1]).astype(jnp.float32)
+    flat_y = labels.reshape(-1)
+    onehot = jax.nn.one_hot(flat_y, num_classes, dtype=jnp.float32)
+    sums = onehot.T @ flat_p                      # (num_classes, C)
+    counts = jnp.sum(onehot, axis=0)              # (num_classes,)
+    return sums / jnp.maximum(counts[:, None], 1.0), counts
+
+
+def bucket_block(vocab: int, num_buckets: int) -> int:
+    return -(-vocab // num_buckets)  # ceil
+
+
+def bucketize_tokens(tokens, vocab: int, num_buckets: int):
+    """Contiguous-block vocab bucketing for the LM adaptation (reshape-
+    friendly, hence cheap and shard-friendly under pjit)."""
+    return tokens // bucket_block(vocab, num_buckets)
+
+
+def bucket_log_probs(logits, num_buckets: int):
+    """log P(bucket) from token logits. logits: (..., V).
+
+    Buckets are contiguous vocab blocks; log P(bucket) = logsumexp over
+    the block minus logsumexp over the vocab — a reshape + two reductions.
+    """
+    V = logits.shape[-1]
+    block = bucket_block(V, num_buckets)
+    pad = num_buckets * block - V
+    lf = logits.astype(jnp.float32)
+    if pad:
+        lf = jnp.pad(lf, [(0, 0)] * (lf.ndim - 1) + [(0, pad)],
+                     constant_values=-1e30)
+    lb = lf.reshape(*lf.shape[:-1], num_buckets, block)
+    blse = jax.nn.logsumexp(lb, axis=-1)
+    logz = jax.nn.logsumexp(blse, axis=-1, keepdims=True)
+    return blse - logz

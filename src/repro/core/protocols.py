@@ -1,0 +1,313 @@
+"""Protocol engines: FL, FD, FLD, MixFLD, Mix2FLD (Algorithm 1).
+
+The federated population is simulated exactly as in Sec. II: per-round
+local SGD at every device (vmapped), Rayleigh-faded uplink/downlink with
+SNR-gated success, weighted aggregation over the successful set, and — for
+the FLD family — the server-side output-to-model conversion of eq. (5).
+
+All device-side math is jitted and vmapped over the device axis; the round
+loop is host-side (it mixes channel sampling, convergence checks and
+tic-toc compute timing, as the paper does).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..channel import ChannelConfig, payload_bits, round_trip
+from .conversion import output_to_model
+from .losses import fd_loss
+from .mixup import inverse_mixup, make_mixup_batch, mixup_pairs, pair_symmetric
+from .outputs import label_averaged_outputs
+
+PROTOCOLS = ("fl", "fd", "fld", "mixfld", "mix2fld")
+
+
+@dataclasses.dataclass
+class FederatedConfig:
+    protocol: str = "mix2fld"
+    num_devices: int = 10          # |D|
+    num_classes: int = 10          # N_L
+    local_iters: int = 200         # K   (paper: 6400 single-sample SGD)
+    local_batch: int = 16          # samples per local SGD iteration
+    server_iters: int = 160        # K_s (paper: 3200)
+    server_batch: int = 16
+    eta: float = 0.01
+    beta: float = 0.01
+    eps: float = 0.05
+    lam: float = 0.1               # Mixup ratio
+    n_seed: int = 10               # N_S per device
+    n_inverse: int = 20            # N_I per device-equivalent (>= N_S)
+    max_rounds: int = 20
+    sample_bits: int = 6272        # b_s = 8 bit * 28 * 28
+    seed: int = 0
+
+
+class FederatedTrainer:
+    """Runs one protocol over a simulated device population.
+
+    model: an object with .init(key) and .apply(params, x) -> logits.
+    dev_x: (D, n_local, ...), dev_y: (D, n_local).
+    """
+
+    def __init__(self, model, fc: FederatedConfig,
+                 ch: Optional[ChannelConfig] = None):
+        assert fc.protocol in PROTOCOLS
+        self.model = model
+        self.fc = fc
+        self.ch = ch or ChannelConfig(num_devices=fc.num_devices)
+        self._build()
+
+    # ------------------------------------------------------------------
+    def _build(self):
+        fc = self.fc
+        apply_fn = self.model.apply
+        C = fc.num_classes
+
+        def local_train(params, x, y, key, gout, use_kd):
+            def step(carry, k):
+                p, out_sum, cnt = carry
+                idx = jax.random.randint(k, (fc.local_batch,), 0, x.shape[0])
+                xb, yb = x[idx], y[idx]
+
+                def loss_fn(p_):
+                    logits = apply_fn(p_, xb)
+                    beta = jnp.where(use_kd, fc.beta, 0.0)
+                    l, _ = fd_loss(logits, yb, gout, beta)
+                    return l, logits
+
+                (l, logits), g = jax.value_and_grad(loss_fn, has_aux=True)(p)
+                p = jax.tree.map(lambda a, b: a - fc.eta * b, p, g)
+                probs = jax.nn.softmax(logits, axis=-1)
+                oh = jax.nn.one_hot(yb, C)
+                out_sum = out_sum + oh.T @ probs
+                cnt = cnt + jnp.sum(oh, axis=0)
+                return (p, out_sum, cnt), l
+
+            init = (params, jnp.zeros((C, C)), jnp.zeros((C,)))
+            (params, out_sum, cnt), losses = jax.lax.scan(
+                step, init, jax.random.split(key, fc.local_iters))
+            favg = out_sum / jnp.maximum(cnt[:, None], 1.0)
+            return params, favg, cnt, jnp.mean(losses)
+
+        self._local_train = jax.jit(jax.vmap(
+            local_train, in_axes=(0, 0, 0, 0, None, None)))
+
+        def accuracy(params, x, y):
+            logits = apply_fn(params, x)
+            return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+        self._accuracy = jax.jit(accuracy)
+
+        def weighted_avg(stacked, weights):
+            wsum = jnp.maximum(jnp.sum(weights), 1e-9)
+            return jax.tree.map(
+                lambda s: jnp.tensordot(weights, s, axes=1) / wsum, stacked)
+
+        self._weighted_avg = jax.jit(weighted_avg)
+
+    # ------------------------------------------------------------------
+    def collect_seeds(self, dev_x, dev_y, key):
+        """Round-1 seed collection. Returns dict with uploaded samples,
+        labels (hard or soft), metadata, and the server-side (possibly
+        inversely mixed) training set."""
+        fc = self.fc
+        D = fc.num_devices
+        C = fc.num_classes
+        proto = fc.protocol
+        if proto in ("fl", "fd"):
+            return None
+
+        if proto == "fld":  # raw samples (privacy leak, the baseline)
+            xs, ys = [], []
+            for d in range(D):
+                k = jax.random.fold_in(key, d)
+                idx = jax.random.choice(k, dev_x.shape[1], (fc.n_seed,),
+                                        replace=False)
+                xs.append(dev_x[d, idx])
+                ys.append(dev_y[d, idx])
+            seeds_x = jnp.concatenate(xs)
+            seeds_y = jnp.concatenate(ys)
+            return {"train_x": seeds_x, "train_y": seeds_y,
+                    "uploaded": seeds_x, "raw_pairs": None}
+
+        # ---- Mixup at devices (eq. 6) ----
+        mixed, softs, minors, majors, dev_ids, raws = [], [], [], [], [], []
+        for d in range(D):
+            k = jax.random.fold_in(key, 1000 + d)
+            idx_i, idx_j = mixup_pairs(k, dev_y[d], fc.n_seed, C)
+            mx, soft, (mi, ma) = make_mixup_batch(
+                dev_x[d], dev_y[d], idx_i, idx_j, fc.lam, C)
+            mixed.append(mx)
+            softs.append(soft)
+            minors.append(mi)
+            majors.append(ma)
+            dev_ids.append(np.full(fc.n_seed, d))
+            raws.append(jnp.stack([dev_x[d, idx_i], dev_x[d, idx_j]], axis=1))
+        mixed = jnp.concatenate(mixed)        # (D*Ns, ...)
+        softs = jnp.concatenate(softs)
+        minors = jnp.concatenate(minors)
+        majors = jnp.concatenate(majors)
+        dev_ids = np.concatenate(dev_ids)
+        raws = jnp.concatenate(raws)          # (D*Ns, 2, ...)
+
+        if proto == "mixfld":
+            return {"train_x": mixed, "train_y": softs,
+                    "uploaded": mixed, "raw_pairs": raws}
+
+        # ---- Mix2FLD: inverse-Mixup across devices (eq. 7) ----
+        pairs = pair_symmetric(np.asarray(minors), np.asarray(majors),
+                               dev_ids)
+        want_total = fc.n_inverse * D
+        inv_x, inv_y = [], []
+        # each symmetric pair yields 2 hard-labelled samples; cycle pairings
+        # with jittered lam-order if more are requested (augmentation)
+        rep = 0
+        while len(inv_x) < want_total and pairs:
+            for (i, j) in pairs:
+                s1, s2 = inverse_mixup(mixed[i], mixed[j], fc.lam)
+                inv_x.extend([s1, s2])
+                inv_y.extend([int(minors[i]), int(minors[j])])
+                if len(inv_x) >= want_total:
+                    break
+            rep += 1
+            if rep > 8:
+                break
+        if not inv_x:  # degenerate pairing: fall back to soft-label training
+            return {"train_x": mixed, "train_y": softs,
+                    "uploaded": mixed, "raw_pairs": raws}
+        inv_x = jnp.stack(inv_x)
+        inv_y = jnp.asarray(inv_y, jnp.int32)
+        return {"train_x": inv_x, "train_y": inv_y,
+                "uploaded": mixed, "raw_pairs": raws,
+                "n_pairs": len(pairs)}
+
+    # ------------------------------------------------------------------
+    def run(self, dev_x, dev_y, test_x, test_y, log=None):
+        """Full protocol run. Returns history dict (per-round accuracy,
+        losses, latency, cumulative wall-clock convergence time)."""
+        fc, ch = self.fc, self.ch
+        D, C = fc.num_devices, fc.num_classes
+        proto = fc.protocol
+        key = jax.random.PRNGKey(fc.seed)
+        kinit, key = jax.random.split(key)
+
+        # all devices start from a common init (paper: same architecture)
+        g_params = self.model.init(kinit)
+        n_mod = sum(p.size for p in jax.tree.leaves(g_params))
+        dev_params = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (D,) + p.shape).copy(), g_params)
+        gout = jnp.full((C, C), 1.0 / C)
+        gout_prev = None
+        g_prev = None
+
+        seeds = None
+        history = {"acc": [], "round_latency_s": [], "compute_s": [],
+                   "cum_time_s": [], "loss": [], "uplink_ok": [],
+                   "converged_round": None, "protocol": proto}
+        cum_time = 0.0
+
+        dev_x = jnp.asarray(dev_x)
+        dev_y = jnp.asarray(dev_y)
+
+        for p in range(1, fc.max_rounds + 1):
+            t0 = time.perf_counter()
+            kr = jax.random.fold_in(key, p)
+            use_kd = proto != "fl" and p > 1  # KD once G_out exists
+
+            # ---- local updates (eq. 1 / 3) ----
+            dkeys = jax.random.split(jax.random.fold_in(kr, 1), D)
+            dev_params, favg, cnt, mloss = self._local_train(
+                dev_params, dev_x, dev_y, dkeys, gout,
+                jnp.asarray(use_kd))
+            jax.block_until_ready(favg)
+
+            # ---- seed collection (first round, FLD family) ----
+            if p == 1 and proto in ("fld", "mixfld", "mix2fld"):
+                seeds = self.collect_seeds(dev_x, dev_y,
+                                           jax.random.fold_in(kr, 2))
+
+            # ---- channel ----
+            first = p == 1
+            up_bits, dn_bits = payload_bits(
+                proto, n_mod=n_mod, n_labels=C, sample_bits=fc.sample_bits,
+                n_seed=fc.n_seed, first_round=first)
+            link = round_trip(jax.random.fold_in(kr, 3), ch, up_bits, dn_bits)
+            up_ok = np.asarray(link["up_ok"])
+            dn_ok = np.asarray(link["dn_ok"])
+            w = up_ok.astype(np.float32) * dev_x.shape[1]  # |S_d| weights
+
+            # ---- aggregation + (FLD) conversion ----
+            if proto == "fl":
+                if up_ok.any():
+                    g_params = self._weighted_avg(dev_params, jnp.asarray(w))
+            else:
+                if up_ok.any():
+                    # weight per-class rows by per-device counts (eq. 2
+                    # averaged over the successful device set)
+                    cw = jnp.asarray(up_ok[:, None]) * cnt  # (D, C)
+                    num = jnp.einsum("dc,dcm->cm", cw, favg)
+                    den = jnp.sum(cw, axis=0)               # (C,) per class
+                    gout = num / jnp.maximum(den[:, None], 1.0)
+                if proto != "fd":
+                    g_params, _ = output_to_model(
+                        self.model.apply, g_params, seeds["train_x"],
+                        seeds["train_y"], gout, fc.server_iters,
+                        fc.server_batch, fc.eta, fc.beta,
+                        jax.random.fold_in(kr, 4))
+
+            # ---- downlink ----
+            if proto == "fd":
+                pass  # devices already consume gout in their next round
+            else:
+                mask = jnp.asarray(dn_ok, jnp.float32)
+                mask = mask.reshape((D,) + (1,) * 0)
+                dev_params = jax.tree.map(
+                    lambda dp, gp: jnp.where(
+                        mask.reshape((D,) + (1,) * (dp.ndim - 1)) > 0,
+                        jnp.broadcast_to(gp, dp.shape), dp),
+                    dev_params, g_params)
+
+            compute_s = time.perf_counter() - t0
+            cum_time += compute_s + link["latency_s"]
+
+            # ---- evaluation of the reference device (device 0) ----
+            ref = jax.tree.map(lambda dp: dp[0], dev_params)
+            acc = float(self._accuracy(ref, test_x, test_y))
+            history["acc"].append(acc)
+            history["loss"].append(float(mloss.mean()))
+            history["round_latency_s"].append(link["latency_s"])
+            history["compute_s"].append(compute_s)
+            history["cum_time_s"].append(cum_time)
+            history["uplink_ok"].append(int(up_ok.sum()))
+            if log:
+                log(f"[{proto}] round {p}: acc={acc:.3f} "
+                    f"loss={history['loss'][-1]:.3f} up_ok={up_ok.sum()}/{D} "
+                    f"lat={link['latency_s']*1e3:.0f}ms")
+
+            # ---- convergence (relative change < eps) ----
+            if proto == "fl" or proto in ("fld", "mixfld", "mix2fld"):
+                flat = jnp.concatenate([jnp.ravel(x) for x in
+                                        jax.tree.leaves(g_params)])
+                if g_prev is not None:
+                    rel = float(jnp.linalg.norm(flat - g_prev) /
+                                jnp.maximum(jnp.linalg.norm(g_prev), 1e-12))
+                    if rel < fc.eps and history["converged_round"] is None:
+                        history["converged_round"] = p
+                g_prev = flat
+            else:
+                if gout_prev is not None:
+                    rel = float(jnp.linalg.norm(gout - gout_prev) /
+                                jnp.maximum(jnp.linalg.norm(gout_prev), 1e-12))
+                    if rel < fc.eps and history["converged_round"] is None:
+                        history["converged_round"] = p
+                gout_prev = gout
+
+        history["seeds"] = seeds
+        history["final_acc"] = history["acc"][-1]
+        return history

@@ -1,0 +1,4 @@
+"""Data substrate: synthetic corpora (offline container) + partitioners."""
+from .synthetic import synthetic_images, synthetic_tokens  # noqa: F401
+from .partition import partition_iid, partition_noniid  # noqa: F401
+from .pipeline import device_batches  # noqa: F401

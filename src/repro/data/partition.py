@@ -1,0 +1,61 @@
+"""IID / non-IID partitioning across federated devices (Sec. IV).
+
+IID: every label has the same number of samples per device.
+non-IID (paper's recipe): two randomly selected labels get 2 samples each,
+every other label gets 62 samples (|S_d| = 500, N_L = 10).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def partition_iid(x, y, num_devices: int, per_device: int, num_classes: int,
+                  seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x, y = np.asarray(x), np.asarray(y)
+    per_class = per_device // num_classes
+    dev_x, dev_y = [], []
+    by_class = [rng.permutation(np.flatnonzero(y == c)) for c in
+                range(num_classes)]
+    ptr = [0] * num_classes
+    for _ in range(num_devices):
+        idx = []
+        for c in range(num_classes):
+            take = by_class[c][ptr[c]:ptr[c] + per_class]
+            ptr[c] += per_class
+            if len(take) < per_class:  # class exhausted: resample
+                extra = rng.choice(np.flatnonzero(y == c),
+                                   per_class - len(take))
+                take = np.concatenate([take, extra])
+            idx.extend(take)
+        idx = np.array(idx)
+        rng.shuffle(idx)
+        dev_x.append(x[idx])
+        dev_y.append(y[idx])
+    return np.stack(dev_x), np.stack(dev_y)
+
+
+def partition_noniid(x, y, num_devices: int, num_classes: int = 10,
+                     rare_labels: int = 2, rare_count: int = 2,
+                     common_count: int = 62, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    x, y = np.asarray(x), np.asarray(y)
+    by_class = [list(rng.permutation(np.flatnonzero(y == c))) for c in
+                range(num_classes)]
+    dev_x, dev_y = [], []
+    for _ in range(num_devices):
+        rare = rng.choice(num_classes, rare_labels, replace=False)
+        idx = []
+        for c in range(num_classes):
+            want = rare_count if c in rare else common_count
+            take, by_class[c] = by_class[c][:want], by_class[c][want:]
+            if len(take) < want:  # recycle if exhausted
+                extra = rng.choice(np.flatnonzero(y == c),
+                                   want - len(take)).tolist()
+                take = list(take) + extra
+            idx.extend(take)
+        idx = np.array(idx)
+        rng.shuffle(idx)
+        dev_x.append(x[idx])
+        dev_y.append(y[idx])
+    return np.stack(dev_x), np.stack(dev_y)

@@ -1,0 +1,20 @@
+"""Batching pipeline for the federated runtime: per-device index sampling
+done with JAX PRNG so local training is fully traceable/vmappable."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def device_batches(key, n_local: int, iters: int, batch_size: int):
+    """(iters, batch_size) random sample indices into a device's dataset."""
+    return jax.random.randint(key, (iters, batch_size), 0, n_local)
+
+
+def global_batches(key, x, y, batch_size: int, steps: int):
+    """Host-side iterator of random batches from a flat dataset."""
+    n = x.shape[0]
+    for s in range(steps):
+        k = jax.random.fold_in(key, s)
+        idx = jax.random.randint(k, (batch_size,), 0, n)
+        yield x[idx], y[idx]

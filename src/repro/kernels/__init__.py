@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the compute hot spots, each with a pure-jnp
+oracle in ref.py and a jit wrapper in ops.py.
+
+  mixup_kernel    — two-way Mixup / inverse-Mixup batch transform (eq. 6/7)
+  distill_loss    — fused softmax CE + KD regularizer (eq. 3/5)
+  flash_attention — block-tiled online-softmax attention (prefill path)
+  ssd_scan        — Mamba2 SSD chunked scan (state-space duality)
+
+On CPU (this container) kernels run with interpret=True; on TPU the same
+pallas_call lowers to Mosaic.
+"""

@@ -1,0 +1,58 @@
+"""Two-way Mixup batch transform kernel (eq. 6 / 7).
+
+out[i] = lam_a[i] * a[i] + lam_b[i] * b[i]
+
+covers both device-side Mixup (lam, 1-lam) and server-side inverse-Mixup
+(lam_hat, 1-lam_hat, which are extrapolating ratios).  Tiled (rows x
+features) with both operands resident in VMEM; rows is the batch of
+(possibly flattened) samples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_BLOCK = 256
+COL_BLOCK = 512
+
+
+def _mixup_kernel(a_ref, b_ref, la_ref, lb_ref, o_ref):
+    a = a_ref[...]
+    b = b_ref[...]
+    la = la_ref[...]  # (rows, 1)
+    lb = lb_ref[...]
+    o_ref[...] = (la * a + lb * b).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def mixup_pallas(a, b, lam_a, lam_b, *, interpret: bool = True):
+    """a, b: (N, F); lam_a, lam_b: (N,). Returns (N, F)."""
+    n, f = a.shape
+    rb = min(ROW_BLOCK, n)
+    cb = min(COL_BLOCK, f)
+    if n % rb or f % cb:  # pad to block multiples
+        np_, fp = -(-n // rb) * rb, -(-f // cb) * cb
+        a = jnp.pad(a, ((0, np_ - n), (0, fp - f)))
+        b = jnp.pad(b, ((0, np_ - n), (0, fp - f)))
+        lam_a = jnp.pad(lam_a, (0, np_ - n))
+        lam_b = jnp.pad(lam_b, (0, np_ - n))
+    la = lam_a[:, None].astype(jnp.float32)
+    lb = lam_b[:, None].astype(jnp.float32)
+    grid = (a.shape[0] // rb, a.shape[1] // cb)
+    out = pl.pallas_call(
+        _mixup_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+            pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+            pl.BlockSpec((rb, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((rb, 1), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((rb, cb), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, b, la, lb)
+    return out[:n, :f]

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for every kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models.mamba2 import ssd_chunked
+
+
+def mixup_ref(a, b, lam_a, lam_b):
+    return (lam_a[:, None].astype(jnp.float32) * a +
+            lam_b[:, None].astype(jnp.float32) * b).astype(a.dtype)
+
+
+def distill_loss_ref(logits, labels, g_rows, beta):
+    z = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(z, axis=-1)
+    zy = jnp.take_along_axis(z, labels[:, None], axis=-1)[:, 0]
+    gz = jnp.sum(g_rows.astype(jnp.float32) * z, axis=-1)
+    return (lse - zy) + beta * (lse - gz)
+
+
+def attention_ref(q, k, v, window=None):
+    """Causal attention, (BH, S, d) layout."""
+    s = jnp.einsum("bqd,bkd->bqk", q, k,
+                   preferred_element_type=jnp.float32) / (q.shape[-1] ** 0.5)
+    S = q.shape[1]
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p.astype(v.dtype), v).astype(q.dtype)
+
+
+def ssd_ref(xdt, Bh, Ch, dA):
+    """Exact sequential SSD recurrence. xdt: (BH,S,P); Bh/Ch: (BH,S,N);
+    dA: (BH,S). Matches ssd_scan_pallas semantics."""
+    bh, s, p = xdt.shape
+    n = Bh.shape[-1]
+
+    def per_bh(x, B, C, da):
+        def step(state, inp):
+            xt, bt, ct, at = inp
+            state = jnp.exp(at) * state + jnp.outer(bt, xt)  # (N, P)
+            return state, ct @ state
+
+        _, ys = jax.lax.scan(step, jnp.zeros((n, p), jnp.float32),
+                             (x.astype(jnp.float32), B.astype(jnp.float32),
+                              C.astype(jnp.float32), da.astype(jnp.float32)))
+        return ys
+
+    return jax.vmap(per_bh)(xdt, Bh, Ch, dA).astype(xdt.dtype)
+
+
+# re-export: the model's chunked SSD is itself validated against ssd_ref
+ssd_chunked_ref = ssd_chunked

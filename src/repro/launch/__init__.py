@@ -1,0 +1,2 @@
+"""Distributed runtime: production meshes, sharding policy, step builders,
+multi-pod dry-run driver."""

@@ -1,0 +1,353 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes, prove it fits, and extract roofline terms.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+  PYTHONPATH=src python -m repro.launch.dryrun --arch ... --sync-steps
+
+Results are written incrementally to benchmarks/results/dryrun/*.json.
+"""
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config, input_specs, list_archs
+from repro.launch import sharding as shp
+from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+from repro.launch.steps import (make_decode_step, make_fd_sync_step,
+                                make_fd_sync_step_shardmap,
+                                make_fl_sync_step, make_prefill_step,
+                                make_train_step)
+from repro.models.shardhooks import set_activation_sharding
+from repro.models.transformer import init_params, set_moe_constraint
+from repro.roofline.analysis import (analytic_flops,
+                                     collective_bytes_from_hlo,
+                                     dominant_term, roofline_terms)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+
+def param_specs(cfg):
+    """Parameter ShapeDtypeStructs without allocating anything."""
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def count_from_specs(tree) -> int:
+    return sum(math.prod(l.shape) for l in jax.tree.leaves(tree))
+
+
+def active_count_from_specs(cfg, tree) -> int:
+    total = count_from_specs(tree)
+    if not cfg.is_moe:
+        return total
+    moe = tree["blocks"]["moe"]
+    routed = sum(math.prod(moe[w].shape) for w in ("w1", "w2", "w3"))
+    return int(total - routed + routed * cfg.top_k / cfg.num_experts)
+
+
+def model_flops(cfg, p_tree, shape_name: str) -> float:
+    """6*N_active*D for training, 2*N_active*D for inference tokens."""
+    n = active_count_from_specs(cfg, p_tree)
+    s = INPUT_SHAPES[shape_name]
+    tokens = s.global_batch * (s.seq_len if s.kind != "decode" else 1)
+    mult = 6 if s.kind == "train" else 2
+    return float(mult) * n * tokens
+
+
+def _shardings(mesh, pspec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build(cfg, shape_name: str, mesh):
+    """Returns (step_fn, arg_specs tuple, in_shardings tuple, info)."""
+    specs = input_specs(cfg, shape_name)
+    p_specs = param_specs(cfg)
+    kind = INPUT_SHAPES[shape_name].kind
+    decode_tp = kind == "decode" and shp.use_decode_tp(cfg, mesh, p_specs)
+    p_shard = _shardings(mesh, shp.param_pspecs(cfg, mesh, p_specs,
+                                                decode_tp=decode_tp))
+    b_shard = _shardings(mesh, shp.batch_pspecs(cfg, mesh, specs))
+    set_moe_constraint(shp.logical_constraints(cfg, mesh))
+    set_activation_sharding(shp.activation_constrainer(cfg, mesh))
+    if kind == "train":
+        fn = make_train_step(cfg)
+    elif kind == "prefill":
+        fn = make_prefill_step(cfg, INPUT_SHAPES[shape_name].seq_len)
+    else:
+        fn = make_decode_step(cfg)
+    return fn, (p_specs, specs), (p_shard, b_shard), {"decode_tp": decode_tp}
+
+
+def dry_run_combo(arch: str, shape_name: str, multi_pod: bool,
+                  save: bool = True, verbose: bool = True,
+                  donate: bool = False) -> dict:
+    cfg = get_config(arch)
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    if donate:
+        mesh_name += "+donate"  # perf variant, kept apart from baselines
+    record = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not cfg.supports_shape(shape_name):
+        record["status"] = "skipped"
+        record["reason"] = ("long_500k needs sub-quadratic attention; "
+                            f"{arch} is dense full-attention (DESIGN.md §4)")
+        _save(record, save)
+        return record
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = math.prod(mesh.devices.shape)
+    t0 = time.time()
+    try:
+        fn, arg_specs, in_shardings, binfo = build(cfg, shape_name, mesh)
+        kind = INPUT_SHAPES[shape_name].kind
+        # --donate: decode donates the cache (in-place update halves
+        # cache memory); kept opt-in so baselines stay comparable
+        dn = (1,) if donate and kind == "decode" else ()
+        out_shardings = None
+        if dn:  # donation requires matching output shardings for the cache
+            dp = shp.batch_axes(mesh)
+            dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+            tok_shard = NamedSharding(mesh, P(dp))
+            out_shardings = (tok_shard, in_shardings[1]["cache"])
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=in_shardings,
+                              out_shardings=out_shardings,
+                              donate_argnums=dn).lower(*arg_specs)
+            compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        # loop-aware; cross-pod classification only meaningful multi-pod
+        coll = collective_bytes_from_hlo(
+            hlo, pod_size=256 if multi_pod else 0)
+        flops_hlo = float(cost.get("flops", 0.0))
+        bytes_hlo = float(cost.get("bytes accessed", 0.0))
+        arg_b = int(mem.argument_size_in_bytes)
+        out_b = int(mem.output_size_in_bytes)
+        tmp_b = int(mem.temp_size_in_bytes)
+
+        # analytic FLOPs (cost_analysis counts scan bodies once) and an
+        # HBM-traffic model from the buffer assignment: args + outputs
+        # read/written once, temporaries written + read back.
+        # CPU lowering converts every bf16 dot operand (weights, caches) to
+        # f32, materialising 2x-bf16-bytes buffers that do NOT exist on
+        # TPU (the MXU consumes bf16 natively).  Estimate that artifact
+        # from the per-device bf16 argument bytes so records carry a
+        # native-TPU peak estimate alongside the measured CPU peak.
+        axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        bf16_args_per_chip = 0
+        for l, sh in zip(jax.tree.leaves(arg_specs),
+                         jax.tree.leaves(in_shardings)):
+            if jnp.dtype(l.dtype) != jnp.bfloat16:
+                continue
+            div = 1
+            for ax in jax.tree.leaves(tuple(sh.spec)):
+                div *= axis_sizes.get(ax, 1)
+            bf16_args_per_chip += math.prod(l.shape) * 2 // max(div, 1)
+        cpu_artifact = 2 * bf16_args_per_chip
+        n_active = active_count_from_specs(cfg, arg_specs[0])
+        af = analytic_flops(get_config(arch), INPUT_SHAPES[shape_name],
+                            n_active)
+        traffic = arg_b + out_b + 2 * tmp_b
+        terms = roofline_terms(af / chips, traffic, coll["total"], chips,
+                               PEAK_FLOPS_BF16, HBM_BW, ICI_BW)
+        mf = model_flops(cfg, arg_specs[0], shape_name)
+        record.update({
+            "status": "ok",
+            "chips": chips,
+            "compile_s": round(time.time() - t0, 1),
+            "hlo_flops_per_device_loop_once": flops_hlo,
+            "hlo_bytes_per_device_loop_once": bytes_hlo,
+            "analytic_flops_total": af,
+            "hbm_traffic_model_bytes": traffic,
+            "collective_bytes_per_device": coll["total"],
+            "cross_pod_bytes_per_device": coll["cross_pod"],
+            "collective_breakdown": {k: v for k, v in coll.items()
+                                     if k not in ("total", "counts")},
+            "collective_counts": coll["counts"],
+            "memory": {
+                "argument_bytes": arg_b,
+                "output_bytes": out_b,
+                "temp_bytes": tmp_b,
+                "peak_bytes": arg_b + tmp_b,
+                "cpu_f32_artifact_bytes": cpu_artifact,
+                "native_peak_estimate": max(arg_b + tmp_b - cpu_artifact,
+                                            arg_b),
+            },
+            "decode_tp": binfo["decode_tp"],
+            "roofline": terms,
+            "dominant": dominant_term(terms),
+            "model_flops_total": mf,
+            # fraction of compiled compute that is "useful" model math
+            "model_flops_ratio": mf / af if af else None,
+        })
+        if verbose:
+            print(f"[ok] {arch} {shape_name} {mesh_name}: "
+                  f"compile={record['compile_s']}s "
+                  f"mem/device={record['memory']['peak_bytes']/2**30:.2f}GiB "
+                  f"dom={record['dominant']}")
+    except Exception as e:  # noqa: BLE001 — record the failure mode
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-2000:]
+        if verbose:
+            print(f"[ERROR] {arch} {shape_name} {mesh_name}: {record['error']}")
+    _save(record, save)
+    return record
+
+
+def dry_run_sync_steps(arch: str, save: bool = True) -> list[dict]:
+    """Lower the multi-pod federated steps: FL full-param sync vs the
+    paper's FD sync (tiny logit uplink + server conversion)."""
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=True)
+    n_pods = 2
+    chips = math.prod(mesh.devices.shape)
+    p_specs = param_specs(cfg)
+    pod_p_specs = jax.tree.map(
+        lambda l: jax.ShapeDtypeStruct((n_pods,) + l.shape, l.dtype), p_specs)
+    pod_pspec = jax.tree.map(lambda s: P(*(("pod",) + tuple(s))),
+                             shp.param_pspecs(cfg, mesh, p_specs),
+                             is_leaf=lambda x: isinstance(x, P))
+    g_shard = _shardings(mesh, shp.param_pspecs(cfg, mesh, p_specs))
+    pod_shard = _shardings(mesh, pod_pspec)
+    set_moe_constraint(shp.logical_constraints(cfg, mesh))
+
+    nb = cfg.fd_buckets
+    favg_spec = jax.ShapeDtypeStruct((n_pods, nb, nb), jnp.float32)
+    favg_shard = NamedSharding(mesh, P("pod", None, None))
+    seed_b, seed_s = 32, 512
+    if cfg.embed_input:
+        seed_batch = {"embeds": jax.ShapeDtypeStruct(
+            (seed_b, seed_s, cfg.d_model), jnp.dtype(cfg.param_dtype)),
+            "labels": jax.ShapeDtypeStruct((seed_b, seed_s), jnp.int32)}
+    else:
+        seed_batch = {"tokens": jax.ShapeDtypeStruct((seed_b, seed_s),
+                                                     jnp.int32)}
+    if cfg.cross_attention:
+        seed_batch["enc_out"] = jax.ShapeDtypeStruct(
+            (seed_b, cfg.encoder_seq, cfg.d_model),
+            jnp.dtype(cfg.param_dtype))
+    set_activation_sharding(shp.activation_constrainer(cfg, mesh))
+    seed_shard = _shardings(mesh, {
+        k: (P(("pod", "data"), None) if k in ("tokens", "labels")
+            else P(("pod", "data"), None, None))
+        for k in seed_batch})
+
+    records = []
+    for name, fn, args, in_sh in (
+        ("fl_sync", make_fl_sync_step(cfg, n_pods), (pod_p_specs,),
+         (pod_shard,)),
+        ("fd_sync", make_fd_sync_step(cfg, n_pods),
+         (pod_p_specs, favg_spec, seed_batch),
+         (pod_shard, favg_shard, seed_shard)),
+    ):
+        # fd_sync's conversion is vmapped over "pod" (pod-local server
+        # replicas): its activations must NOT claim the pod axis — that
+        # forced cross-pod resharding against the pod-stacked params.
+        # (A shard_map-over-pod variant exists — steps.make_fd_sync_step_
+        # shardmap — but the partial-manual + GSPMD-auto combination hits
+        # an XLA SPMD partitioner CHECK failure in this build; recorded.)
+        set_activation_sharding(shp.activation_constrainer(
+            cfg, mesh, exclude_pod=(name == "fd_sync")))
+        set_moe_constraint(shp.logical_constraints(
+            cfg, mesh, exclude_pod=(name == "fd_sync")))
+        rec = {"arch": arch, "shape": name, "mesh": "2x16x16"}
+        t0 = time.time()
+        try:
+            with mesh:
+                lowered = jax.jit(fn, in_shardings=in_sh).lower(*args)
+                compiled = lowered.compile()
+            coll = collective_bytes_from_hlo(compiled.as_text(),
+                                             pod_size=256)
+            cost = compiled.cost_analysis()
+            flops = float(cost.get("flops", 0.0))
+            bytes_acc = float(cost.get("bytes accessed", 0.0))
+            terms = roofline_terms(flops, bytes_acc, coll["total"], chips,
+                                   PEAK_FLOPS_BF16, HBM_BW, ICI_BW)
+            rec.update({
+                "status": "ok", "chips": chips,
+                "compile_s": round(time.time() - t0, 1),
+                "hlo_flops_per_device": flops,
+                "hlo_bytes_per_device": bytes_acc,
+                "collective_bytes_per_device": coll["total"],
+                "cross_pod_bytes_per_device": coll["cross_pod"],
+                "collective_breakdown": {k: v for k, v in coll.items()
+                                         if k not in ("total", "counts")},
+                "roofline": terms, "dominant": dominant_term(terms),
+            })
+            print(f"[ok] {arch} {name}: "
+                  f"coll/device={coll['total']/2**20:.2f}MiB "
+                  f"cross-pod={coll['cross_pod']/2**20:.3f}MiB "
+                  f"dom={rec['dominant']}")
+        except Exception as e:  # noqa: BLE001
+            rec["status"] = "error"
+            rec["error"] = f"{type(e).__name__}: {e}"
+            rec["traceback"] = traceback.format_exc()[-2000:]
+            print(f"[ERROR] {arch} {name}: {rec['error']}")
+        _save(rec, save)
+        records.append(rec)
+    return records
+
+
+def _save(record: dict, save: bool):
+    if not save:
+        return
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    fn = f"{record['arch']}_{record['shape']}_{record['mesh']}.json"
+    with open(os.path.join(RESULTS_DIR, fn), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all (arch x shape) for the selected mesh")
+    ap.add_argument("--sync-steps", action="store_true",
+                    help="lower the multi-pod FL/FD sync steps")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--donate", action="store_true",
+                    help="donate decode caches (perf variant)")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs(assigned_only=True)
+    shapes = [args.shape] if args.shape else list(INPUT_SHAPES)
+
+    if args.sync_steps:
+        for a in archs:
+            dry_run_sync_steps(a)
+        return
+
+    n_ok = n_err = 0
+    for a in archs:
+        for s in shapes:
+            mesh_name = "2x16x16" if args.multi_pod else "16x16"
+            out = os.path.join(RESULTS_DIR, f"{a}_{s}_{mesh_name}.json")
+            if args.skip_existing and os.path.exists(out):
+                with open(out) as f:
+                    if json.load(f).get("status") in ("ok", "skipped"):
+                        continue
+            rec = dry_run_combo(a, s, args.multi_pod, donate=args.donate)
+            n_ok += rec["status"] in ("ok", "skipped")
+            n_err += rec["status"] == "error"
+    print(f"done: {n_ok} ok/skipped, {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

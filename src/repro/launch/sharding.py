@@ -1,0 +1,274 @@
+"""Per-architecture sharding policy (TP + FSDP + EP).
+
+Conventions (axes: optional "pod", "data", "model"):
+  * big weight matrices are 2-D sharded: input-ish dim over "data" (FSDP),
+    output-ish/head/expert dim over "model" (TP);
+  * experts shard over "model" when divisible, else the expert FFN dim;
+  * batch shards over ("pod", "data");
+  * decode KV caches: batch over ("pod","data"), *sequence over "model"*
+    (sequence-parallel decode attention: scores reduce over the sharded
+    key axis, emitting one tiny all-reduce per layer instead of gathering
+    the multi-GB cache);
+  * SSM caches: heads over "model".
+
+Weight rules are path-based over the param pytree, so they apply to every
+family without per-arch tables.  GSPMD tolerates non-divisible dims by
+padding; rules below avoid any padding worse than 2x.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def _axis_size(mesh, name: str) -> int:
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def batch_axes(mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+# ---------------------------------------------------------------------------
+# Parameter rules
+# ---------------------------------------------------------------------------
+
+def _rule_for(cfg, mesh, path: str, ndim: int, shape):
+    """Returns a PartitionSpec for a (non-stacked) parameter."""
+    tp = _axis_size(mesh, "model")
+    last = path.split("/")[-1]
+
+    # --- norms / scalars / small vectors: replicate
+    if last in ("scale", "bias", "A_log", "D", "dt_bias", "norm", "q_norm",
+                "kv_norm", "q_scale", "k_scale", "bq", "bk", "bv"):
+        return P()
+    if last == "pos_embed":
+        return P(None, "data")
+    if last == "embed":  # (V, D)
+        return P("model", "data")
+    if last == "unembed":  # (D, V)
+        return P("data", "model")
+    if last == "router":  # (D, E) — tiny, replicate
+        return P()
+    if last == "conv_w":  # (k, Cd)
+        return P(None, "model")
+    if last == "conv_b":
+        return P("model")
+
+    # --- MoE experts (E, D, F) / (E, F, D)
+    if "moe" in path and last in ("w1", "w2", "w3") and ndim == 3:
+        E = shape[0]
+        if E % tp == 0:  # expert parallelism
+            return P("model", "data", None)
+        # TP inside experts: shard the FFN dim
+        return (P(None, "data", "model") if last in ("w1", "w3")
+                else P(None, "model", "data"))
+
+    # --- dense projections (2-D): column-parallel up, row-parallel down
+    if last in ("w1", "w3", "wq", "wk", "wv", "xwq", "xwk", "xwv", "wq_b",
+                "wk_b", "wv_b", "in_proj"):
+        return P("data", "model")
+    if last in ("w2", "wo", "xwo", "out_proj"):
+        return P("model", "data")
+    if last in ("wq_a", "wkv_a"):  # (D, small-rank)
+        return P("data", None)
+
+    # --- CNN (paper model, never sharded in production runs)
+    if last in ("w", "b"):
+        return P()
+    raise ValueError(f"no sharding rule for {path} (ndim={ndim})")
+
+
+def sanitize(mesh, spec: P, shape) -> P:
+    """Drop sharding on any dim the mesh axes don't divide (pjit in/out
+    shardings require exact divisibility, unlike internal constraints)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    out = []
+    spec_t = tuple(spec) + (None,) * (len(shape) - len(tuple(spec)))
+    for dim, ax in zip(shape, spec_t):
+        if ax is None:
+            out.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        prod = 1
+        for a in axes:
+            prod *= sizes[a]
+        out.append(ax if dim % prod == 0 else None)
+    return P(*out)
+
+
+DECODE_TP_BUDGET = 10 * 2**30  # per-chip weight budget for TP-only decode
+
+
+def param_pspecs(cfg, mesh, params_tree, decode_tp: bool = False):
+    """PartitionSpec pytree for a param tree.  Leaves under ``blocks``
+    (and zamba2's (G, A, ...) stacking) get leading None axes for the
+    scan-stacked layer dims.
+
+    ``decode_tp``: drop the FSDP ("data") axis from weight shardings —
+    decode is weight-memory-bound with no batch amortisation, so per-layer
+    FSDP gathers cost ~15x more than reading TP-resident weights from HBM
+    (EXPERIMENTS.md §Perf H2).  Use ``use_decode_tp`` to gate by budget.
+    """
+
+    def visit(path, leaf):
+        keys = [str(getattr(k, "key", getattr(k, "idx", k))) for k in path]
+        spath = "/".join(keys)
+        stacked = 0
+        if "blocks" in keys:
+            stacked = 2 if cfg.family == "hybrid" else 1
+        spec = _rule_for(cfg, mesh, spath, leaf.ndim - stacked,
+                         leaf.shape[stacked:])
+        if decode_tp:
+            spec = P(*(None if a == "data" else a for a in tuple(spec)))
+        full = P(*((None,) * stacked + tuple(spec)))
+        return sanitize(mesh, full, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(visit, params_tree)
+
+
+def use_decode_tp(cfg, mesh, params_tree) -> bool:
+    """TP-only decode weights iff they fit the per-chip budget."""
+    import math
+    tp = _axis_size(mesh, "model")
+    total = sum(math.prod(l.shape) * jax.numpy.dtype(l.dtype).itemsize
+                for l in jax.tree.leaves(params_tree))
+    return total / tp <= DECODE_TP_BUDGET
+
+
+# ---------------------------------------------------------------------------
+# Batch / cache rules
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(cfg, mesh, specs: dict):
+    """PartitionSpecs for an input_specs() dict (train/prefill/decode),
+    sanitized against the actual shapes."""
+    dp = batch_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            raw = cache_pspecs(cfg, mesh)
+            out[k] = jax.tree.map(
+                lambda s, l: sanitize(mesh, s, l.shape), raw, v,
+                is_leaf=lambda x: isinstance(x, P))
+        elif k == "gout":
+            out[k] = P()
+        elif k in ("tokens", "labels"):
+            out[k] = sanitize(mesh, P(dp, None), v.shape)
+        elif k in ("embeds", "enc_out"):
+            out[k] = sanitize(mesh, P(dp, None, None), v.shape)
+        else:
+            raise ValueError(k)
+    return out
+
+
+def cache_pspecs(cfg, mesh):
+    dp = batch_axes(mesh)
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    out: dict = {"pos": P()}
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        if cfg.attn_type == "mla":
+            lay = {"ckv": P(None, dp, "model", None),
+                   "kr": P(None, dp, "model", None)}
+        else:
+            lay = {"k": P(None, dp, "model", None, None),
+                   "v": P(None, dp, "model", None, None)}
+            if cfg.kv_quant:
+                lay["k_scale"] = P(None, dp, "model", None)
+                lay["v_scale"] = P(None, dp, "model", None)
+        if cfg.family == "audio":
+            lay["xk"] = P(None, dp, None, "model", None)
+            lay["xv"] = P(None, dp, None, "model", None)
+        out["layers"] = lay
+    elif cfg.family == "ssm":
+        out["layers"] = {"state": P(None, dp, "model", None, None),
+                         "conv": P(None, dp, None, "model")}
+    elif cfg.family == "hybrid":
+        out["mamba"] = {"state": P(None, None, dp, "model", None, None),
+                        "conv": P(None, None, dp, None, "model")}
+        out["attn"] = {"k": P(None, dp, "model", None, None),
+                       "v": P(None, dp, "model", None, None)}
+    return out
+
+
+def logical_constraints(cfg, mesh, exclude_pod: bool = False):
+    """Returns a constrain(x, kind) fn used inside the model (MoE dispatch)."""
+    dp = batch_axes(mesh)
+    if exclude_pod:
+        dp = tuple(a for a in dp if a != "pod")
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp = _axis_size(mesh, "model")
+    ep = cfg.num_experts % tp == 0 if cfg.is_moe else False
+
+    def constrain_moe(x, kind="dispatched"):
+        if kind == "combine":  # (G, Sg, E, C): tokens stay on data
+            spec = P(dp, None, None, None)
+        else:  # (G, E, C, D) dispatched tokens: expert-parallel
+            spec = (P(dp, "model", None, None) if ep
+                    else P(dp, None, None, "model"))
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, spec))
+
+    return constrain_moe
+
+
+def activation_constrainer(cfg, mesh, exclude_pod: bool = False):
+    """constrain(x, kind) for repro.models.shardhooks — pins the batch axis
+    (and head/state axes where divisible) at propagation-fragile points.
+
+    ``exclude_pod``: for bodies shard_mapped over "pod" (pod axis is
+    Manual there; constraints may only mention Auto axes)."""
+    dp = batch_axes(mesh)
+    if exclude_pod:
+        dp = tuple(a for a in dp if a != "pod")
+    dp = dp if len(dp) > 1 else (dp[0] if dp else None)
+    tp = _axis_size(mesh, "model")
+
+    def head_axis(n):
+        return "model" if (n and n % tp == 0) else None
+
+    h_ax = head_axis(cfg.num_heads)
+    kv_ax = head_axis(cfg.num_kv_heads)
+    ssm_ax = head_axis(cfg.ssm_heads)
+
+    specs = {
+        "heads": P(dp, None, h_ax, None),
+        "kv": P(dp, None, kv_ax, None),
+        "logits": P(dp, None, "model"),
+        "ssm_inner": P(dp, None, ssm_ax, None),
+        "ssm_state": P(dp, ssm_ax, None, None),
+    }
+
+    def constrain(x, kind):
+        if kind == "scores_seq":
+            # (B, Hkv, G, T, S): decode attention scores, key axis sharded
+            if x.ndim != 5 or x.shape[-1] % tp or x.shape[-2] != 1:
+                return x  # only the cached-decode path
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, P(dp, None, None, None, "model")))
+        if kind == "resid":
+            if x.ndim != 3:
+                return x
+            if x.shape[1] == 1:
+                # decode: replicate the (tiny) activations so the matmuls
+                # contract against *in-place* 2D-sharded weights (partial
+                # sums over "data") instead of FSDP-gathering every layer's
+                # weights for 1 token (measured: -17.9 GB/step of gathers
+                # on qwen2-vl decode_32k; EXPERIMENTS.md §Perf H2)
+                spec = P(None, None, None)
+            else:
+                # sequence-parallel residual stream: the remat-saved
+                # per-layer carries shard over "model" too (norms are
+                # token-local, so this costs one all-gather at each
+                # attention/FFN entry but divides saved-activation memory
+                # by the TP degree)
+                seq_ax = "model" if x.shape[1] % tp == 0 else None
+                spec = P(dp, seq_ax, None)
+        else:
+            spec = specs.get(kind)
+            if spec is None or x.ndim != len(spec):
+                return x
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain

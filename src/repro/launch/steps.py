@@ -1,0 +1,295 @@
+"""Step builders: local train step (eq. 3 at LM scale), prefill, decode,
+and the multi-pod federated sync steps (FL baseline vs the paper's FLD).
+
+Every step is a pure function suitable for ``jax.jit(...).lower()`` with
+ShapeDtypeStruct inputs — the dry-run compiles these exact programs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..core.losses import kd_regularizer
+from ..core.outputs import bucket_log_probs, bucketize_tokens
+from ..models import kvcache
+from ..models.transformer import forward, unembed_matrix
+
+
+# ---------------------------------------------------------------------------
+# Loss: next-token CE + Mix2FLD device-side KD regularizer (eq. 3 adapted)
+# ---------------------------------------------------------------------------
+
+LOSS_CHUNK = 512  # query positions per loss chunk
+# gradient-accumulation dtype: f32 is the safe default; bf16 halves the
+# backward collective bytes (EXPERIMENTS.md §Perf H1) at an SGD-acceptable
+# precision cost for small accum counts
+_ACCUM_DTYPE = [jnp.float32]
+
+
+def set_accum_dtype(dt):
+    _ACCUM_DTYPE[0] = dt
+
+
+def _chunk_losses(cfg, W, gout, h, tgt, msk):
+    """CE + KD partial sums for one chunk. h: (B,C,D); tgt/msk: (B,C)."""
+    lg = (h @ W).astype(jnp.float32)                     # (B,C,V)
+    logz = jax.nn.logsumexp(lg, axis=-1)
+    tl = jnp.take_along_axis(lg, tgt[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((logz - tl) * msk)
+    kd = jnp.zeros((), jnp.float32)
+    if gout is not None:
+        nb = cfg.fd_buckets
+        blp = bucket_log_probs(lg, nb)
+        tb = bucketize_tokens(tgt, cfg.vocab_size, nb)
+        kd = -jnp.sum(jnp.sum(gout[tb] * blp, axis=-1) * msk)
+    return ce, kd
+
+
+def _lm_loss(cfg, params, batch):
+    """Next-token CE + Mix2FLD KD, chunked over the sequence so the full
+    (B, S, V) logits tensor never exists (measured: -9 GiB/device on
+    deepseek train_4k; EXPERIMENTS.md §Perf)."""
+    hidden, aux, _ = forward(cfg, params, batch, return_hidden=True)
+    B, S, D = hidden.shape
+    W = unembed_matrix(cfg, params)
+    labels = batch["labels"] if "labels" in batch else batch["tokens"]
+    # shift: position t predicts labels[t+1]; last position is masked
+    targets = jnp.concatenate(
+        [labels[:, 1:], jnp.zeros((B, 1), labels.dtype)], axis=1)
+    mask = jnp.broadcast_to(jnp.arange(S) < S - 1, (B, S)) \
+        .astype(jnp.float32)
+    gout = batch.get("gout")
+
+    C = min(LOSS_CHUNK, S)
+    if S % C == 0 and S > C:
+        nc = S // C
+        hs = hidden.reshape(B, nc, C, D).transpose(1, 0, 2, 3)
+        ts = targets.reshape(B, nc, C).transpose(1, 0, 2)
+        ms = mask.reshape(B, nc, C).transpose(1, 0, 2)
+
+        @jax.checkpoint
+        def body(acc, inp):
+            h, t, m = inp
+            ce, kd = _chunk_losses(cfg, W, gout, h, t, m)
+            return (acc[0] + ce, acc[1] + kd), None
+
+        (ce_sum, kd_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (hs, ts, ms))
+    else:
+        ce_sum, kd_sum = _chunk_losses(cfg, W, gout, hidden, targets, mask)
+
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    ce = ce_sum / denom
+    kd = kd_sum / denom
+    loss = ce + cfg.kd_beta * kd + aux
+    return loss, {"ce": ce, "kd": kd, "aux": aux}
+
+
+def make_train_step(cfg, grad_accum: int | None = None):
+    """Paper-faithful device-side update: plain SGD on eq. (3).
+
+    ``grad_accum`` > 1 scans over microbatches (splitting the batch dim)
+    and accumulates gradients — identical SGD math, activation memory
+    divided by the accumulation factor (cfg.grad_accum by default).
+    """
+    accum = grad_accum if grad_accum is not None else cfg.grad_accum
+    loss_fn = functools.partial(_lm_loss, cfg)
+
+    def one_grad(params, batch):
+        return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+
+    def train_step(params, batch):
+        per_seq = {k for k, v in batch.items()
+                   if hasattr(v, "ndim") and v.ndim >= 2 and k != "gout"}
+        bsz = next(v.shape[0] for k, v in batch.items() if k in per_seq)
+        accum_eff = accum if (accum <= bsz and bsz % accum == 0) else 1
+        if accum_eff > 1:
+            micro = {k: (v.reshape((accum_eff, v.shape[0] // accum_eff)
+                                   + v.shape[1:]) if k in per_seq else v)
+                     for k, v in batch.items()}
+
+            def body(acc, mb):
+                b = {k: (mb[k] if k in per_seq else batch[k])
+                     for k in batch}
+                (loss, parts), g = one_grad(params, b)
+                g_acc = jax.tree.map(jnp.add, acc[0], g)
+                return (g_acc, acc[1] + loss), parts
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(
+                    p.shape, jnp.promote_types(p.dtype, _ACCUM_DTYPE[0])),
+                params)
+            (grads, loss_sum), parts = jax.lax.scan(
+                body, (zeros, jnp.zeros((), jnp.float32)),
+                {k: v for k, v in micro.items() if k in per_seq})
+            grads = jax.tree.map(lambda g: g / accum_eff, grads)
+            loss = loss_sum / accum_eff
+            parts = jax.tree.map(lambda x: jnp.mean(x), parts)
+        else:
+            (loss, parts), grads = one_grad(params, batch)
+        new_params = jax.tree.map(
+            lambda p, g: p - cfg.learning_rate * g.astype(p.dtype),
+            params, grads)
+        metrics = dict(parts, loss=loss)
+        return new_params, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg, seq_len: int):
+    """tokens/embeds (B, S) -> (last-token logits, filled cache)."""
+
+    def prefill_step(params, batch):
+        B = (batch["tokens"] if "tokens" in batch else batch["embeds"]).shape[0]
+        cache = kvcache.init_cache(cfg, B, seq_len)
+        logits, _, new_cache = forward(cfg, params, batch, cache=cache)
+        return logits[:, -1], new_cache
+
+    return prefill_step
+
+
+def make_decode_step(cfg):
+    """One token with a KV cache: greedy-sample and append."""
+
+    def decode_step(params, batch):
+        inp = {k: v for k, v in batch.items() if k != "cache"}
+        logits, _, new_cache = forward(cfg, params, inp, cache=batch["cache"])
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return nxt, new_cache
+
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Multi-pod federated sync steps (the paper's protocol at pod granularity)
+# ---------------------------------------------------------------------------
+
+def make_local_train_step(cfg, n_pods: int):
+    """Pod-local Mix2FLD device update: params carry a leading pod axis and
+    are updated with *no cross-pod gradient reduction* (vmap over pods);
+    batch (n_pods, B/n_pods, S) shards over ("pod", "data")."""
+    step = make_train_step(cfg)
+
+    def local_step(pod_params, pod_batch):
+        return jax.vmap(step)(pod_params, pod_batch)
+
+    return local_step
+
+
+def make_fl_sync_step(cfg, n_pods: int):
+    """FL baseline sync: full-parameter cross-pod average (the fat uplink
+    the paper avoids). pod_params leaves: (n_pods, ...) sharded on "pod"."""
+
+    def fl_sync(pod_params):
+        avg = jax.tree.map(lambda p: jnp.mean(p.astype(jnp.float32), axis=0)
+                           .astype(p.dtype), pod_params)
+        return jax.tree.map(
+            lambda a, p: jnp.broadcast_to(a, p.shape).astype(p.dtype),
+            avg, pod_params)
+
+    return fl_sync
+
+
+def make_fd_sync_step(cfg, n_pods: int, ks_iters: int = 4):
+    """Mix2FLD sync (uplink FD + downlink FL):
+
+    1. uplink: per-pod label-averaged output tables (n_pods, NB, NB) —
+       O(NB^2) bytes across the pod axis instead of O(N_mod);
+    2. server output-to-model conversion: ``ks_iters`` SGD+KD steps
+       (eq. 5) on (inversely mixed-up) seed sequences — **vmapped over the
+       pod axis**: every pod executes the identical server step on its own
+       (consistent) replica, so conversion collectives are pod-local by
+       construction and the only cross-pod traffic is the tiny uplink
+       reduce.  This replicated-compute downlink costs zero bytes — the
+       degenerate-optimal case of the paper's fat FL downlink (devices
+       that cannot recompute would receive the params via the pod
+       broadcast instead; both are first-class here, cf. fl_sync).
+    Returns (new_pod_params, gout).
+    """
+
+    def convert(params, gout, seed_batch):
+        def body(p_, _):
+            def loss_fn(p):
+                b = dict(seed_batch, gout=gout)
+                loss, _parts = _lm_loss(cfg, p, b)
+                return loss
+            g = jax.grad(loss_fn)(p_)
+            return jax.tree.map(
+                lambda p, gg: p - cfg.learning_rate * gg.astype(p.dtype),
+                p_, g), None
+
+        converted, _ = jax.lax.scan(body, params, None, length=ks_iters)
+        return converted
+
+    def fd_sync_vmap(pod_params, pod_favg, seed_batch):
+        # (1) the ONLY cross-pod collective: O(NB^2) mean over pods
+        gout = jnp.mean(pod_favg, axis=0)  # (NB, NB)
+        # (2)+(3) pod-local conversion of each pod's replica
+        new_pod_params = jax.vmap(convert, in_axes=(0, None, None))(
+            pod_params, gout, seed_batch)
+        return new_pod_params, gout
+
+    return fd_sync_vmap
+
+
+def make_fd_sync_step_shardmap(cfg, mesh, ks_iters: int = 4):
+    """Production multi-pod variant of :func:`make_fd_sync_step`:
+    ``shard_map`` over the "pod" axis makes pod-locality *structural* —
+    inside the mapped body no collective can span pods except the explicit
+    ``pmean`` of the (NB, NB) uplink tables.  GSPMD still auto-shards the
+    conversion over the intra-pod (data, model) axes."""
+    inner = make_fd_sync_step(cfg, n_pods=1, ks_iters=ks_iters)
+
+    def per_pod(pod_params, favg, seed_batch):
+        # pod_params/favg: this pod's slice (leading dim 1)
+        gout = jax.lax.pmean(favg[0], axis_name="pod")  # THE uplink
+        new_pp, _ = inner(pod_params, gout[None], seed_batch)
+        return new_pp, gout[None]
+
+    from jax.sharding import PartitionSpec as P
+
+    def fd_sync(pod_params, pod_favg, seed_batch):
+        return jax.shard_map(
+            per_pod,
+            mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P("pod"), pod_params),
+                      P("pod"),
+                      jax.tree.map(lambda _: P(), seed_batch)),
+            out_specs=(jax.tree.map(lambda _: P("pod"), pod_params),
+                       P("pod")),
+            axis_names={"pod"},
+            check_vma=False,
+        )(pod_params, pod_favg, seed_batch)
+
+    return fd_sync
+
+
+# ---------------------------------------------------------------------------
+# Device-side FD statistics (eq. 2 at LM scale): per-bucket average output
+# ---------------------------------------------------------------------------
+
+def make_favg_step(cfg):
+    """Computes the per-ground-truth-bucket average bucket-distribution
+    table (NB, NB) from one batch — the Mix2FLD uplink payload."""
+
+    def favg(params, batch):
+        logits, _, _ = forward(cfg, params, batch)
+        lg = logits[:, :-1].astype(jnp.float32)
+        targets = (batch["labels"] if "labels" in batch
+                   else batch["tokens"])[:, 1:]
+        nb = cfg.fd_buckets
+        bp = jnp.exp(bucket_log_probs(lg, nb))       # (B,S-1,NB)
+        tb = bucketize_tokens(targets, cfg.vocab_size, nb)
+        oh = jax.nn.one_hot(tb, nb, dtype=jnp.float32)
+        sums = jnp.einsum("bsn,bsm->nm", oh, bp)
+        cnt = jnp.sum(oh, axis=(0, 1))
+        return sums / jnp.maximum(cnt[:, None], 1.0)
+
+    return favg

@@ -1,0 +1,3 @@
+"""Model stack: paper CNN + production transformer/SSM architectures."""
+from .transformer import Transformer, init_params, count_params, active_params  # noqa: F401
+from .cnn import CNN  # noqa: F401

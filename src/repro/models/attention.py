@@ -1,0 +1,392 @@
+"""Attention flavours: GQA (opt. sliding window, qk-norm, bias), MLA
+(DeepSeek-V2 latent attention, absorbed decode path), cross-attention.
+
+All masking is position-driven: query positions ``q_pos`` (B, T) and key
+positions ``kv_pos`` (B, S) with -1 marking empty cache slots.  This makes
+full, causal, sliding-window and ring-buffer cache attention one code path.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, dtype_of, rms_norm_headwise
+from .rope import apply_rope, mrope_cos_sin, rope_cos_sin
+from .shardhooks import constrain  # noqa: F401  (used in both paths)
+
+NEG_INF = -1e30
+# Above this many query tokens, use the chunked online-softmax path so the
+# (T, S) score matrix is never materialised in full.
+CHUNKED_THRESHOLD = 1024
+Q_CHUNK = 512
+KV_CHUNK = 1024
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def init_attn(cfg, key):
+    dt = dtype_of(cfg)
+    D, H, Hkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 10)
+    if cfg.attn_type == "mla":
+        nope = cfg.head_dim
+        p = {
+            "wq_a": dense_init(ks[0], D, cfg.q_lora_rank, dt),
+            "q_norm": jnp.ones((cfg.q_lora_rank,), dt),
+            "wq_b": dense_init(ks[1], cfg.q_lora_rank,
+                               H * (nope + cfg.rope_head_dim), dt),
+            "wkv_a": dense_init(ks[2], D, cfg.kv_lora_rank + cfg.rope_head_dim, dt),
+            "kv_norm": jnp.ones((cfg.kv_lora_rank,), dt),
+            "wk_b": dense_init(ks[3], cfg.kv_lora_rank, H * nope, dt),
+            "wv_b": dense_init(ks[4], cfg.kv_lora_rank, H * cfg.v_head, dt),
+            "wo": dense_init(ks[5], H * cfg.v_head, D, dt),
+        }
+        return p
+    p = {
+        "wq": dense_init(ks[0], D, H * hd, dt),
+        "wk": dense_init(ks[1], D, Hkv * hd, dt),
+        "wv": dense_init(ks[2], D, Hkv * hd, dt),
+        "wo": dense_init(ks[3], H * hd, D, dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((Hkv * hd,), dt)
+        p["bv"] = jnp.zeros((Hkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_scale"] = jnp.ones((hd,), dt)
+        p["k_scale"] = jnp.ones((hd,), dt)
+    if cfg.cross_attention:
+        p["xwq"] = dense_init(ks[4], D, H * hd, dt)
+        p["xwk"] = dense_init(ks[5], D, Hkv * hd, dt)
+        p["xwv"] = dense_init(ks[6], D, Hkv * hd, dt)
+        p["xwo"] = dense_init(ks[7], H * hd, D, dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Core masked attention (grouped-query, never repeats KV)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, kv_pos, window, causal):
+    """(B, T, S) additive bias from positions. Empty slots: kv_pos == -1."""
+    valid = kv_pos[:, None, :] >= 0
+    if causal:
+        valid &= kv_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        valid &= (q_pos[:, :, None] - kv_pos[:, None, :]) < window
+    return jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _gqa_scores(q, k):
+    """q: (B,T,Hkv,G,d)  k: (B,S,Hkv,d) -> (B,Hkv,G,T,S) fp32."""
+    return jnp.einsum("bthgd,bshd->bhgts", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(p, v):
+    """p: (B,Hkv,G,T,S)  v: (B,S,Hkv,d) -> (B,T,Hkv,G,d)."""
+    return jnp.einsum("bhgts,bshd->bthgd", p.astype(v.dtype), v)
+
+
+def masked_attention(q, k, v, q_pos, kv_pos, *, scale, window=None,
+                     causal=True):
+    """Grouped attention. q: (B,T,Hq,d), k/v: (B,S,Hkv,dv).
+
+    Dense path for short T, chunked online-softmax path for long T.
+    """
+    B, T, Hq, d = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, T, Hkv, G, d)
+
+    if T <= CHUNKED_THRESHOLD:
+        bias = _mask_bias(q_pos, kv_pos, window, causal)  # (B,T,S)
+        s = _gqa_scores(qg, k) * scale + bias[:, None, None]
+        # decode with a sequence-sharded cache: keep the scores sharded on
+        # the key axis (distributed softmax costs only tiny stat reduces,
+        # vs GSPMD's default of all-gathering the multi-GB cache)
+        s = constrain(s, "scores_seq")
+        p = jax.nn.softmax(s, axis=-1)
+        o = _gqa_out(p, v)
+        return o.reshape(B, T, Hq, v.shape[-1])
+
+    # ---- chunked online-softmax (flash-style, pure jnp + lax.scan) ----
+    nq = T // Q_CHUNK
+    assert T % Q_CHUNK == 0, f"T={T} not divisible by q-chunk {Q_CHUNK}"
+    qc = qg.reshape(B, nq, Q_CHUNK, Hkv, G, d)
+    qpc = q_pos.reshape(B, nq, Q_CHUNK)
+
+    S = k.shape[1]
+    if S % KV_CHUNK:  # pad keys; padded slots carry kv_pos = -1 (masked)
+        pad = -(-S // KV_CHUNK) * KV_CHUNK - S
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+        S += pad
+    nk = S // KV_CHUNK
+    kc = k.reshape(B, nk, KV_CHUNK, Hkv, d)
+    vc = v.reshape(B, nk, KV_CHUNK, Hkv, v.shape[-1])
+    kpc = kv_pos.reshape(B, nk, KV_CHUNK)
+
+    def q_block(carry, inputs):
+        qi, qp = inputs  # (B,Qc,Hkv,G,d), (B,Qc)
+
+        # rematerialised: backward recomputes score blocks instead of
+        # storing the full (T, S) score matrix across both scans
+        @jax.checkpoint
+        def kv_block(acc, kv_in):
+            m, l, o = acc
+            ki, vi, kp = kv_in
+            bias = _mask_bias(qp, kp, window, causal)  # (B,Qc,Kc)
+            s = _gqa_scores(qi, ki) * scale + bias[:, None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            o_new = o * alpha[..., None] + _gqa_out(p, vi).astype(jnp.float32) \
+                .transpose(0, 2, 3, 1, 4)  # (B,Hkv,G,Qc,dv)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, Hkv, G, Q_CHUNK), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, Q_CHUNK), jnp.float32)
+        o0 = jnp.zeros((B, Hkv, G, Q_CHUNK, v.shape[-1]), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(
+            kv_block, (m0, l0, o0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             kpc.transpose(1, 0, 2)))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        # cast before stacking: the scan ys otherwise accumulate in f32,
+        # doubling the stacked output memory
+        o = o.astype(q.dtype)
+        # (B,Hkv,G,Qc,dv) -> (B,Qc,Hkv,G,dv)
+        return carry, o.transpose(0, 3, 1, 2, 4)
+
+    q_block = jax.checkpoint(q_block)
+    _, oc = jax.lax.scan(
+        q_block, 0,
+        (qc.transpose(1, 0, 2, 3, 4, 5), qpc.transpose(1, 0, 2)))
+    # oc: (nq, B, Qc, Hkv, G, dv)
+    o = oc.transpose(1, 0, 2, 3, 4, 5).reshape(B, T, Hq, v.shape[-1])
+    return o.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block forward
+# ---------------------------------------------------------------------------
+
+def _proj(x, w, b=None):
+    y = x @ w
+    if b is not None:
+        y = y + b
+    return y
+
+
+def gqa_attention(cfg, p, x, q_pos, kv_pos, cache=None, positions3=None):
+    """x: (B,T,D). cache: None (train/prefill) or dict(k,v) ring/linear cache.
+
+    Returns (out, new_cache). When cache is given, T==1 (decode) or T==S
+    (prefill writing into the cache).
+    """
+    B, T, D = x.shape
+    H, Hkv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = constrain(_proj(x, p["wq"], p.get("bq")).reshape(B, T, H, hd),
+                  "heads")
+    k = constrain(_proj(x, p["wk"], p.get("bk")).reshape(B, T, Hkv, hd),
+                  "kv")
+    v = constrain(_proj(x, p["wv"], p.get("bv")).reshape(B, T, Hkv, hd),
+                  "kv")
+
+    if cfg.qk_norm:
+        q = rms_norm_headwise(q, p["q_scale"])
+        k = rms_norm_headwise(k, p["k_scale"])
+
+    if cfg.pos_emb == "rope":
+        if cfg.mrope:
+            assert positions3 is not None
+            cos, sin = mrope_cos_sin(positions3, hd, cfg.rope_theta)
+        else:
+            cos, sin = rope_cos_sin(q_pos, hd, cfg.rope_theta)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    scale = 1.0 / math.sqrt(hd)
+    new_cache = None
+    if cache is not None and T == 1:
+        # ---- decode: scatter this token's k/v into its slot ----
+        slots = _cache_slots(cfg, q_pos, cache["k"].shape[1])  # (B,1)
+        if cfg.kv_quant:
+            qk, ks = _quantize_kv(k)
+            qv, vs = _quantize_kv(v)
+            new_cache = {
+                "k": _scatter_cache(cache["k"], qk, slots),
+                "v": _scatter_cache(cache["v"], qv, slots),
+                "k_scale": _scatter_cache(cache["k_scale"], ks, slots),
+                "v_scale": _scatter_cache(cache["v_scale"], vs, slots),
+            }
+            ck = _dequantize_kv(new_cache["k"], new_cache["k_scale"],
+                                k.dtype)
+            cv = _dequantize_kv(new_cache["v"], new_cache["v_scale"],
+                                v.dtype)
+        else:
+            ck = _scatter_cache(cache["k"], k, slots)
+            cv = _scatter_cache(cache["v"], v, slots)
+            new_cache = {"k": ck, "v": cv}
+        o = masked_attention(q, ck, cv, q_pos, kv_pos, scale=scale,
+                             window=cfg.sliding_window, causal=True)
+    elif cache is not None:
+        # ---- prefill: full attention, then build the cache from the tail
+        o = masked_attention(q, k, v, q_pos, q_pos, scale=scale,
+                             window=cfg.sliding_window, causal=True)
+        Sc = cache["k"].shape[1]
+        if cfg.kv_quant:
+            qk, ks = _quantize_kv(k)
+            qv, vs = _quantize_kv(v)
+            new_cache = {"k": _tail_cache(qk, Sc), "v": _tail_cache(qv, Sc),
+                         "k_scale": _tail_cache(ks, Sc),
+                         "v_scale": _tail_cache(vs, Sc)}
+        else:
+            new_cache = {"k": _tail_cache(k, Sc), "v": _tail_cache(v, Sc)}
+    else:
+        o = masked_attention(q, k, v, q_pos, kv_pos, scale=scale,
+                             window=cfg.sliding_window, causal=True)
+    return o.reshape(B, T, H * hd) @ p["wo"], new_cache
+
+
+def cross_attention(cfg, p, x, enc_kv):
+    """Whisper cross-attention. enc_kv: dict(k,v): (B,Senc,Hkv,hd)."""
+    B, T, D = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q = (x @ p["xwq"]).reshape(B, T, H, hd)
+    S = enc_kv["k"].shape[1]
+    q_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    kv_pos = jnp.zeros((B, S), jnp.int32)  # all valid, non-causal
+    o = masked_attention(q, enc_kv["k"], enc_kv["v"], q_pos, kv_pos,
+                         scale=1.0 / math.sqrt(hd), causal=False)
+    return o.reshape(B, T, H * hd) @ p["xwo"]
+
+
+def encode_cross_kv(cfg, p, enc_out):
+    B, S, _ = enc_out.shape
+    Hkv, hd = cfg.num_kv_heads, cfg.head_dim
+    k = (enc_out @ p["xwk"]).reshape(B, S, Hkv, hd)
+    v = (enc_out @ p["xwv"]).reshape(B, S, Hkv, hd)
+    return {"k": k, "v": v}
+
+
+def _cache_slots(cfg, q_pos, cache_len):
+    if cfg.sliding_window is not None and cache_len <= cfg.sliding_window:
+        return q_pos % cache_len  # ring buffer
+    return q_pos
+
+
+def _scatter_cache(cache, new, slots):
+    """cache: (B,Smax,H,d); new: (B,T,H,d); slots: (B,T) int."""
+    B, T = slots.shape
+    if T == cache.shape[1] and T > 1:
+        return new  # prefill covering whole cache
+    b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, T))
+    return cache.at[b_idx, slots].set(new.astype(cache.dtype))
+
+
+def _quantize_kv(x):
+    """x: (B,S,H,d) -> (int8 values, per-(pos,head) f32 scales)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)  # (B,S,H)
+    sc = jnp.maximum(amax, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / sc[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, sc
+
+
+def _dequantize_kv(q, sc, dtype):
+    return (q.astype(jnp.float32) * sc[..., None]).astype(dtype)
+
+
+def _tail_cache(k, Sc: int):
+    """Build a (ring) cache holding the last ``Sc`` of ``k``: (B,S,H,d)."""
+    S = k.shape[1]
+    if Sc == S:
+        return k
+    if Sc > S:  # linear cache with free slots at the end
+        return jnp.pad(k, ((0, 0), (0, Sc - S)) + ((0, 0),) * (k.ndim - 2))
+    tail = k[:, S - Sc:]
+    # position p lives at slot p % Sc; tail index i is position S-Sc+i
+    return jnp.roll(tail, shift=(S - Sc) % Sc, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2)
+# ---------------------------------------------------------------------------
+
+def mla_attention(cfg, p, x, q_pos, kv_pos, cache=None):
+    """Multi-head latent attention.
+
+    Train/prefill: materialise per-head K/V from the latent (standard path).
+    Decode (cache): *absorbed* path — scores and values computed directly in
+    the 512-d latent space; the cache stores only (c_kv, k_rope).
+    """
+    B, T, D = x.shape
+    H = cfg.num_heads
+    nope, rp, dv = cfg.head_dim, cfg.rope_head_dim, cfg.v_head
+    lora = cfg.kv_lora_rank
+
+    cq = rms_norm_headwise(x @ p["wq_a"], p["q_norm"])
+    q = (cq @ p["wq_b"]).reshape(B, T, H, nope + rp)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+
+    ckv_full = x @ p["wkv_a"]  # (B,T,lora+rp)
+    ckv = rms_norm_headwise(ckv_full[..., :lora], p["kv_norm"])
+    k_rope = ckv_full[..., lora:][:, :, None, :]  # (B,T,1,rp)
+
+    cos, sin = rope_cos_sin(q_pos, rp, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+
+    scale = 1.0 / math.sqrt(nope + rp)
+
+    if cache is None or T > 1:
+        # -------- standard (non-absorbed) path: train / prefill --------
+        k_nope = (ckv @ p["wk_b"]).reshape(B, T, H, nope)
+        v = constrain((ckv @ p["wv_b"]).reshape(B, T, H, dv), "heads")
+        k = constrain(jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope, (B, T, H, rp))], axis=-1),
+            "heads")
+        qf = constrain(jnp.concatenate([q_nope, q_rope], axis=-1), "heads")
+        o = masked_attention(qf, k, v, q_pos, q_pos, scale=scale,
+                             window=cfg.sliding_window, causal=True)
+        new_cache = None
+        if cache is not None:  # prefill writes the latent cache
+            Sc = cache["ckv"].shape[1]
+            assert Sc >= T, "MLA prefill longer than the linear cache"
+            new_cache = {
+                "ckv": _tail_cache(ckv, Sc).astype(cache["ckv"].dtype),
+                "kr": _tail_cache(k_rope[:, :, 0, :],
+                                  Sc).astype(cache["kr"].dtype)}
+        return o.reshape(B, T, H * dv) @ p["wo"], new_cache
+
+    # -------- absorbed decode path (T == 1) --------
+    slots = q_pos  # linear cache
+    b_idx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, T))
+    c_ckv = cache["ckv"].at[b_idx, slots].set(ckv.astype(cache["ckv"].dtype))
+    c_kr = cache["kr"].at[b_idx, slots].set(
+        k_rope[:, :, 0, :].astype(cache["kr"].dtype))
+    new_cache = {"ckv": c_ckv, "kr": c_kr}
+
+    wk_b = p["wk_b"].reshape(lora, H, nope)
+    wv_b = p["wv_b"].reshape(lora, H, dv)
+    # absorb W_uk into the query:  (B,T,H,lora)
+    q_lat = jnp.einsum("bthn,lhn->bthl", q_nope, wk_b)
+    s_lat = jnp.einsum("bthl,bsl->bhts", q_lat, c_ckv,
+                       preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bthr,bsr->bhts", q_rope, c_kr,
+                        preferred_element_type=jnp.float32)
+    bias = _mask_bias(q_pos, kv_pos, cfg.sliding_window, True)
+    s = (s_lat + s_rope) * scale + bias[:, None]
+    pr = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhts,bsl->bthl", pr.astype(c_ckv.dtype), c_ckv)
+    o = jnp.einsum("bthl,lhv->bthv", o_lat, wv_b)
+    return o.reshape(B, T, H * dv) @ p["wo"], new_cache

@@ -1,0 +1,68 @@
+"""The paper's on-device model: 3-layer CNN (2 conv + 1 FC), ~12.5k weights.
+
+Sec. IV: "Every device has a 3-layer convolutional neural network model
+(2 convolutional layers, 1 fully-connected layer) having N_mod = 12,544."
+Exact layer shapes are unpublished; our reconstruction
+(conv 1->14 3x3, pool 2, conv 14->20 3x3, pool 2, fc 980->10) gives 12,490
+parameters — recorded in configs/paper_cnn.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.paper_cnn import CONV_CHANNELS, IMAGE_SIZE, KERNEL, NUM_CLASSES, POOL
+
+
+def _conv_init(key, k, cin, cout):
+    scale = 1.0 / jnp.sqrt(k * k * cin)
+    w = jax.random.normal(key, (k, k, cin, cout), jnp.float32) * scale
+    return w
+
+
+class CNN:
+    """Functional CNN: params pytree + pure apply. Input: (B, 28, 28, 1)."""
+
+    def __init__(self, num_classes: int = NUM_CLASSES):
+        self.num_classes = num_classes
+        c1, c2 = CONV_CHANNELS
+        side = IMAGE_SIZE // POOL // POOL
+        self.fc_in = side * side * c2
+
+    def init(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        c1, c2 = CONV_CHANNELS
+        return {
+            "conv1": {"w": _conv_init(k1, KERNEL, 1, c1),
+                      "b": jnp.zeros((c1,), jnp.float32)},
+            "conv2": {"w": _conv_init(k2, KERNEL, c1, c2),
+                      "b": jnp.zeros((c2,), jnp.float32)},
+            "fc": {"w": jax.random.normal(k3, (self.fc_in, self.num_classes),
+                                          jnp.float32) / jnp.sqrt(self.fc_in),
+                   "b": jnp.zeros((self.num_classes,), jnp.float32)},
+        }
+
+    @staticmethod
+    def _conv(x, p):
+        y = jax.lax.conv_general_dilated(
+            x, p["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        return y + p["b"]
+
+    @staticmethod
+    def _pool(x):
+        return jax.lax.reduce_window(
+            x, -jnp.inf, jax.lax.max, (1, POOL, POOL, 1), (1, POOL, POOL, 1),
+            "VALID")
+
+    def apply(self, params, x):
+        """x: (B, 28, 28, 1) -> logits (B, num_classes)."""
+        h = jax.nn.relu(self._conv(x, params["conv1"]))
+        h = self._pool(h)
+        h = jax.nn.relu(self._conv(h, params["conv2"]))
+        h = self._pool(h)
+        h = h.reshape(h.shape[0], -1)
+        return h @ params["fc"]["w"] + params["fc"]["b"]
+
+    def num_params(self, params) -> int:
+        return sum(p.size for p in jax.tree.leaves(params))

@@ -1,0 +1,112 @@
+"""Decode-time caches for every architecture family.
+
+Cache layout (all per-layer leaves stacked on a leading layer axis so the
+decode step can ``lax.scan`` over layers):
+
+  dense / vlm : {"k","v": (L, B, Sc, Hkv, hd)}
+  mla         : {"ckv": (L, B, Sc, lora), "kr": (L, B, Sc, rp)}
+  ssm         : {"state": (L, B, H, N, P), "conv": (L, B, k-1, Cd)}
+  hybrid      : {"mamba": {...(G, A, B, ...)}, "attn": {"k","v": (G, B, W, ...)}}
+  audio       : dense cache + {"xk","xv": (L, B, Senc, Hkv, hd)} cross-attn
+
+``Sc`` is ``min(seq_len, sliding_window)`` — SWA caches are ring buffers.
+The scalar ``pos`` (next position to write) lives at the root; key positions
+are *derived* from it (see ``kv_positions``), so empty/ring slots need no
+stored metadata.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .mamba2 import conv_dim
+
+
+def cache_len(cfg, seq_len: int) -> int:
+    if cfg.sliding_window is not None:
+        return min(seq_len, cfg.sliding_window)
+    return seq_len
+
+
+def _layer_cache_shapes(cfg, batch: int, seq_len: int):
+    """Per-layer cache leaf shapes (without the layer axis)."""
+    dt = jnp.dtype(cfg.param_dtype)
+    Sc = cache_len(cfg, seq_len)
+    if cfg.attn_type == "mla":
+        return {"ckv": ((batch, Sc, cfg.kv_lora_rank), dt),
+                "kr": ((batch, Sc, cfg.rope_head_dim), dt)}
+    if cfg.kv_quant:
+        # int8 cache + per-(position, head) symmetric scales: halves the
+        # decode memory roofline term (EXPERIMENTS.md §Perf H3 extension)
+        kv = (batch, Sc, cfg.num_kv_heads, cfg.head_dim)
+        sc = (batch, Sc, cfg.num_kv_heads)
+        return {"k": (kv, jnp.int8), "v": (kv, jnp.int8),
+                "k_scale": (sc, jnp.float32), "v_scale": (sc, jnp.float32)}
+    return {"k": ((batch, Sc, cfg.num_kv_heads, cfg.head_dim), dt),
+            "v": ((batch, Sc, cfg.num_kv_heads, cfg.head_dim), dt)}
+
+
+def _mamba_cache_shapes(cfg, batch: int):
+    dt = jnp.dtype(cfg.param_dtype)
+    return {"state": ((batch, cfg.ssm_heads, cfg.ssm_state,
+                       cfg.ssm_head_dim), jnp.float32),
+            "conv": ((batch, cfg.ssm_conv - 1, conv_dim(cfg)), dt)}
+
+
+def cache_shapes(cfg, batch: int, seq_len: int):
+    """Full cache pytree of (shape, dtype) pairs."""
+    L = cfg.num_layers
+    out = {"pos": ((), jnp.int32)}
+    if cfg.family in ("dense", "vlm", "moe"):
+        out["layers"] = {k: ((L,) + s, d) for k, (s, d)
+                         in _layer_cache_shapes(cfg, batch, seq_len).items()}
+    elif cfg.family == "ssm":
+        out["layers"] = {k: ((L,) + s, d) for k, (s, d)
+                         in _mamba_cache_shapes(cfg, batch).items()}
+    elif cfg.family == "hybrid":
+        G = L // cfg.attn_every
+        A = cfg.attn_every
+        out["mamba"] = {k: ((G, A) + s, d) for k, (s, d)
+                        in _mamba_cache_shapes(cfg, batch).items()}
+        out["attn"] = {k: ((G,) + s, d) for k, (s, d)
+                       in _layer_cache_shapes(cfg, batch, seq_len).items()}
+    elif cfg.family == "audio":
+        out["layers"] = {k: ((L,) + s, d) for k, (s, d)
+                         in _layer_cache_shapes(cfg, batch, seq_len).items()}
+        dt = jnp.dtype(cfg.param_dtype)
+        xkv = (L, batch, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
+        out["layers"]["xk"] = (xkv, dt)
+        out["layers"]["xv"] = (xkv, dt)
+    else:
+        raise ValueError(f"no cache for family {cfg.family}")
+    return out
+
+
+def init_cache(cfg, batch: int, seq_len: int):
+    shapes = cache_shapes(cfg, batch, seq_len)
+    return jax.tree.map(lambda sd: jnp.zeros(sd[0], sd[1]), shapes,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        isinstance(x[0], tuple))
+
+
+def cache_specs(cfg, batch: int, seq_len: int):
+    shapes = cache_shapes(cfg, batch, seq_len)
+    return jax.tree.map(lambda sd: jax.ShapeDtypeStruct(sd[0], sd[1]), shapes,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        isinstance(x[0], tuple))
+
+
+def kv_positions(cfg, pos, Sc: int, batch: int):
+    """Positions held by each cache slot given the write pointer ``pos``
+    (position about to be written is ``pos``; slots with no data -> -1)."""
+    slots = jnp.arange(Sc)
+    # ring buffer iff the cache was capped at the sliding window
+    ring = cfg.sliding_window is not None and Sc == cfg.sliding_window
+    if ring:
+        W = Sc
+        # largest q <= pos with q % W == slot
+        q = pos - ((pos - slots) % W)
+        kv = jnp.where(q >= 0, q, -1)
+    else:
+        kv = jnp.where(slots <= pos, slots, -1)
+    return jnp.broadcast_to(kv, (batch, Sc)).astype(jnp.int32)

@@ -1,0 +1,99 @@
+"""Shared primitive layers: norms, linear init, embeddings, activations."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(cfg):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype, scale: float | None = None):
+    scale = scale if scale is not None else 1.0 / np.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype):
+    return (jax.random.normal(key, (vocab, dim), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg, dim: int):
+    p = {"scale": jnp.ones((dim,), dtype_of(cfg))}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((dim,), dtype_of(cfg))
+    return p
+
+
+def apply_norm(cfg, p, x):
+    """Norms with f32 *accumulation* but no materialised f32 copy of x —
+    a full astype(f32) of the residual makes XLA hoist a whole-stack
+    convert of the remat-saved carries out of the backward scan
+    (measured: +75 GiB/device on deepseek train_4k; EXPERIMENTS.md §Perf).
+    """
+    D = x.shape[-1]
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(x, axis=-1, keepdims=True, dtype=jnp.float32)
+        xc = x - mu.astype(x.dtype)
+        # f32 accumulation via dot_general — no materialised f32 copy
+        var = jnp.einsum("...d,...d->...", xc, xc,
+                         preferred_element_type=jnp.float32)[..., None] / D
+        inv = jax.lax.rsqrt(var + cfg.norm_eps).astype(x.dtype)
+        return xc * inv * p["scale"] + p["bias"]
+    ms = jnp.einsum("...d,...d->...", x, x,
+                    preferred_element_type=jnp.float32)[..., None] / D
+    inv = jax.lax.rsqrt(ms + cfg.norm_eps).astype(x.dtype)
+    return x * inv * p["scale"]
+
+
+def rms_norm_headwise(x, scale, eps: float = 1e-6):
+    """qk-norm: rmsnorm over the head_dim axis of (..., head_dim)."""
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# Cotangent dtype guard
+# ---------------------------------------------------------------------------
+# f32-accumulating ops (norm sum-of-squares, attention score einsums with
+# preferred_element_type=f32) make their *cotangents* f32; the f32-ness then
+# propagates through every downstream backward op, doubling the bytes of all
+# backward weight/activation all-gathers (measured on deepseek train_4k:
+# the dominant collective cost).  Identity forward; backward casts the
+# cotangent to the primal dtype.
+
+import functools  # noqa: E402
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _grad_cast(x, dtype_str: str):
+    return x
+
+
+def _gdg_fwd(x, dtype_str):
+    return x, None
+
+
+def _gdg_bwd(dtype_str, _res, g):
+    return (g.astype(dtype_str),)
+
+
+_grad_cast.defvjp(_gdg_fwd, _gdg_bwd)
+
+
+def grad_dtype_guard(x):
+    return _grad_cast(x, str(x.dtype))

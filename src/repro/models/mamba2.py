@@ -1,0 +1,174 @@
+"""Mamba2 mixer: SSD (state-space duality) with chunked scan.
+
+The chunked SSD here is also the mathematical oracle for the Pallas
+``ssd_scan`` kernel (kernels/ref.py re-exports ``ssd_reference``).
+
+Semantics (per head h, state N, head-dim P):
+    h_t = exp(A_h * dt_t) h_{t-1} + dt_t * B_t x_t^T
+    y_t = C_t . h_t + D_h x_t
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, dtype_of
+from .shardhooks import constrain
+
+
+def conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state
+
+
+def init_mamba(cfg, key):
+    dt = dtype_of(cfg)
+    D, di, H = cfg.d_model, cfg.d_inner, cfg.ssm_heads
+    Cd = conv_dim(cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], D, 2 * di + 2 * cfg.ssm_ngroups *
+                              cfg.ssm_state + H, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, Cd), jnp.float32)
+                   / math.sqrt(cfg.ssm_conv)).astype(dt),
+        "conv_b": jnp.zeros((Cd,), dt),
+        "A_log": jnp.zeros((H,), jnp.float32),   # A = -exp(A_log) = -1
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((di,), dt),
+        "out_proj": dense_init(ks[2], di, D, dt),
+    }
+
+
+def _causal_conv(xBC, w, b):
+    """Depthwise causal conv. xBC: (B,S,Cd); w: (k,Cd)."""
+    k = w.shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (k - 1, 0), (0, 0)))
+    S = xBC.shape[1]
+    y = sum(pad[:, i:i + S, :] * w[i] for i in range(k))
+    return y + b
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, initial_state=None):
+    """Chunked SSD. x: (B,S,H,P) fp32, dt: (B,S,H), A: (H,),
+    Bm/Cm: (B,S,G,N). Returns (y (B,S,H,P), final_state (B,H,N,P))."""
+    B_, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)  # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+    dA = dt * A  # (B,S,H), <= 0
+    xdt = x * dt[..., None]
+
+    nc = S // chunk
+    assert S % chunk == 0, f"S={S} not divisible by chunk {chunk}"
+    L = chunk
+    rs = lambda t: t.reshape((B_, nc, L) + t.shape[2:])
+    xc, dAc, Bc, Cc = rs(xdt), rs(dA), rs(Bh), rs(Ch)
+
+    seg = jnp.cumsum(dAc, axis=2)  # (B,nc,L,H) inclusive
+    # ---- intra-chunk (attention-like) ----
+    decay = seg[:, :, :, None, :] - seg[:, :, None, :, :]  # (B,nc,L,L,H) l,m
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    att = jnp.exp(jnp.where(causal[None, None, :, :, None], decay, -jnp.inf))
+    CB = jnp.einsum("bclhn,bcmhn->bclmh", Cc, Bc)
+    y_intra = jnp.einsum("bclmh,bclmh,bcmhp->bclhp", CB, att, xc)
+
+    # ---- per-chunk end states ----
+    decay_last = jnp.exp(seg[:, :, -1:, :] - seg)  # (B,nc,L,H)
+    states = jnp.einsum("bclh,bclhn,bclhp->bchnp", decay_last, Bc, xc)
+
+    # ---- inter-chunk recurrence over nc ----
+    chunk_decay = jnp.exp(seg[:, :, -1, :])  # (B,nc,H)
+
+    def step(s, inp):
+        cd, st = inp  # (B,H), (B,H,N,P)
+        s_next = cd[..., None, None] * s + st
+        return s_next, s  # emit the state *entering* this chunk
+
+    s0 = initial_state if initial_state is not None else \
+        jnp.zeros((B_, H, N, P), x.dtype)
+    final, prev = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2),
+                   states.transpose(1, 0, 2, 3, 4)))
+    prev = prev.transpose(1, 0, 2, 3, 4)  # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bclh,bclhn,bchnp->bclhp",
+                         jnp.exp(seg), Cc, prev)
+    y = (y_intra + y_inter).reshape(B_, S, H, P)
+    return y, final
+
+
+def mamba2_forward(cfg, p, x, cache=None):
+    """x: (B,S,D). cache (decode): {"state": (B,H,N,P), "conv": (B,k-1,Cd)}.
+    Returns (out, new_cache)."""
+    B_, S, D = x.shape
+    di, H, P = cfg.d_inner, cfg.ssm_heads, cfg.ssm_head_dim
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    GN = G * N
+
+    zxbcdt = x @ p["in_proj"]
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:di + di + 2 * GN]
+    dt_raw = zxbcdt[..., -H:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if cache is None or S > 1:
+        conv_in = xBC
+        xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+        xs = constrain(
+            xBC[..., :di].astype(jnp.float32).reshape(B_, S, H, P),
+            "ssm_inner")
+        Bm = xBC[..., di:di + GN].astype(jnp.float32).reshape(B_, S, G, N)
+        Cm = xBC[..., di + GN:].astype(jnp.float32).reshape(B_, S, G, N)
+        chunk = min(cfg.ssm_chunk, S)
+        if S % chunk:  # pad with dt=0 steps: state passes through unchanged
+            pad = -(-S // chunk) * chunk - S
+            zpad = lambda t: jnp.pad(t, [(0, 0), (0, pad)] +
+                                     [(0, 0)] * (t.ndim - 2))
+            ys, final = ssd_chunked(zpad(xs), zpad(dt), A, zpad(Bm),
+                                    zpad(Cm), chunk)
+            y = ys[:, :S]
+        else:
+            y, final = ssd_chunked(xs, dt, A, Bm, Cm, chunk)
+        new_cache = None
+        if cache is not None:  # prefill: hand the state to decode
+            k = cfg.ssm_conv
+            new_cache = {
+                "state": final.astype(cache["state"].dtype),
+                "conv": conv_in[:, S - (k - 1):, :].astype(
+                    cache["conv"].dtype),
+            }
+    else:
+        # ---- single-token decode ----
+        k = cfg.ssm_conv
+        window = jnp.concatenate([cache["conv"], xBC], axis=1)  # (B,k,Cd)
+        conv_out = jnp.einsum("bkc,kc->bc", window, p["conv_w"]) + p["conv_b"]
+        xBC1 = jax.nn.silu(conv_out)[:, None, :]  # (B,1,Cd)
+        xs = xBC1[..., :di].astype(jnp.float32).reshape(B_, 1, H, P)
+        Bm = xBC1[..., di:di + GN].astype(jnp.float32).reshape(B_, 1, G, N)
+        Cm = xBC1[..., di + GN:].astype(jnp.float32).reshape(B_, 1, G, N)
+        rep = H // G
+        Bh = jnp.repeat(Bm[:, 0], rep, axis=1)  # (B,H,N)
+        Ch = jnp.repeat(Cm[:, 0], rep, axis=1)
+        a = jnp.exp(dt[:, 0] * A)  # (B,H)
+        xdt = xs[:, 0] * dt[:, 0, :, None]  # (B,H,P)
+        state = cache["state"].astype(jnp.float32)
+        state = a[..., None, None] * state + \
+            jnp.einsum("bhn,bhp->bhnp", Bh, xdt)
+        y = jnp.einsum("bhn,bhnp->bhp", Ch, state)[:, None]  # (B,1,H,P)
+        final = state
+        new_cache = {"state": state.astype(cache["state"].dtype),
+                     "conv": window[:, 1:].astype(cache["conv"].dtype)}
+
+    y = y + p["D"][:, None] * (xs if cache is None else xs)
+    y = y.reshape(B_, S, di)
+
+    # gated RMSNorm
+    g = y * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(jnp.square(g), axis=-1, keepdims=True)
+    g = g * jax.lax.rsqrt(ms + cfg.norm_eps) * p["norm"].astype(jnp.float32)
+    out = g.astype(x.dtype) @ p["out_proj"]
+    return out, new_cache

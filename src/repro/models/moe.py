@@ -1,0 +1,109 @@
+"""Mixture-of-Experts layer, GShard-style grouped dense dispatch.
+
+Tokens are reshaped into groups of ``moe_group_size``; within each group a
+capacity-limited one-hot dispatch/combine einsum routes tokens to experts.
+The group axis shards over the (pod, data) mesh axes and the expert axis
+over ``model`` — the expert all-to-all then emerges from GSPMD.
+
+Shared experts (DeepSeek-V2 / Qwen2-MoE style) run as a fused dense SwiGLU
+over all tokens.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, dtype_of
+
+
+def init_moe(cfg, key):
+    dt = dtype_of(cfg)
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 6)
+    scale = 1.0 / math.sqrt(D)
+    p = {
+        "router": dense_init(ks[0], D, E, jnp.float32),  # router in fp32
+        "w1": (jax.random.normal(ks[1], (E, D, F), jnp.float32) * scale).astype(dt),
+        "w3": (jax.random.normal(ks[2], (E, D, F), jnp.float32) * scale).astype(dt),
+        "w2": (jax.random.normal(ks[3], (E, F, D), jnp.float32) / math.sqrt(F)).astype(dt),
+    }
+    if cfg.num_shared_experts:
+        Fs = cfg.num_shared_experts * cfg.moe_d_ff
+        p["shared"] = {
+            "w1": dense_init(ks[4], D, Fs, dt),
+            "w3": dense_init(ks[5], D, Fs, dt),
+            "w2": dense_init(jax.random.fold_in(ks[4], 7), Fs, D, dt),
+        }
+    return p
+
+
+def capacity(cfg, group_size: int) -> int:
+    c = int(math.ceil(group_size * cfg.top_k * cfg.capacity_factor
+                      / cfg.num_experts))
+    return max(4, -(-c // 4) * 4)  # round up to a multiple of 4
+
+
+def moe_ffn(cfg, p, x, constrain=None):
+    """x: (B, S, D) -> (y, aux_loss).  ``constrain`` optionally applies
+    sharding constraints to the dispatched tensors (set by launch.sharding).
+    """
+    B, S, D = x.shape
+    E, K = cfg.num_experts, cfg.top_k
+    T = B * S
+    Sg = min(cfg.moe_group_size, T)
+    while T % Sg:  # largest group size <= moe_group_size dividing T
+        Sg -= 1
+    G = T // Sg
+    xg = x.reshape(G, Sg, D)
+
+    # router in f32 *accumulation* without materialising f32 tokens
+    # (a full astype(f32) of xg makes XLA hoist a stack-wide convert of
+    # the remat-saved carries; see layers.apply_norm)
+    logits = jnp.einsum("gsd,de->gse", xg, p["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, top_idx = jax.lax.top_k(probs, K)  # (G,Sg,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # Switch-style auxiliary load-balance loss.
+    me = jnp.mean(probs, axis=(0, 1))                                 # (E,)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_idx, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1))                                                  # (E,)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    C = capacity(cfg, Sg)
+    onehot = jax.nn.one_hot(top_idx, E, dtype=jnp.float32)            # (G,Sg,K,E)
+    # position of each (token, k) within its expert queue, counted over
+    # the flattened (Sg*K) order
+    flat = onehot.reshape(G, Sg * K, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                             # (G,Sg*K,E)
+    pos = pos.reshape(G, Sg, K, E)
+    in_cap = (pos < C).astype(jnp.float32) * onehot
+    pos_idx = jnp.sum(pos * onehot, axis=-1).astype(jnp.int32)        # (G,Sg,K)
+    cap_oh = jax.nn.one_hot(pos_idx, C, dtype=jnp.float32)            # (G,Sg,K,C)
+    # combine[g,s,e,c] = gate * kept * onehot(e) * onehot(c)
+    combine = jnp.einsum("gsk,gske,gskc->gsec",
+                         gate_vals, in_cap, cap_oh)                   # (G,Sg,E,C)
+    if constrain is not None:
+        combine = constrain(combine, "combine")
+    dispatch = (combine > 0).astype(x.dtype)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)                   # (G,E,C,D)
+    if constrain is not None:
+        xe = constrain(xe, "dispatched")
+    h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w3"])) * \
+        jnp.einsum("gecd,edf->gecf", xe, p["w1"])
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w2"])                     # (G,E,C,D)
+    if constrain is not None:
+        ye = constrain(ye, "dispatched")
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+
+    y = y.reshape(B, S, D)
+    if "shared" in p:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(x @ sp["w3"]) * (x @ sp["w1"])) @ sp["w2"]
+    return y, aux

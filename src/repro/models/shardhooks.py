@@ -1,0 +1,24 @@
+"""Activation-sharding hook.
+
+The launch layer installs a constraint function (built from the mesh +
+arch policy); the model calls ``constrain(x, kind)`` at the points where
+GSPMD propagation tends to lose the batch sharding (scan boundaries,
+attention chunking, MoE dispatch).  On CPU tests nothing is installed and
+these are identity.
+
+kinds: resid (B,S,D) | heads (B,S,H,d) | kv (B,S,Hkv,d) | logits (B,S,V)
+       ssm_inner (B,S,H,P) | ssm_state (B,H,N,P) | moe_dispatch (G,E,C,D)
+"""
+from __future__ import annotations
+
+_HOOK = [None]
+
+
+def set_activation_sharding(fn) -> None:
+    _HOOK[0] = fn
+
+
+def constrain(x, kind: str):
+    if _HOOK[0] is None:
+        return x
+    return _HOOK[0](x, kind)

@@ -1,0 +1,104 @@
+"""Optimizers (pure JAX, optax-free container): SGD (paper), momentum, Adam,
+plus gradient clipping and LR schedules."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any], tuple[Any, Any]]  # (grads, state, params)
+
+
+def sgd(lr) -> Optimizer:
+    """Plain SGD (paper's eq. (1), constant eta). Zero optimizer memory."""
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"]
+        eta = lr_fn(step)
+        new = jax.tree.map(lambda p, g: p - eta * g.astype(p.dtype),
+                           params, grads)
+        return new, {"step": step + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(jnp.zeros_like, params)}
+
+    def update(grads, state, params):
+        m = jax.tree.map(lambda m_, g: beta * m_ + g.astype(m_.dtype),
+                         state["m"], grads)
+        eta = lr_fn(state["step"])
+        new = jax.tree.map(lambda p, m_: p - eta * m_.astype(p.dtype),
+                           params, m)
+        return new, {"step": state["step"] + 1, "m": m}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"step": jnp.zeros((), jnp.int32),
+                "m": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                  params),
+                "v": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32),
+                                  params)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g.astype(jnp.float32),
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ +
+                         (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                         state["v"], grads)
+        eta = lr_fn(step)
+        sf = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** sf
+        bc2 = 1 - b2 ** sf
+
+        def upd(p, m_, v_):
+            mh = m_ / bc1
+            vh = v_ / bc2
+            return p - (eta * mh / (jnp.sqrt(vh) + eps)).astype(p.dtype)
+
+        return (jax.tree.map(upd, params, m, v),
+                {"step": step, "m": m, "v": v})
+
+    return Optimizer(init, update)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), norm
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int):
+    def lr(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = base_lr * s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup, warm, cos)
+    return lr
+
+
+def get_optimizer(name: str, lr) -> Optimizer:
+    return {"sgd": sgd, "momentum": momentum, "adam": adam}[name](lr)

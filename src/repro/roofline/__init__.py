@@ -1,0 +1,3 @@
+"""Roofline analysis from compiled dry-run artifacts."""
+from .analysis import (collective_bytes_from_hlo, roofline_terms,
+                       summarize_combo)  # noqa: F401

@@ -1,0 +1,81 @@
+"""Wireless channel model tests (Sec. II-C, eq. 4)."""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.channel import ChannelConfig, payload_bits, round_trip
+from repro.channel.model import simulate_link
+
+
+def test_link_budget_success_probability():
+    cfg = ChannelConfig()
+    p_up, bits_up = cfg.link_budget(up=True)
+    # analytic: mean SNR = P r^-a / (W_up N0); p = exp(-theta/meanSNR)
+    w_up = cfg.bandwidth_hz * cfg.num_channels / cfg.num_devices
+    p_tx = 10 ** ((cfg.p_up_dbm - 30) / 10)
+    n0 = 10 ** ((cfg.noise_dbm_hz - 30) / 10)
+    mean_snr = p_tx * cfg.distance_m ** -cfg.pathloss_exp / (w_up * n0)
+    assert math.isclose(p_up, math.exp(-cfg.theta / mean_snr), rel_tol=1e-9)
+    assert math.isclose(bits_up, cfg.tau_s * w_up * math.log2(1 + cfg.theta),
+                        rel_tol=1e-9)
+
+
+def test_empirical_success_rate_matches_analytic():
+    cfg = ChannelConfig()
+    p, bits = cfg.link_budget(up=True)
+    # payload of exactly 1 good slot: success within T_max ~ 1-(1-p)^T
+    lat, ok = simulate_link(jax.random.PRNGKey(0), cfg, bits, True, 4000)
+    want = 1 - (1 - p) ** cfg.t_max_slots
+    got = float(np.mean(np.asarray(ok)))
+    assert abs(got - want) < 0.02
+
+
+def test_fl_uplink_payload_exceeds_asymmetric_capacity():
+    """The paper's exact numbers put FL's uplink payload (32 x 12,544 =
+    401,408 bits) just above the T_max uplink capacity (400,000 bits) —
+    FL deterministically outages on the asymmetric uplink, which is the
+    letter's motivating regime (EXPERIMENTS.md discusses the boundary)."""
+    cfg = ChannelConfig()
+    up_bits, _ = payload_bits("fl", n_mod=12544, n_labels=10)
+    _, bits_per_slot = cfg.link_budget(up=True)
+    assert up_bits > bits_per_slot * cfg.t_max_slots
+    lat, ok = simulate_link(jax.random.PRNGKey(1), cfg, up_bits, True, 256)
+    assert not bool(np.any(np.asarray(ok)))
+
+
+def test_fd_payload_much_smaller_than_fl():
+    up_fl, dn_fl = payload_bits("fl", n_mod=12544, n_labels=10)
+    up_fd, dn_fd = payload_bits("fd", n_mod=12544, n_labels=10)
+    assert up_fd == 32 * 10 * 10
+    assert up_fl / up_fd > 100  # orders of magnitude (paper: "up to 42.4x")
+
+
+def test_fld_first_round_includes_seed_samples():
+    up1, dn1 = payload_bits("mix2fld", n_mod=12544, n_labels=10,
+                            sample_bits=6272, n_seed=10, first_round=True)
+    up2, dn2 = payload_bits("mix2fld", n_mod=12544, n_labels=10,
+                            sample_bits=6272, n_seed=10, first_round=False)
+    assert up1 - up2 == 6272 * 10
+    assert dn1 == dn2 == 32 * 12544  # downlink carries the model (FL-style)
+
+
+def test_round_trip_masks_and_latency():
+    cfg = ChannelConfig(num_devices=8)
+    out = round_trip(jax.random.PRNGKey(2), cfg, 3200, 3200)
+    assert out["up_ok"].shape == (8,)
+    assert out["latency_s"] <= 2 * cfg.t_max_slots * cfg.tau_s + 1e-9
+    assert out["latency_s"] > 0
+
+
+def test_downlink_faster_than_uplink_under_asymmetry():
+    """P_dn = 40 dBm + full bandwidth: downlink latency for the model
+    payload is far below the uplink's for the same payload."""
+    cfg = ChannelConfig()
+    bits = 32 * 12544
+    lat_up, ok_up = simulate_link(jax.random.PRNGKey(3), cfg, bits, True, 500)
+    lat_dn, ok_dn = simulate_link(jax.random.PRNGKey(4), cfg, bits, False, 500)
+    assert bool(np.all(np.asarray(ok_dn)))
+    assert float(np.mean(np.asarray(lat_dn))) < \
+        float(np.mean(np.asarray(lat_up)))

@@ -1,0 +1,45 @@
+"""Checkpoint save/restore round-trips."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.configs import get_config
+from repro.models.transformer import init_params
+
+
+def test_roundtrip(tmp_path):
+    cfg = get_config("qwen2-0.5b").smoke()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 3, params)
+    assert ckpt.latest_step(d) == 3
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    restored = ckpt.restore(d, zeros)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_pointer_advances(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(4.0), "b": {"c": jnp.ones((2, 2))}}
+    ckpt.save(d, 1, tree)
+    tree2 = {"a": jnp.arange(4.0) * 2, "b": {"c": jnp.zeros((2, 2))}}
+    ckpt.save(d, 2, tree2)
+    out = ckpt.restore(d, jax.tree.map(jnp.zeros_like, tree))
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.asarray(tree2["a"]))
+
+
+def test_shape_mismatch_raises(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"a": jnp.ones((3,))})
+    with pytest.raises(ValueError):
+        ckpt.restore(d, {"a": jnp.ones((4,))})
+
+
+def test_missing_checkpoint_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(tmp_path / "nope"), {"a": jnp.ones(1)})

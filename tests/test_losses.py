@@ -1,0 +1,78 @@
+"""Unit tests for losses, per-label output averaging, vocab bucketing."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.losses import cross_entropy, fd_loss, kd_regularizer
+from repro.core.outputs import (bucket_log_probs, bucketize_tokens,
+                                label_averaged_outputs)
+
+
+def test_cross_entropy_matches_manual():
+    logits = jnp.array([[2.0, 0.0, -1.0], [0.5, 0.5, 0.5]])
+    labels = jnp.array([0, 2])
+    lp = jax.nn.log_softmax(logits)
+    want = -(lp[0, 0] + lp[1, 2]) / 2
+    np.testing.assert_allclose(float(cross_entropy(logits, labels)),
+                               float(want), rtol=1e-6)
+
+
+def test_cross_entropy_soft_equals_hard_for_onehot():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (5, 7))
+    labels = jax.random.randint(jax.random.PRNGKey(1), (5,), 0, 7)
+    hard = cross_entropy(logits, labels)
+    soft = cross_entropy(logits, jax.nn.one_hot(labels, 7))
+    np.testing.assert_allclose(float(hard), float(soft), rtol=1e-6)
+
+
+def test_kd_regularizer_zero_gap_is_entropy():
+    """When F == G, psi equals the entropy of G (its minimum over F)."""
+    logits = jax.random.normal(jax.random.PRNGKey(2), (4, 6))
+    g = jax.nn.softmax(logits)
+    psi = kd_regularizer(logits, g)
+    ent = -jnp.mean(jnp.sum(g * jnp.log(g), axis=-1))
+    np.testing.assert_allclose(float(psi), float(ent), rtol=1e-5)
+
+    # and any other F strictly increases psi
+    other = jax.random.normal(jax.random.PRNGKey(3), (4, 6))
+    assert float(kd_regularizer(other, g)) > float(psi)
+
+
+def test_fd_loss_combines():
+    logits = jax.random.normal(jax.random.PRNGKey(4), (8, 10))
+    labels = jax.random.randint(jax.random.PRNGKey(5), (8,), 0, 10)
+    gout = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(6), (10, 10)))
+    total, (phi, psi) = fd_loss(logits, labels, gout, beta=0.5)
+    np.testing.assert_allclose(float(total), float(phi + 0.5 * psi), rtol=1e-6)
+    g = jax.grad(lambda l: fd_loss(l, labels, gout, 0.5)[0])(logits)
+    assert bool(jnp.all(jnp.isfinite(g)))
+
+
+def test_label_averaged_outputs_eq2():
+    probs = jnp.array([[0.9, 0.1], [0.2, 0.8], [0.6, 0.4]])
+    labels = jnp.array([0, 1, 0])
+    favg, cnt = label_averaged_outputs(probs, labels, 2)
+    np.testing.assert_allclose(np.asarray(favg[0]), [0.75, 0.25], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(favg[1]), [0.2, 0.8], rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(cnt), [2, 1])
+
+
+def test_bucket_log_probs_normalised():
+    for v in (64, 100, 1000):
+        logits = jax.random.normal(jax.random.PRNGKey(7), (3, v)) * 3
+        blp = bucket_log_probs(logits, 16)
+        assert blp.shape == (3, 16)
+        np.testing.assert_allclose(np.asarray(jnp.sum(jnp.exp(blp), -1)),
+                                   1.0, rtol=1e-5)
+
+
+def test_bucket_log_probs_consistent_with_token_probs():
+    v, nb = 128, 16
+    logits = jax.random.normal(jax.random.PRNGKey(8), (v,))
+    p = jax.nn.softmax(logits)
+    buckets = np.asarray(bucketize_tokens(jnp.arange(v), v, nb))
+    want = np.zeros(nb)
+    for t in range(v):
+        want[buckets[t]] += float(p[t])
+    got = np.exp(np.asarray(bucket_log_probs(logits, nb)))
+    np.testing.assert_allclose(got, want, rtol=1e-5)

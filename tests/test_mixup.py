@@ -1,0 +1,116 @@
+"""Property tests (hypothesis) for Mixup / inverse-Mixup (Prop. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.mixup import (circulant, inverse_mixup, inverse_mixup_n,
+                              inverse_mixup_ratios, make_mixup_batch,
+                              mixup_pairs, pair_symmetric)
+from repro.core.privacy import sample_privacy
+
+
+@st.composite
+def mixing_ratios(draw, n):
+    """Well-conditioned ratio vectors on the simplex (away from the
+    singular uniform point)."""
+    raw = [draw(st.floats(0.05, 1.0)) for _ in range(n)]
+    lams = np.array(raw) / np.sum(raw)
+    cond = np.linalg.cond(np.asarray(circulant(jnp.asarray(lams))))
+    if not np.isfinite(cond) or cond > 1e3:
+        raw[0] += 1.0
+        lams = np.array(raw) / np.sum(raw)
+    return lams
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 5), st.data())
+def test_prop1_inverse_is_matrix_inverse(n, data):
+    lams = data.draw(mixing_ratios(n))
+    C = circulant(jnp.asarray(lams, jnp.float32))
+    R = inverse_mixup_ratios(jnp.asarray(lams, jnp.float32))
+    np.testing.assert_allclose(np.asarray(R @ C), np.eye(n), atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.01, 0.45))
+def test_inverse_mixup_recovers_hard_labels(lam):
+    a = jnp.array([1.0, 0.0])
+    b = jnp.array([0.0, 1.0])
+    mixed_a = lam * a + (1 - lam) * b
+    mixed_b = lam * b + (1 - lam) * a
+    s1, s2 = inverse_mixup(mixed_a, mixed_b, lam)
+    np.testing.assert_allclose(np.asarray(s1), [1.0, 0.0], atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), [0.0, 1.0], atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.05, 0.45), st.integers(0, 1000))
+def test_inverse_mixup_on_samples_not_equal_raw(lam, seed):
+    """Inversely mixed samples recover the LABEL but (for cross-device
+    pairs with different raw content) not the raw SAMPLE."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    xa1, xa2 = jax.random.normal(k1, (8,)), jax.random.normal(k2, (8,))
+    xb1, xb2 = jax.random.normal(k3, (8,)), jax.random.normal(k4, (8,))
+    # device a mixes (class0, class1); device b mixes (class1, class0)
+    ma = lam * xa1 + (1 - lam) * xa2
+    mb = lam * xb1 + (1 - lam) * xb2
+    s1, s2 = inverse_mixup(ma, mb, lam)
+    for s in (s1, s2):
+        for raw in (xa1, xa2, xb1, xb2):
+            assert float(jnp.linalg.norm(s - raw)) > 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 6), st.integers(0, 99))
+def test_inverse_mixup_n_unmixes_cyclic_stack(n, seed):
+    lams = np.linspace(1, 2, n)
+    lams /= lams.sum()
+    key = jax.random.PRNGKey(seed)
+    raw = jax.random.normal(key, (n, 5))
+    C = np.asarray(circulant(jnp.asarray(lams, jnp.float32)))
+    mixed = jnp.asarray(C) @ raw
+    rec = inverse_mixup_n(mixed, jnp.asarray(lams, jnp.float32))
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(raw), atol=1e-2)
+
+
+def test_mixup_pairs_have_different_labels():
+    key = jax.random.PRNGKey(0)
+    labels = jax.random.randint(key, (200,), 0, 10)
+    i, j = mixup_pairs(key, labels, 64, 10)
+    assert bool(jnp.all(labels[i] != labels[j]))
+
+
+def test_make_mixup_batch_soft_labels_sum_to_one():
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (50, 4))
+    y = jax.random.randint(key, (50,), 0, 10)
+    i, j = mixup_pairs(key, y, 20, 10)
+    mixed, soft, (mi, ma) = make_mixup_batch(x, y, i, j, 0.3, 10)
+    np.testing.assert_allclose(np.asarray(jnp.sum(soft, -1)), 1.0, atol=1e-5)
+    assert mixed.shape == (20, 4)
+
+
+def test_pair_symmetric_matches_reversed_pairs_across_devices():
+    minor = np.array([0, 1, 2, 1, 0])
+    major = np.array([1, 0, 3, 0, 1])
+    dev = np.array([0, 1, 0, 0, 0])
+    pairs = pair_symmetric(minor, major, dev)
+    for i, j in pairs:
+        assert minor[i] == major[j] and major[i] == minor[j]
+        assert dev[i] != dev[j]
+
+
+def test_mixup_improves_sample_privacy():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (40, 16))
+    y = jnp.concatenate([jnp.zeros(20, jnp.int32), jnp.ones(20, jnp.int32)])
+    i, j = mixup_pairs(key, y, 16, 2)
+    lo, _, _ = make_mixup_batch(x, y, i, j, 0.01, 2)
+    hi, _, _ = make_mixup_batch(x, y, i, j, 0.4, 2)
+    raws = jnp.stack([x[i], x[j]], axis=1)
+    # lambda closer to 0.5 mixes more evenly => more private (Table II)
+    assert float(jnp.mean(sample_privacy(hi, raws))) > \
+        float(jnp.mean(sample_privacy(lo, raws)))

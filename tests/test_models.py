@@ -1,0 +1,151 @@
+"""Per-architecture smoke tests (reduced same-family variants): one
+forward + one train step on CPU, asserting shapes and finiteness; plus
+full-vs-incremental decode parity for every cached family."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.launch.steps import make_train_step
+from repro.models.cnn import CNN
+from repro.models.transformer import Transformer, count_params
+
+ASSIGNED = [a for a in list_archs(assigned_only=True)]
+
+
+def _smoke_batch(cfg, key, B=2, S=32, decode=False):
+    T = 1 if decode else S
+    batch = {}
+    if cfg.embed_input:
+        batch["embeds"] = jax.random.normal(key, (B, T, cfg.d_model)) * 0.1
+        if not decode:
+            batch["labels"] = jax.random.randint(
+                jax.random.fold_in(key, 9), (B, T), 0, cfg.vocab_size)
+    else:
+        batch["tokens"] = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    if cfg.cross_attention:
+        batch["enc_out"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (B, cfg.encoder_seq, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).smoke()
+    assert cfg.num_layers == 2 and cfg.d_model <= 512
+    assert cfg.num_experts <= 4
+    m = Transformer(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    logits, aux, _ = m.apply(params, _smoke_batch(cfg, jax.random.PRNGKey(1)))
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_smoke_train_step_reduces_loss(arch):
+    cfg = dataclasses.replace(get_config(arch).smoke(), learning_rate=0.05)
+    m = Transformer(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(cfg))
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1), B=4, S=32)
+    batch["gout"] = jnp.full((cfg.fd_buckets, cfg.fd_buckets),
+                             1.0 / cfg.fd_buckets)
+    params, m0 = step(params, batch)
+    for _ in range(8):
+        params, mN = step(params, batch)
+    assert bool(jnp.isfinite(mN["loss"]))
+    assert float(mN["loss"]) < float(m0["loss"])  # memorise one batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_decode_matches_full_forward(arch):
+    cfg = get_config(arch).smoke()
+    m = Transformer(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1), B=B, S=S)
+    full, _, _ = m.apply(params, batch)
+    cache = m.init_cache(B, S)
+    outs = []
+    for t in range(S):
+        db = {}
+        if cfg.embed_input:
+            db["embeds"] = batch["embeds"][:, t:t + 1]
+        else:
+            db["tokens"] = batch["tokens"][:, t:t + 1]
+        if cfg.cross_attention:
+            db["enc_out"] = batch["enc_out"]
+        lg, _, cache = m.apply(params, db, cache=cache)
+        outs.append(lg[:, 0])
+    inc = jnp.stack(outs, axis=1)
+    rel = float(jnp.max(jnp.abs(full - inc))) / \
+        max(float(jnp.max(jnp.abs(full))), 1e-9)
+    assert rel < 5e-3, f"{arch}: decode parity rel err {rel}"
+
+
+@pytest.mark.parametrize("arch", ["h2o-danube-3-4b", "mamba2-370m",
+                                  "zamba2-2.7b", "deepseek-v2-236b"])
+def test_prefill_then_decode_continues_correctly(arch):
+    cfg = get_config(arch).smoke()
+    m = Transformer(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 1, 160  # > smoke sliding window (128): exercises ring caches
+    batch = _smoke_batch(cfg, jax.random.PRNGKey(1), B=B, S=S + 1)
+    full, _, _ = m.apply(params, batch)
+    cache = m.init_cache(B, S + 1)
+    pre = {k: (v[:, :S] if k in ("tokens", "embeds") else v)
+           for k, v in batch.items()}
+    last = {k: (v[:, S:S + 1] if k in ("tokens", "embeds") else v)
+            for k, v in batch.items()}
+    lg_pre, _, cache = m.apply(params, pre, cache=cache)
+    lg_dec, _, _ = m.apply(params, last, cache=cache)
+    scale = float(jnp.max(jnp.abs(full)))
+    assert float(jnp.max(jnp.abs(lg_pre - full[:, :S]))) / scale < 5e-3
+    assert float(jnp.max(jnp.abs(lg_dec[:, 0] - full[:, S]))) / scale < 5e-3
+
+
+def test_cnn_param_count_close_to_paper():
+    model = CNN()
+    params = model.init(jax.random.PRNGKey(0))
+    n = model.num_params(params)
+    assert abs(n - 12544) < 200, n  # paper: N_mod = 12,544 (shapes unpublished)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 28, 28, 1))
+    logits = model.apply(params, x)
+    assert logits.shape == (4, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_count_params_matches_leaf_sum():
+    cfg = get_config("qwen2-0.5b").smoke()
+    m = Transformer(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    assert count_params(params) == sum(x.size for x in jax.tree.leaves(params))
+
+
+def test_int8_kv_cache_decode_parity():
+    """Beyond-paper: int8 KV cache (halves the decode memory roofline
+    term) stays within quantisation tolerance of the exact forward."""
+    cfg = dataclasses.replace(get_config("qwen2-0.5b").smoke(),
+                              kv_quant=True)
+    m = Transformer(cfg)
+    params = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                              cfg.vocab_size)
+    full, _, _ = m.apply(params, {"tokens": toks})
+    cache = m.init_cache(B, S)
+    assert cache["layers"]["k"].dtype == jnp.int8
+    outs = []
+    for t in range(S):
+        lg, _, cache = m.apply(params, {"tokens": toks[:, t:t + 1]},
+                               cache=cache)
+        outs.append(lg[:, 0])
+    inc = jnp.stack(outs, axis=1)
+    rel = float(jnp.max(jnp.abs(full - inc))) / \
+        max(float(jnp.max(jnp.abs(full))), 1e-9)
+    assert rel < 0.05, rel

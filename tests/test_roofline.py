@@ -1,0 +1,92 @@
+"""Unit tests for the loop-aware HLO collective analyzer."""
+import textwrap
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.roofline.analysis import (_crosses_pods, _shape_bytes,
+                                     analytic_flops,
+                                     collective_bytes_from_hlo,
+                                     dominant_term, roofline_terms)
+
+HLO = textwrap.dedent("""
+    HloModule test
+
+    %inner_body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+      %ag1 = f32[64,4]{1,0} all-gather(%x), replica_groups=[4,4]<=[16]
+      ROOT %t = (s32[], f32[8]) tuple(%i, %y)
+    }
+
+    %outer_body (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+      %ar1 = f32[32]{0} all-reduce(%g), replica_groups={{0,1},{2,3}}
+      %w = (s32[], f32[8]) while(%t0), condition=%cond, body=%inner_body, backend_config={"known_trip_count":{"n":"3"}}
+      ROOT %t2 = (s32[], f32[8]) tuple(%i, %y)
+    }
+
+    ENTRY %main (a: f32[8]) -> f32[8] {
+      %big = bf16[128,128]{1,0} all-gather(%a), replica_groups=[2,8]<=[16]
+      %w0 = (s32[], f32[8]) while(%t), condition=%c, body=%outer_body, backend_config={"known_trip_count":{"n":"5"}}
+      ROOT %r = f32[8] add(%a, %a)
+    }
+""")
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[64,4]") == 64 * 4 * 4
+    assert _shape_bytes("bf16[128,128]") == 128 * 128 * 2
+    assert _shape_bytes("(f32[2,2], bf16[4])") == 16 + 8
+
+
+def test_loop_aware_collective_totals():
+    out = collective_bytes_from_hlo(HLO)
+    # entry: 1 bf16 gather (32768 B)
+    # outer x5: all-reduce 128 B + inner x3: all-gather 1024 B
+    want_ag = 128 * 128 * 2 + 5 * 3 * 64 * 4 * 4
+    want_ar = 5 * 32 * 4
+    assert out["all-gather"] == want_ag
+    assert out["all-reduce"] == want_ar
+    assert out["total"] == want_ag + want_ar
+    assert out["counts"]["all-gather"] == 1 + 15
+    assert out["counts"]["all-reduce"] == 5
+
+
+def test_cross_pod_classification():
+    # iota groups [4,4]<=[16]: rows 0-3,4-7,... with pod_size 8: intra
+    assert not _crosses_pods(
+        "all-gather(%x), replica_groups=[4,4]<=[16]", 8)
+    # [2,8]<=[16]: rows 0..7 / 8..15 with pod_size 4: crosses
+    assert _crosses_pods(
+        "all-gather(%x), replica_groups=[2,8]<=[16]", 4)
+    # explicit groups
+    assert _crosses_pods("all-reduce(%g), replica_groups={{0,9}}", 8)
+    assert not _crosses_pods("all-reduce(%g), replica_groups={{0,1},{8,9}}",
+                             8)
+    # collective-permute pairs
+    assert _crosses_pods("collective-permute(%x), source_target_pairs={{0,8}}",
+                         8)
+    assert not _crosses_pods(
+        "collective-permute(%x), source_target_pairs={{0,1},{8,9}}", 8)
+
+
+def test_cross_pod_counted_through_loops():
+    out = collective_bytes_from_hlo(HLO, pod_size=4)
+    # entry bf16 gather crosses pods (groups of 8 > pod 4); inner f32
+    # gathers have groups of 4 spanning ids 0-3 (intra for pod 4? rows are
+    # 0..3 -> intra); outer all-reduce groups {0,1},{2,3} intra
+    assert out["cross_pod"] == 128 * 128 * 2
+
+
+def test_roofline_terms_and_dominance():
+    t = roofline_terms(1e12, 1e9, 1e8, 1, 197e12, 819e9, 50e9)
+    assert dominant_term(t) == "compute"
+    t2 = roofline_terms(1e9, 1e9, 1e12, 1, 197e12, 819e9, 50e9)
+    assert dominant_term(t2) == "collective"
+
+
+def test_analytic_flops_scales_with_arch():
+    shape = INPUT_SHAPES["train_4k"]
+    small = analytic_flops(get_config("qwen2-0.5b"), shape, 500_000_000)
+    big = analytic_flops(get_config("qwen2-vl-72b"), shape, 72_000_000_000)
+    assert big > 50 * small / 500 * 72  # grows at least with N
+    # decode flops are ~tokens-per-step smaller
+    dec = analytic_flops(get_config("qwen2-0.5b"),
+                         INPUT_SHAPES["decode_32k"], 500_000_000)
+    assert dec < small / 1000

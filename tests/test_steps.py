@@ -1,0 +1,148 @@
+"""Launch-layer step tests on CPU (1-device mesh, smoke configs):
+train/prefill/decode jit + the multi-pod federated sync steps."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.steps import (make_decode_step, make_favg_step,
+                                make_fd_sync_step, make_fl_sync_step,
+                                make_local_train_step, make_prefill_step,
+                                make_train_step)
+from repro.models import kvcache
+from repro.models.transformer import Transformer, init_params
+
+
+def _cfg(arch="qwen2-0.5b", **kw):
+    return dataclasses.replace(get_config(arch).smoke(), **kw)
+
+
+def test_prefill_then_decode_steps_consistent():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 2, 24
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S + 1), 0,
+                              cfg.vocab_size)
+    prefill = jax.jit(make_prefill_step(cfg, S + 1))
+    decode = jax.jit(make_decode_step(cfg))
+    logits_last, cache = prefill(params, {"tokens": toks[:, :S]})
+    assert logits_last.shape == (B, cfg.vocab_size)
+    nxt, cache2 = decode(params, {"tokens": toks[:, S:S + 1],
+                                  "cache": cache})
+    assert nxt.shape == (B,)
+    assert int(cache2["pos"]) == S + 1
+    # greedy next token from prefill logits == decode applied at position S?
+    # (decode consumes the TRUE token; just check decode output is finite
+    # and cache advanced)
+    m = Transformer(cfg)
+    full, _, _ = m.apply(params, {"tokens": toks[:, :S]})
+    np.testing.assert_allclose(np.asarray(logits_last),
+                               np.asarray(full[:, -1]), rtol=2e-4, atol=2e-4)
+
+
+def test_grad_accum_matches_single_batch():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (4, 32), 0,
+                                          cfg.vocab_size)}
+    s1 = jax.jit(make_train_step(cfg, grad_accum=1))
+    s2 = jax.jit(make_train_step(cfg, grad_accum=2))
+    p1, m1 = s1(params, batch)
+    p2, m2 = s2(params, batch)
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-5)
+
+
+def test_fd_sync_step_converts_and_broadcasts():
+    cfg = _cfg()
+    n_pods = 2
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pod_in = jax.tree.map(
+        lambda p: jnp.broadcast_to(p[None], (n_pods,) + p.shape), params)
+    favg = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(2),
+                                            (n_pods, cfg.fd_buckets,
+                                             cfg.fd_buckets)), axis=-1)
+    seed_batch = {"tokens": jax.random.randint(jax.random.PRNGKey(3),
+                                               (4, 32), 0, cfg.vocab_size)}
+    fd_sync = jax.jit(make_fd_sync_step(cfg, n_pods, ks_iters=2))
+    pod_params, gout = fd_sync(pod_in, favg, seed_batch)
+    np.testing.assert_allclose(np.asarray(gout),
+                               np.asarray(jnp.mean(favg, 0)), rtol=1e-6)
+    for leaf in jax.tree.leaves(pod_params):
+        assert leaf.shape[0] == n_pods
+        np.testing.assert_allclose(np.asarray(leaf[0], np.float32),
+                                   np.asarray(leaf[1], np.float32))
+    # conversion actually moved the weights
+    moved = any(
+        not np.allclose(np.asarray(a[0], np.float32),
+                        np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(pod_params), jax.tree.leaves(params)))
+    assert moved
+
+
+def test_fl_sync_step_averages_pods():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pod_params = jax.tree.map(
+        lambda p: jnp.stack([p, 3.0 * p.astype(jnp.float32)]).astype(p.dtype),
+        params)
+    fl_sync = jax.jit(make_fl_sync_step(cfg, 2))
+    out = fl_sync(pod_params)
+    for o, p in zip(jax.tree.leaves(out), jax.tree.leaves(params)):
+        np.testing.assert_allclose(np.asarray(o[0], np.float32),
+                                   np.asarray(2.0 * p, np.float32),
+                                   rtol=2e-2, atol=1e-4)
+        np.testing.assert_allclose(np.asarray(o[0], np.float32),
+                                   np.asarray(o[1], np.float32))
+
+
+def test_local_train_step_keeps_pods_independent():
+    cfg = _cfg()
+    n_pods = 2
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    pod_params = jax.tree.map(
+        lambda p: jnp.broadcast_to(p, (n_pods,) + p.shape), params)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (n_pods, 4, 32), 0,
+                              cfg.vocab_size)
+    step = jax.jit(make_local_train_step(cfg, n_pods))
+    new_pp, metrics = step(pod_params, {"tokens": toks})
+    # different pod data => different pod params after the local step
+    diff = any(
+        not np.allclose(np.asarray(l[0], np.float32),
+                        np.asarray(l[1], np.float32))
+        for l in jax.tree.leaves(new_pp))
+    assert diff
+    assert metrics["loss"].shape == (n_pods,)
+
+
+def test_favg_step_rows_are_distributions():
+    cfg = _cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    favg = jax.jit(make_favg_step(cfg))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 64), 0,
+                              cfg.vocab_size)
+    table = favg(params, {"tokens": toks})
+    assert table.shape == (cfg.fd_buckets, cfg.fd_buckets)
+    sums = np.asarray(table.sum(-1))
+    nz = sums > 0
+    np.testing.assert_allclose(sums[nz], 1.0, atol=1e-4)
+
+
+def test_cache_specs_match_init_cache():
+    for arch in ("qwen2-0.5b", "mamba2-370m", "zamba2-2.7b",
+                 "whisper-medium", "deepseek-v2-236b"):
+        cfg = get_config(arch).smoke()
+        specs = kvcache.cache_specs(cfg, 2, 64)
+        cache = kvcache.init_cache(cfg, 2, 64)
+        s_flat = jax.tree.leaves(specs)
+        c_flat = jax.tree.leaves(cache)
+        assert len(s_flat) == len(c_flat)
+        for s, c in zip(s_flat, c_flat):
+            assert tuple(s.shape) == tuple(c.shape)
+            assert s.dtype == c.dtype
