@@ -1,14 +1,86 @@
 """Fig. 3 reproduction: Mix2FLD test-accuracy distribution vs number of
-devices (10 vs 50 in the paper; reduced counts documented)."""
+devices (10 vs 50 in the paper; reduced counts documented) — plus the
+seed-pipeline scaling benchmark: batched device-axis ``collect_seeds``
+vs the pre-batching per-device/per-sample loop reference."""
 from __future__ import annotations
 
+import time
+
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.channel import ChannelConfig
+from repro.core.mixup import (inverse_mixup, make_mixup_batch, mixup_pairs,
+                              pair_symmetric)
 from repro.core.protocols import FederatedConfig, FederatedTrainer
 from repro.models.cnn import CNN
 
 from .common import protocol_dataset, save_result
+
+
+def _collect_seeds_loop(fc, dev_x, dev_y, key):
+    """Pre-batching reference: per-device Python loop + one-sample-at-a-
+    time inverse-Mixup (kept here so the speedup stays measurable)."""
+    D, C = fc.num_devices, fc.num_classes
+    mixed, minors, majors, dev_ids = [], [], [], []
+    for d in range(D):
+        k = jax.random.fold_in(key, 1000 + d)
+        idx_i, idx_j = mixup_pairs(k, dev_y[d], fc.n_seed, C)
+        mx, _, (mi, ma) = make_mixup_batch(
+            dev_x[d], dev_y[d], idx_i, idx_j, fc.lam, C)
+        mixed.append(mx)
+        minors.append(mi)
+        majors.append(ma)
+        dev_ids.append(np.full(fc.n_seed, d))
+    mixed = jnp.concatenate(mixed)
+    minors = jnp.concatenate(minors)
+    majors = jnp.concatenate(majors)
+    pairs = pair_symmetric(np.asarray(minors), np.asarray(majors),
+                           np.concatenate(dev_ids))
+    inv_x, inv_y = [], []
+    want_total = fc.n_inverse * D
+    while len(inv_x) < want_total and len(pairs):
+        for (i, j) in pairs:
+            s1, s2 = inverse_mixup(mixed[i], mixed[j], fc.lam)
+            inv_x.extend([s1, s2])
+            inv_y.extend([int(minors[i]), int(minors[j])])
+            if len(inv_x) >= want_total:
+                break
+    return jnp.stack(inv_x) if inv_x else mixed
+
+
+def bench_seed_pipeline(num_devices: int = 50, per_device: int = 100,
+                        n_seed: int = 10):
+    """Wall-clock of round-1 seed collection, batched vs loop, at D=50."""
+    dev_x, dev_y, _, _ = protocol_dataset(num_devices=num_devices,
+                                          per_device=per_device)
+    dev_x, dev_y = jnp.asarray(dev_x), jnp.asarray(dev_y)
+    fc = FederatedConfig(protocol="mix2fld", num_devices=num_devices,
+                         n_seed=n_seed, n_inverse=2 * n_seed)
+    tr = FederatedTrainer(CNN(), fc)
+    key = jax.random.PRNGKey(3)
+
+    # warm up both paths so neither number includes one-time trace/compile
+    jax.block_until_ready(tr.collect_seeds(dev_x, dev_y, key)["train_x"])
+    jax.block_until_ready(_collect_seeds_loop(fc, dev_x, dev_y, key))
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(tr.collect_seeds(dev_x, dev_y, key)["train_x"])
+    t_batched = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    jax.block_until_ready(_collect_seeds_loop(fc, dev_x, dev_y, key))
+    t_loop = time.perf_counter() - t0
+
+    speedup = t_loop / max(t_batched, 1e-9)
+    row = (f"seed_pipeline/D{num_devices},"
+           f"{t_batched*1e6:.0f},loop_us={t_loop*1e6:.0f};"
+           f"speedup={speedup:.1f}x")
+    print(row)
+    save_result("seed_pipeline", {"batched_s": t_batched, "loop_s": t_loop,
+                                  "speedup": speedup, "D": num_devices})
+    return row
 
 
 def run(device_counts=(5, 10, 20), seeds=(0, 1, 2), iid=True,
@@ -35,9 +107,9 @@ def run(device_counts=(5, 10, 20), seeds=(0, 1, 2), iid=True,
 
 
 def main():
+    rows = [bench_seed_pipeline()]
     out = run(device_counts=(5, 10), seeds=(0, 1), local_iters=60,
               max_rounds=3)
-    rows = []
     for nd, v in out.items():
         rows.append(f"fig3/devices{nd},0,mean={v['mean']:.4f};"
                     f"var={v['var']:.6f}")

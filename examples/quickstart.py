@@ -7,6 +7,10 @@ Shows the whole pipeline of Algorithm 1:
      G_out, and runs the output-to-model conversion (eq. 5),
   3. devices download the converted global model (FL-style downlink).
 
+Seed collection (steps 1-2) is fully batched over the device axis and
+runs the inverse-Mixup through the Pallas kernel — architecture and
+D-scaling knobs are documented in docs/seed_pipeline.md.
+
 Run: PYTHONPATH=src python examples/quickstart.py
 """
 import jax

@@ -65,12 +65,22 @@ def round_trip(key, cfg: ChannelConfig, up_bits: float, dn_bits: float):
     (multicast: one transmission, every device must decode it).
 
     Returns dict with per-device success masks and the round's latency in
-    seconds: tau * (max successful T_up + max T_dn), as the server waits
-    for the slowest non-outage device (T_max bounds stragglers).
+    seconds: tau * (max successful T_up + max successful T_dn), as the
+    server waits for the slowest *non-outage* device — outage links are
+    pinned at t_max_slots and must not inflate the round (they contribute
+    nothing to the update).  Only when every link of a direction outages
+    does that direction cost the full T_max window.
     """
     ku, kd = jax.random.split(key)
     t_up, ok_up = simulate_link(ku, cfg, up_bits, True, cfg.num_devices)
     t_dn, ok_dn = simulate_link(kd, cfg, dn_bits, False, cfg.num_devices)
-    latency_s = cfg.tau_s * (float(jnp.max(t_up)) + float(jnp.max(t_dn)))
+
+    def _slowest_ok(t, ok):
+        return float(jnp.where(jnp.any(ok),
+                               jnp.max(jnp.where(ok, t, 0)),
+                               cfg.t_max_slots))
+
+    latency_s = cfg.tau_s * (_slowest_ok(t_up, ok_up) +
+                             _slowest_ok(t_dn, ok_dn))
     return {"up_ok": ok_up, "dn_ok": ok_dn, "t_up": t_up, "t_dn": t_dn,
             "latency_s": latency_s}

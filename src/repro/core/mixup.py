@@ -70,35 +70,81 @@ def make_mixup_batch(x, y, idx_i, idx_j, lam: float, num_classes: int):
 # ---------------------------------------------------------------------------
 
 def pair_symmetric(minor, major, device_ids):
-    """Greedy pairing of mixed samples with *symmetric* labels from
+    """Vectorized pairing of mixed samples with *symmetric* labels from
     *different* devices: (a, b) pairs with (b, a), d != d'.
 
-    Pure-numpy helper (host-side, runs once per training job on the
-    collected seed set).  Returns a list of (idx1, idx2).
+    Sort-based over the whole upload set (no per-sample Python loop):
+    uploads are keyed by their unordered label pair, split by orientation
+    (a < b vs a > b), and rank-aligned within each key group.  Sorting the
+    forward side by device ascending and the reverse side descending
+    minimises same-device alignments; the (typically few) leftovers —
+    rank misalignments and same-device drops — are re-matched by a small
+    greedy repair pass, so the result is maximal in the same sense as a
+    plain greedy matcher.  Returns an (M, 2) int array of index pairs.
     """
     import numpy as np
 
     minor = np.asarray(minor)
     major = np.asarray(major)
-    device_ids = np.asarray(device_ids)
-    by_pair: dict[tuple[int, int], list[int]] = {}
-    for idx, (a, b) in enumerate(zip(minor.tolist(), major.tolist())):
-        by_pair.setdefault((a, b), []).append(idx)
-    pairs = []
-    used = set()
-    for (a, b), lst in by_pair.items():
-        partners = by_pair.get((b, a), [])
-        for i in lst:
-            if i in used:
-                continue
-            for j in partners:
-                if j in used or j == i or device_ids[j] == device_ids[i]:
-                    continue
-                pairs.append((i, j))
-                used.add(i)
-                used.add(j)
+    device_ids = np.asarray(device_ids, np.int64)  # signed: `-dev` sort key
+    n = minor.shape[0]
+    empty = np.zeros((0, 2), np.int64)
+    if n == 0:
+        return empty
+    valid = minor != major
+    lo = np.minimum(minor, major)
+    hi = np.maximum(minor, major)
+    base = int(hi.max()) + 1 if n else 1
+    key = lo.astype(np.int64) * base + hi
+    idx = np.arange(n)
+    f = idx[valid & (minor < major)]
+    r = idx[valid & (minor > major)]
+    if f.size == 0 or r.size == 0:
+        return empty
+    f = f[np.lexsort((device_ids[f], key[f]))]
+    r = r[np.lexsort((-device_ids[r], key[r]))]
+
+    def _ranks(order):  # position within each run of equal keys
+        k = key[order]
+        starts = np.flatnonzero(np.r_[True, k[1:] != k[:-1]])
+        return np.arange(k.size) - np.repeat(
+            starts, np.diff(np.r_[starts, k.size]))
+
+    rmax = n + 1
+    code_f = key[f] * rmax + _ranks(f)
+    code_r = key[r] * rmax + _ranks(r)   # sorted by construction
+    pos = np.searchsorted(code_r, code_f)
+    pos_c = np.minimum(pos, code_r.size - 1)
+    hit = (pos < code_r.size) & (code_r[pos_c] == code_f)
+    i, j = f[hit], r[pos_c[hit]]
+    keep = device_ids[i] != device_ids[j]
+    i, j = i[keep], j[keep]
+
+    # greedy repair over the leftovers (small: only misaligned ranks and
+    # same-device drops survive the bulk pass)
+    used = np.zeros(n, bool)
+    used[i] = True
+    used[j] = True
+    by_key: dict[int, list[int]] = {}
+    for b in r:
+        if not used[b]:
+            by_key.setdefault(int(key[b]), []).append(b)
+    extra_i, extra_j = [], []
+    for a in f:
+        if used[a]:
+            continue
+        lst = by_key.get(int(key[a]))
+        if not lst:
+            continue
+        for t, b in enumerate(lst):
+            if device_ids[a] != device_ids[b]:
+                extra_i.append(a)
+                extra_j.append(b)
+                lst.pop(t)
                 break
-    return pairs
+    i = np.concatenate([i, np.asarray(extra_i, np.int64)])
+    j = np.concatenate([j, np.asarray(extra_j, np.int64)])
+    return np.stack([i, j], axis=1)
 
 
 def inverse_mixup(mixed_a, mixed_b, lam: float):
@@ -108,6 +154,101 @@ def inverse_mixup(mixed_a, mixed_b, lam: float):
     s1 = lam_hat * mixed_a + (1.0 - lam_hat) * mixed_b
     s2 = (1.0 - lam_hat) * mixed_a + lam_hat * mixed_b
     return s1, s2
+
+
+def cycle_lams(n: int, lam: float):
+    """Ratio vector (lam, 1-lam, 0, ..., 0) of length ``n``: the cyclic
+    lam-order of a length-``n`` label cycle, where member k mixes its own
+    class (weight lam) with the next member's class (weight 1-lam).  A
+    symmetric pair is exactly the n = 2 case.  ``circulant(cycle_lams(n))``
+    is invertible for every n whenever lam != 0.5 (its eigenvalues are
+    lam + (1-lam) * omega^k, |lam/(1-lam)| != 1)."""
+    v = jnp.zeros((n,), jnp.float32)
+    return v.at[0].set(lam).at[1].set(1.0 - lam)
+
+
+def find_label_cycles(minor, major, device_ids, length: int,
+                      max_steps: int = 200_000):
+    """Disjoint label cycles of the given length among uploaded mixed
+    samples: sequences (e_1 .. e_n) with major[e_k] == minor[e_{k+1}]
+    (cyclically) and adjacent members from different devices.
+
+    Host-side greedy DFS on the minor->major label multigraph; runs once
+    per training job per cycle length.  The search is bounded by
+    ``max_steps`` node expansions in total — a label graph whose chains
+    never close (worst case for DFS) exhausts the budget and returns
+    whatever was found instead of blowing up exponentially; callers
+    degrade gracefully (fewer augmentation samples).  Returns a
+    (G, length) int array (rows are disjoint within one call; different
+    lengths may reuse uploads — they produce distinct inverse samples).
+    """
+    import numpy as np
+
+    minor = np.asarray(minor)
+    major = np.asarray(major)
+    device_ids = np.asarray(device_ids)
+    n = minor.shape[0]
+    succ: dict[int, list[int]] = {}
+    for i in range(n):
+        succ.setdefault(int(minor[i]), []).append(i)
+    used: set[int] = set()
+    cycles: list[list[int]] = []
+    budget = [max_steps]
+
+    def _extend(path: list[int]) -> bool:
+        if len(path) == length:
+            return device_ids[path[-1]] != device_ids[path[0]]
+        closing = len(path) == length - 1
+        for cand in succ.get(int(major[path[-1]]), ()):
+            if budget[0] <= 0:
+                return False
+            budget[0] -= 1
+            if cand in used or cand in path:
+                continue
+            if device_ids[cand] == device_ids[path[-1]]:
+                continue
+            # the last member must close the label cycle back to the start
+            if closing and int(major[cand]) != int(minor[path[0]]):
+                continue
+            path.append(cand)
+            if _extend(path):
+                return True
+            path.pop()
+        return False
+
+    for start in range(n):
+        if budget[0] <= 0:
+            break
+        if start in used or minor[start] == major[start]:
+            continue
+        path = [start]
+        if _extend(path):
+            used.update(path)
+            cycles.append(path)
+    if not cycles:
+        return np.zeros((0, length), np.int64)
+    return np.asarray(cycles, np.int64)
+
+
+def inverse_mixup_cycles(mixed, cycles, lam: float):
+    """Batched general-N inverse-Mixup (Prop. 1) over label cycles.
+
+    mixed: (M, F) uploaded mixed samples (flattened features); cycles:
+    (G, N) index rows from :func:`find_label_cycles`.  Member k of a cycle
+    is lam * x_k + (1-lam) * x_{k+1 (mod N)} in class space, so the stack
+    reordered by (N-k) mod N equals circulant(cycle_lams(N, lam)) @ x and
+    one (N, N) @ (G, N, F) contraction recovers all G*N hard-label
+    samples at once.  Returns (G*N, F); labels are minor[cycles].ravel().
+    """
+    import numpy as np
+
+    cycles = np.asarray(cycles)
+    g, n = cycles.shape
+    ratios = inverse_mixup_ratios(cycle_lams(n, lam))      # (N, N)
+    perm = (n - np.arange(n)) % n
+    stack = jnp.asarray(mixed)[cycles[:, perm]]            # (G, N, F)
+    out = jnp.einsum("nk,gkf->gnf", ratios, stack)
+    return out.reshape(g * n, -1)
 
 
 def inverse_mixup_n(mixed_stack, lams):

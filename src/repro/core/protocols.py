@@ -20,9 +20,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..channel import ChannelConfig, payload_bits, round_trip
+from ..kernels.mixup_kernel import mixup_pallas
 from .conversion import output_to_model
 from .losses import fd_loss
-from .mixup import inverse_mixup, make_mixup_batch, mixup_pairs, pair_symmetric
+from .mixup import (find_label_cycles, inverse_mixup_cycles,
+                    make_mixup_batch, mixup_pairs, pair_symmetric)
 from .outputs import label_averaged_outputs
 
 PROTOCOLS = ("fl", "fd", "fld", "mixfld", "mix2fld")
@@ -96,7 +98,7 @@ class FederatedTrainer:
             return params, favg, cnt, jnp.mean(losses)
 
         self._local_train = jax.jit(jax.vmap(
-            local_train, in_axes=(0, 0, 0, 0, None, None)))
+            local_train, in_axes=(0, 0, 0, 0, 0, None)))
 
         def accuracy(params, x, y):
             logits = apply_fn(params, x)
@@ -113,76 +115,105 @@ class FederatedTrainer:
 
     # ------------------------------------------------------------------
     def collect_seeds(self, dev_x, dev_y, key):
-        """Round-1 seed collection. Returns dict with uploaded samples,
-        labels (hard or soft), metadata, and the server-side (possibly
-        inversely mixed) training set."""
+        """Round-1 seed collection, batched over the device axis.
+
+        Device-side Mixup is one vmapped ``mixup_pairs``/``make_mixup_batch``
+        over (D, n_seed); server-side pairing is the vectorized sort-based
+        ``pair_symmetric`` over the whole (D*Ns,) upload set; the paired
+        inverse-Mixup samples are computed in one shot through the
+        ``mixup_pallas`` kernel (scalar ``mixup.inverse_mixup`` stays as the
+        reference oracle), and cycle augmentation beyond the pair set uses
+        the batched ``inverse_mixup_cycles`` contraction.  Returns dict with
+        uploaded samples, labels (hard or soft), metadata, and the
+        server-side training set."""
         fc = self.fc
         D = fc.num_devices
         C = fc.num_classes
         proto = fc.protocol
         if proto in ("fl", "fd"):
             return None
+        dev_x = jnp.asarray(dev_x)
+        dev_y = jnp.asarray(dev_y)
+        n_local = dev_x.shape[1]
+        feat = dev_x.shape[2:]
+        keys = jax.random.split(key, D)
 
         if proto == "fld":  # raw samples (privacy leak, the baseline)
-            xs, ys = [], []
-            for d in range(D):
-                k = jax.random.fold_in(key, d)
-                idx = jax.random.choice(k, dev_x.shape[1], (fc.n_seed,),
-                                        replace=False)
-                xs.append(dev_x[d, idx])
-                ys.append(dev_y[d, idx])
-            seeds_x = jnp.concatenate(xs)
-            seeds_y = jnp.concatenate(ys)
-            return {"train_x": seeds_x, "train_y": seeds_y,
+            idx = jax.vmap(lambda k: jax.random.choice(
+                k, n_local, (fc.n_seed,), replace=False))(keys)
+            seeds_x = jax.vmap(lambda x, i: x[i])(dev_x, idx)
+            seeds_y = jnp.take_along_axis(dev_y, idx, axis=1)
+            seeds_x = seeds_x.reshape((D * fc.n_seed,) + feat)
+            return {"train_x": seeds_x, "train_y": seeds_y.reshape(-1),
                     "uploaded": seeds_x, "raw_pairs": None}
 
-        # ---- Mixup at devices (eq. 6) ----
-        mixed, softs, minors, majors, dev_ids, raws = [], [], [], [], [], []
-        for d in range(D):
-            k = jax.random.fold_in(key, 1000 + d)
-            idx_i, idx_j = mixup_pairs(k, dev_y[d], fc.n_seed, C)
-            mx, soft, (mi, ma) = make_mixup_batch(
-                dev_x[d], dev_y[d], idx_i, idx_j, fc.lam, C)
-            mixed.append(mx)
-            softs.append(soft)
-            minors.append(mi)
-            majors.append(ma)
-            dev_ids.append(np.full(fc.n_seed, d))
-            raws.append(jnp.stack([dev_x[d, idx_i], dev_x[d, idx_j]], axis=1))
-        mixed = jnp.concatenate(mixed)        # (D*Ns, ...)
-        softs = jnp.concatenate(softs)
-        minors = jnp.concatenate(minors)
-        majors = jnp.concatenate(majors)
-        dev_ids = np.concatenate(dev_ids)
-        raws = jnp.concatenate(raws)          # (D*Ns, 2, ...)
+        # ---- Mixup at devices (eq. 6), vmapped over the device axis ----
+        idx_i, idx_j = jax.vmap(mixup_pairs, in_axes=(0, 0, None, None))(
+            keys, dev_y, fc.n_seed, C)                     # (D, Ns) each
+        mixed, softs, (minors, majors) = jax.vmap(
+            make_mixup_batch, in_axes=(0, 0, 0, 0, None, None))(
+            dev_x, dev_y, idx_i, idx_j, fc.lam, C)
+        gather = jax.vmap(lambda x, i: x[i])
+        raws = jnp.stack([gather(dev_x, idx_i), gather(dev_x, idx_j)],
+                         axis=2)                           # (D, Ns, 2, ...)
+        mixed = mixed.reshape((D * fc.n_seed,) + feat)
+        softs = softs.reshape(D * fc.n_seed, C)
+        minors = np.asarray(minors).reshape(-1)
+        majors = np.asarray(majors).reshape(-1)
+        raws = raws.reshape((D * fc.n_seed, 2) + feat)
+        dev_ids = np.repeat(np.arange(D), fc.n_seed)
 
         if proto == "mixfld":
             return {"train_x": mixed, "train_y": softs,
                     "uploaded": mixed, "raw_pairs": raws}
 
-        # ---- Mix2FLD: inverse-Mixup across devices (eq. 7) ----
-        pairs = pair_symmetric(np.asarray(minors), np.asarray(majors),
-                               dev_ids)
-        want_total = fc.n_inverse * D
-        inv_x, inv_y = [], []
-        # each symmetric pair yields 2 hard-labelled samples; cycle pairings
-        # with jittered lam-order if more are requested (augmentation)
-        rep = 0
-        while len(inv_x) < want_total and pairs:
-            for (i, j) in pairs:
-                s1, s2 = inverse_mixup(mixed[i], mixed[j], fc.lam)
-                inv_x.extend([s1, s2])
-                inv_y.extend([int(minors[i]), int(minors[j])])
-                if len(inv_x) >= want_total:
-                    break
-            rep += 1
-            if rep > 8:
-                break
-        if not inv_x:  # degenerate pairing: fall back to soft-label training
+        # ---- Mix2FLD: inverse-Mixup across devices (eq. 7, Prop. 1) ----
+        if abs(2.0 * fc.lam - 1.0) < 1e-6:
+            # lam = 0.5 makes the inverse ratios singular (Prop. 1);
+            # degrade to soft-label training instead of dividing by zero
             return {"train_x": mixed, "train_y": softs,
                     "uploaded": mixed, "raw_pairs": raws}
-        inv_x = jnp.stack(inv_x)
-        inv_y = jnp.asarray(inv_y, jnp.int32)
+        pairs = pair_symmetric(minors, majors, dev_ids)    # (P, 2)
+        want_total = fc.n_inverse * D
+        mixed_flat = mixed.reshape(mixed.shape[0], -1)
+        inv_chunks, lab_chunks = [], []
+        if len(pairs):
+            # one batched kernel call per side: s1 = lam_hat*m_i +
+            # (1-lam_hat)*m_j and its mirror, for every pair at once
+            lam_hat = fc.lam / (2.0 * fc.lam - 1.0)
+            a = mixed_flat[jnp.asarray(pairs[:, 0])]
+            b = mixed_flat[jnp.asarray(pairs[:, 1])]
+            la = jnp.full((len(pairs),), lam_hat, jnp.float32)
+            s1 = mixup_pallas(a, b, la, 1.0 - la)
+            s2 = mixup_pallas(b, a, la, 1.0 - la)
+            inv_chunks.append(jnp.stack([s1, s2], axis=1).reshape(
+                2 * len(pairs), -1))
+            lab_chunks.append(np.stack([minors[pairs[:, 0]],
+                                        minors[pairs[:, 1]]], 1).reshape(-1))
+        # augmentation beyond 2*P: longer label cycles draw *distinct*
+        # cyclic lam-orders (Prop. 1 rows differ with N), so extra draws
+        # are new samples rather than duplicates of the pair set
+        total = 2 * len(pairs)
+        length = 3
+        while total < want_total and length <= max(3, min(C, 6)):
+            cycles = find_label_cycles(minors, majors, dev_ids, length)
+            if len(cycles):
+                inv_chunks.append(inverse_mixup_cycles(
+                    mixed_flat, cycles, fc.lam))
+                lab_chunks.append(minors[cycles].reshape(-1))
+                total += cycles.size
+            length += 1
+        if not inv_chunks:  # degenerate pairing: fall back to soft labels
+            return {"train_x": mixed, "train_y": softs,
+                    "uploaded": mixed, "raw_pairs": raws}
+        inv_x = jnp.concatenate(inv_chunks)
+        inv_y = np.concatenate(lab_chunks)
+        if inv_x.shape[0] < want_total:  # last resort: tile (explicit, old
+            reps = -(-want_total // inv_x.shape[0])  # behaviour duplicated
+            inv_x = jnp.tile(inv_x, (reps, 1))       # silently)
+            inv_y = np.tile(inv_y, reps)
+        inv_x = inv_x[:want_total].reshape((-1,) + feat)
+        inv_y = jnp.asarray(inv_y[:want_total], jnp.int32)
         return {"train_x": inv_x, "train_y": inv_y,
                 "uploaded": mixed, "raw_pairs": raws,
                 "n_pairs": len(pairs)}
@@ -203,6 +234,9 @@ class FederatedTrainer:
         dev_params = jax.tree.map(
             lambda p: jnp.broadcast_to(p, (D,) + p.shape).copy(), g_params)
         gout = jnp.full((C, C), 1.0 / C)
+        # per-device view of gout: a device only refreshes its copy when its
+        # downlink succeeds (failed links keep the previous table)
+        dev_gout = jnp.broadcast_to(gout, (D, C, C))
         gout_prev = None
         g_prev = None
 
@@ -223,7 +257,7 @@ class FederatedTrainer:
             # ---- local updates (eq. 1 / 3) ----
             dkeys = jax.random.split(jax.random.fold_in(kr, 1), D)
             dev_params, favg, cnt, mloss = self._local_train(
-                dev_params, dev_x, dev_y, dkeys, gout,
+                dev_params, dev_x, dev_y, dkeys, dev_gout,
                 jnp.asarray(use_kd))
             jax.block_until_ready(favg)
 
@@ -261,15 +295,13 @@ class FederatedTrainer:
                         fc.server_batch, fc.eta, fc.beta,
                         jax.random.fold_in(kr, 4))
 
-            # ---- downlink ----
-            if proto == "fd":
-                pass  # devices already consume gout in their next round
-            else:
-                mask = jnp.asarray(dn_ok, jnp.float32)
-                mask = mask.reshape((D,) + (1,) * 0)
+            # ---- downlink (gated per device by dn_ok) ----
+            mask = jnp.asarray(dn_ok)
+            dev_gout = jnp.where(mask[:, None, None], gout[None], dev_gout)
+            if proto != "fd":
                 dev_params = jax.tree.map(
                     lambda dp, gp: jnp.where(
-                        mask.reshape((D,) + (1,) * (dp.ndim - 1)) > 0,
+                        mask.reshape((D,) + (1,) * (dp.ndim - 1)),
                         jnp.broadcast_to(gp, dp.shape), dp),
                     dev_params, g_params)
 
@@ -310,4 +342,5 @@ class FederatedTrainer:
 
         history["seeds"] = seeds
         history["final_acc"] = history["acc"][-1]
+        self.last_dev_gout = dev_gout  # per-device KD tables (tests inspect)
         return history

@@ -11,28 +11,24 @@ import numpy as np
 
 def partition_iid(x, y, num_devices: int, per_device: int, num_classes: int,
                   seed: int = 0):
+    """Device-axis vectorized: the full (D, per_device) index matrix is
+    built with one per-class slice + one batched in-row shuffle, instead of
+    a per-device Python loop (classes short on samples are resampled with
+    replacement, as before)."""
     rng = np.random.default_rng(seed)
     x, y = np.asarray(x), np.asarray(y)
     per_class = per_device // num_classes
-    dev_x, dev_y = [], []
-    by_class = [rng.permutation(np.flatnonzero(y == c)) for c in
-                range(num_classes)]
-    ptr = [0] * num_classes
-    for _ in range(num_devices):
-        idx = []
-        for c in range(num_classes):
-            take = by_class[c][ptr[c]:ptr[c] + per_class]
-            ptr[c] += per_class
-            if len(take) < per_class:  # class exhausted: resample
-                extra = rng.choice(np.flatnonzero(y == c),
-                                   per_class - len(take))
-                take = np.concatenate([take, extra])
-            idx.extend(take)
-        idx = np.array(idx)
-        rng.shuffle(idx)
-        dev_x.append(x[idx])
-        dev_y.append(y[idx])
-    return np.stack(dev_x), np.stack(dev_y)
+    need = num_devices * per_class
+    cols = []
+    for c in range(num_classes):
+        pool = rng.permutation(np.flatnonzero(y == c))
+        if pool.size < need:  # class exhausted: resample
+            extra = rng.choice(np.flatnonzero(y == c), need - pool.size)
+            pool = np.concatenate([pool, extra])
+        cols.append(pool[:need].reshape(num_devices, per_class))
+    idx = np.concatenate(cols, axis=1)      # (D, per_class * num_classes)
+    idx = rng.permuted(idx, axis=1)         # per-device shuffle, batched
+    return x[idx], y[idx]
 
 
 def partition_noniid(x, y, num_devices: int, num_classes: int = 10,

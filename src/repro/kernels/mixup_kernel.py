@@ -27,9 +27,21 @@ def _mixup_kernel(a_ref, b_ref, la_ref, lb_ref, o_ref):
     o_ref[...] = (la * a + lb * b).astype(o_ref.dtype)
 
 
+def _default_interpret() -> bool:
+    """Compile on TPU (Mosaic), interpret everywhere else (CPU tests)."""
+    return jax.default_backend() != "tpu"
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
-def mixup_pallas(a, b, lam_a, lam_b, *, interpret: bool = True):
-    """a, b: (N, F); lam_a, lam_b: (N,). Returns (N, F)."""
+def mixup_pallas(a, b, lam_a, lam_b, *, interpret: bool | None = None):
+    """a, b: (N, F); lam_a, lam_b: (N,). Returns (N, F).
+
+    ``interpret=None`` resolves per backend (:func:`_default_interpret`),
+    so callers on the hot path (``core.protocols.collect_seeds``) get the
+    compiled Mosaic kernel on TPU and the reference interpreter on CPU.
+    """
+    if interpret is None:
+        interpret = _default_interpret()
     n, f = a.shape
     rb = min(ROW_BLOCK, n)
     cb = min(COL_BLOCK, f)

@@ -31,6 +31,31 @@ from .shardhooks import constrain
 REMAT_POLICY = jax.checkpoint_policies.nothing_saveable
 
 
+# optimization_barrier has neither a JVP nor a batching rule in this jax
+# version, which breaks jax.grad / jax.vmap through the scanned blocks.
+# The barrier only needs to pin the *primal* graph, so register identity
+# rules for both transforms (guarded: future jax may ship its own, or may
+# move the private primitive — in which case it likely has the rules too).
+try:
+    from jax._src.lax import lax as _lax_internal  # noqa: E402
+    from jax.interpreters import ad as _ad, batching as _batching  # noqa: E402
+
+    _obar_p = _lax_internal.optimization_barrier_p
+    if _obar_p not in _batching.primitive_batchers:
+        _batching.primitive_batchers[_obar_p] = (
+            lambda args, dims: (_obar_p.bind(*args), dims))
+    if _obar_p not in _ad.primitive_jvps:
+        _ad.primitive_jvps[_obar_p] = (
+            lambda primals, tangents: (_obar_p.bind(*primals),
+                                       list(tangents)))
+except (ImportError, AttributeError):
+    pass
+
+
+def _opt_barrier(x):
+    return jax.lax.optimization_barrier(x)
+
+
 # ---------------------------------------------------------------------------
 # Init
 # ---------------------------------------------------------------------------
@@ -103,7 +128,7 @@ def _attn_block(cfg, p, x, q_pos, kv_pos, cache, positions3, enc_out,
     # barrier: stops XLA hoisting a whole-stack f32 convert of the
     # remat-saved layer inputs out of the backward scan (measured 75 GiB
     # on deepseek train_4k; EXPERIMENTS.md §Perf)
-    x = jax.lax.optimization_barrier(x)
+    x = _opt_barrier(x)
     x = grad_dtype_guard(x)  # keep the residual cotangent in bf16
     x = constrain(x, "resid")
     h = apply_norm(cfg, p["ln1"], x)
@@ -131,7 +156,7 @@ def _attn_block(cfg, p, x, q_pos, kv_pos, cache, positions3, enc_out,
 
 
 def _mamba_block(cfg, p, x, cache):
-    x = jax.lax.optimization_barrier(x)
+    x = _opt_barrier(x)
     x = grad_dtype_guard(x)
     x = constrain(x, "resid")
     h = apply_norm(cfg, p["ln"], x)
@@ -246,7 +271,7 @@ def _scan_attn_blocks(cfg, blocks, x, q_pos, kv_pos, cache, positions3,
             lp, layer_cache, enc_kv = inp, None, None
         # stop XLA hoisting a whole-stack dtype convert of the scanned
         # weights out of the loop (CPU lowering converts bf16 operands)
-        lp = jax.lax.optimization_barrier(lp)
+        lp = _opt_barrier(lp)
         y, aux_l, new_lc = _attn_block(cfg, lp, x, q_pos, kv_pos, layer_cache,
                                        positions3, enc_out, enc_kv)
         if has_cache and cfg.cross_attention and "xk" not in new_lc:

@@ -69,6 +69,60 @@ def test_round_trip_masks_and_latency():
     assert out["latency_s"] > 0
 
 
+def test_round_trip_latency_waits_on_slowest_successful_only(monkeypatch):
+    """Regression for the outage-latency bug: outage links are pinned at
+    t_max_slots and must NOT inflate round latency; only the slowest
+    *successful* link in each direction counts."""
+    import jax.numpy as jnp
+
+    from repro.channel import model as chmod
+
+    cfg = ChannelConfig(num_devices=3)
+    crafted = {
+        # one uplink outage pinned at t_max; slowest success takes 7 slots
+        True: (jnp.array([3, cfg.t_max_slots, 7]),
+               jnp.array([True, False, True])),
+        # one downlink outage; slowest success takes 2 slots
+        False: (jnp.array([2, 2, cfg.t_max_slots]),
+                jnp.array([True, True, False])),
+    }
+    monkeypatch.setattr(chmod, "simulate_link",
+                        lambda key, c, bits, up, n: crafted[up])
+    out = chmod.round_trip(jax.random.PRNGKey(0), cfg, 1.0, 1.0)
+    # buggy semantics charged tau * (100 + 100); fixed: tau * (7 + 2)
+    assert math.isclose(out["latency_s"], cfg.tau_s * (7 + 2), rel_tol=1e-9)
+
+
+def test_round_trip_latency_recompute_from_masks():
+    """The reported latency always equals the mask-filtered recompute from
+    the per-link outputs, whatever the draw."""
+    cfg = ChannelConfig(num_devices=64)
+    p, bits = cfg.link_budget(up=True)
+    up_bits = bits * max(1, round(cfg.t_max_slots * p))
+    out = round_trip(jax.random.PRNGKey(11), cfg, up_bits, bits)
+    t_up, ok_up = np.asarray(out["t_up"]), np.asarray(out["up_ok"])
+    t_dn, ok_dn = np.asarray(out["t_dn"]), np.asarray(out["dn_ok"])
+    want_up = t_up[ok_up].max() if ok_up.any() else cfg.t_max_slots
+    want_dn = t_dn[ok_dn].max() if ok_dn.any() else cfg.t_max_slots
+    assert math.isclose(out["latency_s"],
+                        cfg.tau_s * (float(want_up) + float(want_dn)),
+                        rel_tol=1e-9)
+
+
+def test_round_trip_all_outage_falls_back_to_t_max():
+    cfg = ChannelConfig()
+    p, bits = cfg.link_budget(up=True)
+    huge = bits * cfg.t_max_slots * 10  # cannot fit in the window
+    out = round_trip(jax.random.PRNGKey(5), cfg, huge, bits)
+    assert not bool(np.any(np.asarray(out["up_ok"])))
+    dn_ok = np.asarray(out["dn_ok"])
+    t_dn = np.asarray(out["t_dn"])
+    want_dn = t_dn[dn_ok].max() if dn_ok.any() else cfg.t_max_slots
+    assert math.isclose(out["latency_s"],
+                        cfg.tau_s * (cfg.t_max_slots + float(want_dn)),
+                        rel_tol=1e-9)
+
+
 def test_downlink_faster_than_uplink_under_asymmetry():
     """P_dn = 40 dBm + full bandwidth: downlink latency for the model
     payload is far below the uplink's for the same payload."""

@@ -1,40 +1,39 @@
-"""Property tests (hypothesis) for Mixup / inverse-Mixup (Prop. 1)."""
+"""Mixup / inverse-Mixup (Prop. 1) tests — no external deps.
+
+Parametrized equivalents of the hypothesis property tests live here so the
+properties stay covered when ``hypothesis`` is absent; the randomized
+versions are in ``test_mixup_properties.py`` (skipped without hypothesis).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core.mixup import (circulant, inverse_mixup, inverse_mixup_n,
-                              inverse_mixup_ratios, make_mixup_batch,
-                              mixup_pairs, pair_symmetric)
+from repro.core.mixup import (circulant, cycle_lams, find_label_cycles,
+                              inverse_mixup, inverse_mixup_cycles,
+                              inverse_mixup_n, inverse_mixup_ratios,
+                              make_mixup_batch, mixup_pairs, pair_symmetric)
 from repro.core.privacy import sample_privacy
+from repro.kernels.mixup_kernel import mixup_pallas
+
+LAM_GRID = [0.05, 0.1, 0.2, 0.3, 0.45]
 
 
-@st.composite
-def mixing_ratios(draw, n):
-    """Well-conditioned ratio vectors on the simplex (away from the
-    singular uniform point)."""
-    raw = [draw(st.floats(0.05, 1.0)) for _ in range(n)]
-    lams = np.array(raw) / np.sum(raw)
-    cond = np.linalg.cond(np.asarray(circulant(jnp.asarray(lams))))
-    if not np.isfinite(cond) or cond > 1e3:
-        raw[0] += 1.0
-        lams = np.array(raw) / np.sum(raw)
-    return lams
+# ---------------------------------------------------------------------------
+# Proposition 1 (parametrized stand-ins for the hypothesis properties)
+# ---------------------------------------------------------------------------
 
-
-@settings(max_examples=25, deadline=None)
-@given(st.integers(2, 5), st.data())
-def test_prop1_inverse_is_matrix_inverse(n, data):
-    lams = data.draw(mixing_ratios(n))
+@pytest.mark.parametrize("n", [2, 3, 4, 5])
+@pytest.mark.parametrize("spread", [0.5, 1.0, 2.0])
+def test_prop1_inverse_is_matrix_inverse(n, spread):
+    lams = np.linspace(1.0, 1.0 + spread, n)
+    lams /= lams.sum()
     C = circulant(jnp.asarray(lams, jnp.float32))
     R = inverse_mixup_ratios(jnp.asarray(lams, jnp.float32))
     np.testing.assert_allclose(np.asarray(R @ C), np.eye(n), atol=1e-3)
 
 
-@settings(max_examples=25, deadline=None)
-@given(st.floats(0.01, 0.45))
+@pytest.mark.parametrize("lam", LAM_GRID)
 def test_inverse_mixup_recovers_hard_labels(lam):
     a = jnp.array([1.0, 0.0])
     b = jnp.array([0.0, 1.0])
@@ -45,8 +44,7 @@ def test_inverse_mixup_recovers_hard_labels(lam):
     np.testing.assert_allclose(np.asarray(s2), [0.0, 1.0], atol=1e-4)
 
 
-@settings(max_examples=10, deadline=None)
-@given(st.floats(0.05, 0.45), st.integers(0, 1000))
+@pytest.mark.parametrize("lam,seed", [(0.05, 0), (0.2, 1), (0.45, 2)])
 def test_inverse_mixup_on_samples_not_equal_raw(lam, seed):
     """Inversely mixed samples recover the LABEL but (for cross-device
     pairs with different raw content) not the raw SAMPLE."""
@@ -54,7 +52,6 @@ def test_inverse_mixup_on_samples_not_equal_raw(lam, seed):
     k1, k2, k3, k4 = jax.random.split(key, 4)
     xa1, xa2 = jax.random.normal(k1, (8,)), jax.random.normal(k2, (8,))
     xb1, xb2 = jax.random.normal(k3, (8,)), jax.random.normal(k4, (8,))
-    # device a mixes (class0, class1); device b mixes (class1, class0)
     ma = lam * xa1 + (1 - lam) * xa2
     mb = lam * xb1 + (1 - lam) * xb2
     s1, s2 = inverse_mixup(ma, mb, lam)
@@ -63,8 +60,7 @@ def test_inverse_mixup_on_samples_not_equal_raw(lam, seed):
             assert float(jnp.linalg.norm(s - raw)) > 1e-4
 
 
-@settings(max_examples=20, deadline=None)
-@given(st.integers(3, 6), st.integers(0, 99))
+@pytest.mark.parametrize("n,seed", [(3, 0), (4, 7), (6, 42)])
 def test_inverse_mixup_n_unmixes_cyclic_stack(n, seed):
     lams = np.linspace(1, 2, n)
     lams /= lams.sum()
@@ -75,6 +71,10 @@ def test_inverse_mixup_n_unmixes_cyclic_stack(n, seed):
     rec = inverse_mixup_n(mixed, jnp.asarray(lams, jnp.float32))
     np.testing.assert_allclose(np.asarray(rec), np.asarray(raw), atol=1e-2)
 
+
+# ---------------------------------------------------------------------------
+# Device-side Mixup
+# ---------------------------------------------------------------------------
 
 def test_mixup_pairs_have_different_labels():
     key = jax.random.PRNGKey(0)
@@ -93,15 +93,189 @@ def test_make_mixup_batch_soft_labels_sum_to_one():
     assert mixed.shape == (20, 4)
 
 
+def test_vmapped_mixup_matches_per_device():
+    """The batched (D, n_seed) path equals the per-device loop exactly."""
+    key = jax.random.PRNGKey(3)
+    D, n, C = 4, 30, 10
+    dev_x = jax.random.normal(key, (D, n, 6))
+    dev_y = jax.random.randint(jax.random.fold_in(key, 1), (D, n), 0, C)
+    keys = jax.random.split(jax.random.fold_in(key, 2), D)
+    bi, bj = jax.vmap(mixup_pairs, in_axes=(0, 0, None, None))(
+        keys, dev_y, 8, C)
+    bm, bs, (bmi, bma) = jax.vmap(
+        make_mixup_batch, in_axes=(0, 0, 0, 0, None, None))(
+        dev_x, dev_y, bi, bj, 0.2, C)
+    for d in range(D):
+        li, lj = mixup_pairs(keys[d], dev_y[d], 8, C)
+        lm, ls, (lmi, lma) = make_mixup_batch(dev_x[d], dev_y[d], li, lj,
+                                              0.2, C)
+        np.testing.assert_array_equal(np.asarray(bi[d]), np.asarray(li))
+        np.testing.assert_allclose(np.asarray(bm[d]), np.asarray(lm),
+                                   atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(bmi[d]), np.asarray(lmi))
+
+
+# ---------------------------------------------------------------------------
+# Server-side pairing (vectorized sort-based matcher)
+# ---------------------------------------------------------------------------
+
 def test_pair_symmetric_matches_reversed_pairs_across_devices():
     minor = np.array([0, 1, 2, 1, 0])
     major = np.array([1, 0, 3, 0, 1])
     dev = np.array([0, 1, 0, 0, 0])
     pairs = pair_symmetric(minor, major, dev)
+    assert len(pairs) >= 1
     for i, j in pairs:
         assert minor[i] == major[j] and major[i] == minor[j]
         assert dev[i] != dev[j]
 
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_pair_symmetric_invariants_at_scale(seed):
+    """Symmetric labels, no same-device pairs, no index reuse — on a
+    (D*Ns,) upload set the size the trainer actually produces."""
+    rng = np.random.default_rng(seed)
+    n, C, D = 500, 10, 50
+    minor = rng.integers(0, C, n)
+    major = (minor + rng.integers(1, C, n)) % C
+    dev = rng.integers(0, D, n)
+    pairs = pair_symmetric(minor, major, dev)
+    assert len(pairs) > 0
+    assert np.all(minor[pairs[:, 0]] == major[pairs[:, 1]])
+    assert np.all(major[pairs[:, 0]] == minor[pairs[:, 1]])
+    assert np.all(dev[pairs[:, 0]] != dev[pairs[:, 1]])
+    flat = pairs.reshape(-1)
+    assert len(set(flat.tolist())) == flat.size  # each upload used once
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_pair_symmetric_is_maximal(seed):
+    """After the repair pass no matchable (forward, reverse) pair may be
+    left over: the matching is maximal like the greedy reference."""
+    rng = np.random.default_rng(seed)
+    n, C, D = 60, 4, 3
+    minor = rng.integers(0, C, n)
+    major = (minor + rng.integers(1, C, n)) % C
+    dev = rng.integers(0, D, n)
+    pairs = pair_symmetric(minor, major, dev)
+    used = set(pairs.reshape(-1).tolist())
+    free = [k for k in range(n) if k not in used and minor[k] != major[k]]
+    for a in free:
+        for b in free:
+            matchable = (minor[a] == major[b] and major[a] == minor[b]
+                         and dev[a] != dev[b] and a != b)
+            assert not matchable, (a, b)
+
+
+def test_find_label_cycles_bounded_on_open_chains():
+    """A label graph whose chains never close is the DFS worst case; the
+    step budget must bound it instead of hanging."""
+    import time
+    rng = np.random.default_rng(0)
+    n = 500
+    minor = rng.integers(0, 9, n)
+    major = minor + 1  # ladder: no cycle can ever close
+    dev = rng.integers(0, 50, n)
+    t0 = time.perf_counter()
+    cycles = find_label_cycles(minor, major, dev, 6)
+    assert time.perf_counter() - t0 < 60
+    assert len(cycles) == 0
+
+
+def test_pair_symmetric_empty_and_degenerate():
+    empty = pair_symmetric(np.array([]), np.array([]), np.array([]))
+    assert empty.shape == (0, 2)
+    # all-forward orientation: nothing to match
+    none = pair_symmetric(np.array([0, 0]), np.array([1, 1]),
+                          np.array([0, 1]))
+    assert len(none) == 0
+
+
+# ---------------------------------------------------------------------------
+# Batched inverse-Mixup vs the scalar oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("lam", [0.1, 0.3])
+def test_batched_inverse_mixup_matches_scalar_oracle(lam):
+    """The kernel route (mixup_pallas with lam_hat ratios) equals the
+    scalar ``inverse_mixup`` reference within fp32 tolerance."""
+    rng = np.random.default_rng(4)
+    n, C, D = 200, 10, 20
+    minor = rng.integers(0, C, n)
+    major = (minor + rng.integers(1, C, n)) % C
+    dev = rng.integers(0, D, n)
+    mixed = jnp.asarray(rng.normal(size=(n, 49)), jnp.float32)
+    pairs = pair_symmetric(minor, major, dev)
+    assert len(pairs) > 5
+    lam_hat = lam / (2.0 * lam - 1.0)
+    la = jnp.full((len(pairs),), lam_hat, jnp.float32)
+    a, b = mixed[pairs[:, 0]], mixed[pairs[:, 1]]
+    s1 = mixup_pallas(a, b, la, 1.0 - la)
+    s2 = mixup_pallas(b, a, la, 1.0 - la)
+    for k in range(len(pairs)):
+        o1, o2 = inverse_mixup(mixed[pairs[k, 0]], mixed[pairs[k, 1]], lam)
+        np.testing.assert_allclose(np.asarray(s1[k]), np.asarray(o1),
+                                   atol=1e-5)
+        np.testing.assert_allclose(np.asarray(s2[k]), np.asarray(o2),
+                                   atol=1e-5)
+
+
+def test_inverse_mixup_cycles_pair_case_equals_inverse_mixup():
+    """A 2-cycle through the general-N path is exactly the N=2 formula."""
+    rng = np.random.default_rng(5)
+    mixed = jnp.asarray(rng.normal(size=(2, 16)), jnp.float32)
+    lam = 0.25
+    out = inverse_mixup_cycles(mixed, np.array([[0, 1]]), lam)
+    s1, s2 = inverse_mixup(mixed[0], mixed[1], lam)
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(s1), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(out[1]), np.asarray(s2), atol=1e-5)
+
+
+@pytest.mark.parametrize("length", [3, 4, 5])
+def test_inverse_mixup_cycles_unmixes_constructed_cycle(length):
+    """m_k = lam x_k + (1-lam) x_{k+1} over a label cycle is exactly
+    inverted by the cyclic lam-order ratios (Prop. 1, general N)."""
+    rng = np.random.default_rng(length)
+    lam = 0.2
+    raw = rng.normal(size=(length, 12)).astype(np.float32)
+    m = np.stack([lam * raw[k] + (1 - lam) * raw[(k + 1) % length]
+                  for k in range(length)])
+    minor = np.arange(length)
+    major = (minor + 1) % length
+    dev = np.arange(length)
+    cycles = find_label_cycles(minor, major, dev, length)
+    assert cycles.shape == (1, length)
+    out = inverse_mixup_cycles(jnp.asarray(m), cycles, lam)
+    want = raw[cycles.reshape(-1)]
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-4)
+
+
+def test_find_label_cycles_invariants():
+    rng = np.random.default_rng(9)
+    n, C, D = 300, 10, 30
+    minor = rng.integers(0, C, n)
+    major = (minor + rng.integers(1, C, n)) % C
+    dev = rng.integers(0, D, n)
+    cycles = find_label_cycles(minor, major, dev, 3)
+    assert len(cycles) > 0
+    flat = cycles.reshape(-1)
+    assert len(set(flat.tolist())) == flat.size  # disjoint within a call
+    for row in cycles:
+        for k in range(3):
+            nxt = row[(k + 1) % 3]
+            assert major[row[k]] == minor[nxt]      # label chain closes
+            assert dev[row[k]] != dev[nxt]          # adjacent devices differ
+
+
+def test_cycle_lams_matrix_is_invertible_off_half():
+    for n in (2, 3, 5, 7):
+        C = np.asarray(circulant(cycle_lams(n, 0.2)))
+        assert np.isfinite(np.linalg.cond(C)) and np.linalg.cond(C) < 1e3
+
+
+# ---------------------------------------------------------------------------
+# Privacy ordering (Table II)
+# ---------------------------------------------------------------------------
 
 def test_mixup_improves_sample_privacy():
     key = jax.random.PRNGKey(2)

@@ -1,0 +1,98 @@
+"""Property tests (hypothesis) for Mixup / inverse-Mixup (Prop. 1).
+
+Skipped entirely when ``hypothesis`` is not installed (install the
+``test`` extra); deterministic parametrized equivalents of every property
+here live in ``test_mixup.py`` and always run.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.mixup import (circulant, find_label_cycles, inverse_mixup,
+                              inverse_mixup_cycles, inverse_mixup_n,
+                              inverse_mixup_ratios)
+
+
+@st.composite
+def mixing_ratios(draw, n):
+    """Well-conditioned ratio vectors on the simplex (away from the
+    singular uniform point)."""
+    raw = [draw(st.floats(0.05, 1.0)) for _ in range(n)]
+    lams = np.array(raw) / np.sum(raw)
+    cond = np.linalg.cond(np.asarray(circulant(jnp.asarray(lams))))
+    if not np.isfinite(cond) or cond > 1e3:
+        raw[0] += 1.0
+        lams = np.array(raw) / np.sum(raw)
+    return lams
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 5), st.data())
+def test_prop1_inverse_is_matrix_inverse(n, data):
+    lams = data.draw(mixing_ratios(n))
+    C = circulant(jnp.asarray(lams, jnp.float32))
+    R = inverse_mixup_ratios(jnp.asarray(lams, jnp.float32))
+    np.testing.assert_allclose(np.asarray(R @ C), np.eye(n), atol=1e-3)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(0.01, 0.45))
+def test_inverse_mixup_recovers_hard_labels(lam):
+    a = jnp.array([1.0, 0.0])
+    b = jnp.array([0.0, 1.0])
+    mixed_a = lam * a + (1 - lam) * b
+    mixed_b = lam * b + (1 - lam) * a
+    s1, s2 = inverse_mixup(mixed_a, mixed_b, lam)
+    np.testing.assert_allclose(np.asarray(s1), [1.0, 0.0], atol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), [0.0, 1.0], atol=1e-4)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.floats(0.05, 0.45), st.integers(0, 1000))
+def test_inverse_mixup_on_samples_not_equal_raw(lam, seed):
+    """Inversely mixed samples recover the LABEL but (for cross-device
+    pairs with different raw content) not the raw SAMPLE."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    xa1, xa2 = jax.random.normal(k1, (8,)), jax.random.normal(k2, (8,))
+    xb1, xb2 = jax.random.normal(k3, (8,)), jax.random.normal(k4, (8,))
+    # device a mixes (class0, class1); device b mixes (class1, class0)
+    ma = lam * xa1 + (1 - lam) * xa2
+    mb = lam * xb1 + (1 - lam) * xb2
+    s1, s2 = inverse_mixup(ma, mb, lam)
+    for s in (s1, s2):
+        for raw in (xa1, xa2, xb1, xb2):
+            assert float(jnp.linalg.norm(s - raw)) > 1e-4
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 6), st.integers(0, 99))
+def test_inverse_mixup_n_unmixes_cyclic_stack(n, seed):
+    lams = np.linspace(1, 2, n)
+    lams /= lams.sum()
+    key = jax.random.PRNGKey(seed)
+    raw = jax.random.normal(key, (n, 5))
+    C = np.asarray(circulant(jnp.asarray(lams, jnp.float32)))
+    mixed = jnp.asarray(C) @ raw
+    rec = inverse_mixup_n(mixed, jnp.asarray(lams, jnp.float32))
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(raw), atol=1e-2)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(3, 6), st.floats(0.05, 0.45), st.integers(0, 99))
+def test_cycle_unmix_recovers_constructed_cycle(length, lam, seed):
+    rng = np.random.default_rng(seed)
+    raw = rng.normal(size=(length, 12)).astype(np.float32)
+    m = np.stack([lam * raw[k] + (1 - lam) * raw[(k + 1) % length]
+                  for k in range(length)])
+    minor = np.arange(length)
+    major = (minor + 1) % length
+    cycles = find_label_cycles(minor, major, np.arange(length), length)
+    assert cycles.shape == (1, length)
+    out = inverse_mixup_cycles(jnp.asarray(m), cycles, lam)
+    np.testing.assert_allclose(np.asarray(out), raw[cycles.reshape(-1)],
+                               atol=2e-3)

@@ -62,6 +62,7 @@ def test_smoke_train_step_reduces_loss(arch):
     assert float(mN["loss"]) < float(m0["loss"])  # memorise one batch
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ASSIGNED)
 def test_decode_matches_full_forward(arch):
     cfg = get_config(arch).smoke()
@@ -127,6 +128,7 @@ def test_count_params_matches_leaf_sum():
     assert count_params(params) == sum(x.size for x in jax.tree.leaves(params))
 
 
+@pytest.mark.slow
 def test_int8_kv_cache_decode_parity():
     """Beyond-paper: int8 KV cache (halves the decode memory roofline
     term) stays within quantisation tolerance of the exact forward."""

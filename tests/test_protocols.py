@@ -31,6 +31,7 @@ def _cfg(protocol, **kw):
 SYM = ChannelConfig(num_devices=5, p_up_dbm=40.0)
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("protocol", PROTOCOLS)
 def test_protocol_runs_and_learns(protocol, data):
     dev_x, dev_y, tx, ty = data
@@ -42,6 +43,7 @@ def test_protocol_runs_and_learns(protocol, data):
     assert h["cum_time_s"][-1] > 0
 
 
+@pytest.mark.slow
 def test_mix2fld_seed_set_has_hard_labels_and_augments(data):
     dev_x, dev_y, tx, ty = data
     tr = FederatedTrainer(CNN(), _cfg("mix2fld"), SYM)
@@ -52,6 +54,7 @@ def test_mix2fld_seed_set_has_hard_labels_and_augments(data):
     assert seeds["train_x"].shape[0] >= seeds["uploaded"].shape[0]
 
 
+@pytest.mark.slow
 def test_mixfld_uploads_soft_labels(data):
     dev_x, dev_y, tx, ty = data
     tr = FederatedTrainer(CNN(), _cfg("mixfld"), SYM)
@@ -91,9 +94,73 @@ def test_noniid_partition_matches_paper_recipe():
         assert counts.sum() == 500
 
 
+@pytest.mark.slow
 def test_fd_uses_kd_after_first_round(data):
     """FD devices keep their own weights; accuracy should keep rising."""
     dev_x, dev_y, tx, ty = data
     tr = FederatedTrainer(CNN(), _cfg("fd", max_rounds=4), SYM)
     h = tr.run(dev_x, dev_y, tx, ty)
     assert h["acc"][-1] > h["acc"][0]
+
+
+def test_collect_seeds_batched_invariants(data):
+    """The device-axis-batched pipeline keeps the old path's guarantees:
+    uploaded set is (D*Ns, ...), inverse set has hard labels in range,
+    pairing produced cross-device symmetric pairs, and the inverse set
+    meets the N_I augmentation target."""
+    dev_x, dev_y, _, _ = data
+    fc = _cfg("mix2fld")
+    tr = FederatedTrainer(CNN(), fc, SYM)
+    seeds = tr.collect_seeds(jnp.asarray(dev_x), jnp.asarray(dev_y),
+                             jax.random.PRNGKey(3))
+    D, Ns = fc.num_devices, fc.n_seed
+    assert seeds["uploaded"].shape[0] == D * Ns
+    assert seeds["raw_pairs"].shape[:2] == (D * Ns, 2)
+    assert seeds["train_x"].shape[0] == fc.n_inverse * D
+    assert seeds["train_x"].shape[1:] == seeds["uploaded"].shape[1:]
+    assert seeds["train_y"].ndim == 1
+    y = np.asarray(seeds["train_y"])
+    assert y.min() >= 0 and y.max() < fc.num_classes
+    assert seeds["n_pairs"] > 0
+
+
+def test_collect_seeds_lam_half_degrades_to_soft_labels(data):
+    """lam = 0.5 makes Prop. 1 singular; the pipeline must fall back to
+    soft-label (MixFLD-style) training instead of dividing by zero."""
+    dev_x, dev_y, _, _ = data
+    tr = FederatedTrainer(CNN(), _cfg("mix2fld", lam=0.5), SYM)
+    seeds = tr.collect_seeds(jnp.asarray(dev_x), jnp.asarray(dev_y),
+                             jax.random.PRNGKey(5))
+    assert seeds["train_y"].ndim == 2  # soft labels
+    assert bool(jnp.isfinite(seeds["train_x"]).all())
+
+
+def test_collect_seeds_fld_draws_without_replacement(data):
+    dev_x, dev_y, _, _ = data
+    fc = _cfg("fld")
+    tr = FederatedTrainer(CNN(), fc, SYM)
+    seeds = tr.collect_seeds(jnp.asarray(dev_x), jnp.asarray(dev_y),
+                             jax.random.PRNGKey(4))
+    assert seeds["train_x"].shape[0] == fc.num_devices * fc.n_seed
+    assert seeds["train_y"].shape == (fc.num_devices * fc.n_seed,)
+
+
+# downlink that never decodes (p_dn far below the SNR target) vs always
+NO_DN = ChannelConfig(num_devices=5, p_up_dbm=40.0, p_dn_dbm=-60.0)
+
+
+def test_fd_downlink_gating_keeps_previous_gout(data):
+    """A device whose downlink failed must keep its previous G_out rather
+    than receiving the new one for free."""
+    dev_x, dev_y, tx, ty = data
+    fc = _cfg("fd", max_rounds=2, local_iters=10)
+    tr = FederatedTrainer(CNN(), fc, NO_DN)
+    tr.run(dev_x, dev_y, tx, ty)
+    C = fc.num_classes
+    # every downlink outages => all devices still hold the uniform prior
+    np.testing.assert_allclose(np.asarray(tr.last_dev_gout),
+                               np.full((5, C, C), 1.0 / C), atol=1e-6)
+    # control: with a clean downlink the tables are refreshed
+    tr2 = FederatedTrainer(CNN(), fc, SYM)
+    tr2.run(dev_x, dev_y, tx, ty)
+    assert float(np.abs(np.asarray(tr2.last_dev_gout) - 1.0 / C).max()) > 1e-3

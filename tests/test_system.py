@@ -13,6 +13,7 @@ from repro.data import partition_noniid, synthetic_images, synthetic_tokens
 from repro.models.cnn import CNN
 
 
+@pytest.mark.slow
 def test_mix2fld_full_pipeline_asymmetric_noniid():
     """Algorithm 1 end to end, the paper's headline setting: asymmetric
     channel + non-IID data.  Mix2FLD must (a) run every stage, (b) keep
