@@ -16,7 +16,7 @@ from repro.core.mixup import (inverse_mixup, make_mixup_batch, mixup_pairs,
 from repro.core.protocols import FederatedConfig, FederatedTrainer
 from repro.models.cnn import CNN
 
-from .common import protocol_dataset, save_result
+from .common import protocol_dataset, save_result, time_call
 
 
 def _collect_seeds_loop(fc, dev_x, dev_y, key):
@@ -83,6 +83,60 @@ def bench_seed_pipeline(num_devices: int = 50, per_device: int = 100,
     return row
 
 
+def bench_sharded_round(device_counts=(50, 200), local_iters: int = 5,
+                        per_device: int = 50):
+    """Wall-clock of one round-loop step (local SGD over all devices +
+    weighted aggregation + eq. 2 output average), mesh-sharded vs vmapped.
+
+    On a 1-chip host the sharded path measures shard_map/psum overhead
+    (should be ~1x); on a multi-chip host the device axis splits across
+    the mesh and the ratio becomes the scaling win."""
+    out = {}
+    rows = []
+    for nd in device_counts:
+        dev_x, dev_y, _, _ = protocol_dataset(num_devices=nd,
+                                              per_device=per_device,
+                                              n_test=10)
+        dev_x, dev_y = jnp.asarray(dev_x), jnp.asarray(dev_y)
+        times = {}
+        shards = 1
+        for sharded in (False, True):
+            fc = FederatedConfig(protocol="mix2fld", num_devices=nd,
+                                 local_iters=local_iters, local_batch=16,
+                                 shard_devices=sharded)
+            tr = FederatedTrainer(CNN(), fc)
+            if tr.mesh is not None:
+                shards = tr.mesh.devices.size
+            C = fc.num_classes
+            g0 = tr.model.init(jax.random.PRNGKey(0))
+            dev_params = jax.tree.map(
+                lambda p: jnp.broadcast_to(p, (nd,) + p.shape).copy(), g0)
+            dev_gout = jnp.full((nd, C, C), 1.0 / C)
+            dkeys = jax.random.split(jax.random.PRNGKey(1), nd)
+            ok = jnp.ones((nd,), jnp.float32)
+
+            def step():
+                params, favg, cnt, _ = tr._local_train(
+                    dev_params, dev_x, dev_y, dkeys, dev_gout,
+                    jnp.asarray(True))
+                g = tr._weighted_avg(params, ok * dev_x.shape[1])
+                gout = tr._gout_update(favg, cnt, ok)
+                return jax.tree.leaves(g) + [gout]
+
+            # one warmup (compile) + one timed call: a round step is
+            # seconds-long, so more repeats would not buy stability
+            us = time_call(step, repeats=1, warmup=1)
+            times["sharded" if sharded else "vmapped"] = us / 1e6
+        out[nd] = dict(times, shards=shards, local_iters=local_iters,
+                       per_device=per_device)
+        rows.append(f"sharded_round/D{nd},{times['sharded']*1e6:.0f},"
+                    f"vmapped_us={times['vmapped']*1e6:.0f};"
+                    f"shards={shards}")
+        print(rows[-1])
+    save_result("sharded_round_loop", out)
+    return rows
+
+
 def run(device_counts=(5, 10, 20), seeds=(0, 1, 2), iid=True,
         local_iters=100, max_rounds=4):
     out = {}
@@ -108,6 +162,7 @@ def run(device_counts=(5, 10, 20), seeds=(0, 1, 2), iid=True,
 
 def main():
     rows = [bench_seed_pipeline()]
+    rows += bench_sharded_round()
     out = run(device_counts=(5, 10), seeds=(0, 1), local_iters=60,
               max_rounds=3)
     for nd, v in out.items():

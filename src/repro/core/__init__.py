@@ -1,6 +1,7 @@
 """Mix2FLD core: the paper's contribution as composable JAX modules."""
 from .mixup import (mixup_pairs, inverse_mixup_ratios, inverse_mixup,
-                    inverse_mixup_n, make_mixup_batch, pair_symmetric,
+                    inverse_mixup_n, make_mixup_batch,
+                    make_mixup_batch_pallas, pair_symmetric,
                     cycle_lams, find_label_cycles,
                     inverse_mixup_cycles)  # noqa: F401
 from .losses import cross_entropy, kd_regularizer, fd_loss  # noqa: F401

@@ -10,11 +10,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..kernels.distill_loss import distill_phi_psi
+
 
 def cross_entropy(logits, labels, num_classes=None):
     """phi: mean CE. logits (..., C); labels int (...,) or one-hot/soft."""
     logp = jax.nn.log_softmax(logits, axis=-1)
-    if labels.dtype in (jnp.int32, jnp.int64):
+    if jnp.issubdtype(labels.dtype, jnp.integer):
         ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
         return -jnp.mean(ll)
     return -jnp.mean(jnp.sum(labels * logp, axis=-1))
@@ -27,10 +29,24 @@ def kd_regularizer(logits, target_probs):
     return -jnp.mean(jnp.sum(target_probs * logp, axis=-1))
 
 
-def fd_loss(logits, labels, gout, beta: float):
+def fd_loss(logits, labels, gout, beta: float, *, use_kernel=None):
     """eq. (3)/(5): phi + beta * psi, with the KD target row selected by the
     ground-truth label.  gout: (C, C) — row n is the global average output
-    vector for ground-truth label n."""
+    vector for ground-truth label n.
+
+    On the local-SGD hot path (2-D logits, integer labels) both phi and psi
+    dispatch through the fused ``distill_phi_psi`` Pallas kernel pair
+    (forward and backward; interpret off-TPU).  ``use_kernel=False`` forces
+    the pure-jnp reference — the oracle the kernel-parity tests check value
+    and gradient against.  Soft labels always take the reference path.
+    """
+    if use_kernel is None:
+        use_kernel = (logits.ndim == 2 and labels.ndim == 1
+                      and jnp.issubdtype(labels.dtype, jnp.integer))
+    if use_kernel:
+        phi_s, psi_s = distill_phi_psi(logits, labels, gout[labels])
+        phi, psi = jnp.mean(phi_s), jnp.mean(psi_s)
+        return phi + beta * psi, (phi, psi)
     phi = cross_entropy(logits, labels)
     target = gout[labels]  # (..., C)
     psi = kd_regularizer(logits, target)

@@ -12,6 +12,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from ..kernels.mixup_kernel import mixup_pallas
+
 
 # ---------------------------------------------------------------------------
 # Proposition 1
@@ -63,6 +65,30 @@ def make_mixup_batch(x, y, idx_i, idx_j, lam: float, num_classes: int):
     yj = jax.nn.one_hot(y[idx_j], num_classes)
     soft = lam * yi + (1.0 - lam) * yj
     return mixed, soft, (y[idx_i], y[idx_j])  # minor (lam) / major (1-lam)
+
+
+def make_mixup_batch_pallas(dev_x, dev_y, idx_i, idx_j, lam: float,
+                            num_classes: int):
+    """Device-axis-batched eq. (6) through the ``mixup_pallas`` kernel.
+
+    dev_x: (D, n_local, ...); dev_y: (D, n_local); idx_i/idx_j: (D, Ns).
+    All D * Ns sample mixes run as one flattened (rows x features) kernel
+    call instead of a vmapped jnp lerp; tiny label mixes stay in jnp.
+    Returns the same (mixed, soft, (minor, major)) triple — each (D, Ns,
+    ...) — as ``jax.vmap(make_mixup_batch)``, which is its parity oracle.
+    """
+    gather = jax.vmap(lambda x, i: x[i])
+    xi = gather(dev_x, idx_i)                      # (D, Ns, ...)
+    xj = gather(dev_x, idx_j)
+    d, ns = idx_i.shape
+    la = jnp.full((d * ns,), lam, jnp.float32)
+    mixed = mixup_pallas(xi.reshape(d * ns, -1), xj.reshape(d * ns, -1),
+                         la, 1.0 - la).reshape(xi.shape)
+    minor = jnp.take_along_axis(dev_y, idx_i, axis=1)
+    major = jnp.take_along_axis(dev_y, idx_j, axis=1)
+    soft = (lam * jax.nn.one_hot(minor, num_classes) +
+            (1.0 - lam) * jax.nn.one_hot(major, num_classes))
+    return mixed, soft, (minor, major)
 
 
 # ---------------------------------------------------------------------------

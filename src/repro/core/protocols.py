@@ -1,13 +1,24 @@
 """Protocol engines: FL, FD, FLD, MixFLD, Mix2FLD (Algorithm 1).
 
 The federated population is simulated exactly as in Sec. II: per-round
-local SGD at every device (vmapped), Rayleigh-faded uplink/downlink with
-SNR-gated success, weighted aggregation over the successful set, and — for
-the FLD family — the server-side output-to-model conversion of eq. (5).
+local SGD at every device, Rayleigh-faded uplink/downlink with SNR-gated
+success, weighted aggregation over the successful set, and — for the FLD
+family — the server-side output-to-model conversion of eq. (5).
 
-All device-side math is jitted and vmapped over the device axis; the round
-loop is host-side (it mixes channel sampling, convergence checks and
-tic-toc compute timing, as the paper does).
+Device-side math is jitted over the device axis on one of two paths,
+selected by ``FederatedConfig.shard_devices``:
+
+* **vmapped** (default) — the whole population on one chip, the 1-chip
+  fallback and the equivalence oracle for the sharded path;
+* **mesh-sharded** — the device axis is placed along the "data" axis of a
+  1-D mesh (launch.mesh.make_device_mesh) and local SGD runs under
+  ``shard_map`` (per-shard vmap over the local device slice); the
+  cross-device reductions (weighted model average, the eq. 2 output
+  average) are psum collectives, so multi-chip hosts scale the population
+  with the chip count.
+
+The round loop itself is host-side (it mixes channel sampling,
+convergence checks and tic-toc compute timing, as the paper does).
 """
 from __future__ import annotations
 
@@ -19,12 +30,19 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+try:  # jax >= 0.6 graduated shard_map out of experimental
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
 from ..channel import ChannelConfig, payload_bits, round_trip
 from ..kernels.mixup_kernel import mixup_pallas
+from ..launch.mesh import make_device_mesh
+from ..launch.sharding import federated_pspecs
 from .conversion import output_to_model
 from .losses import fd_loss
 from .mixup import (find_label_cycles, inverse_mixup_cycles,
-                    make_mixup_batch, mixup_pairs, pair_symmetric)
+                    make_mixup_batch_pallas, mixup_pairs, pair_symmetric)
 from .outputs import label_averaged_outputs
 
 PROTOCOLS = ("fl", "fd", "fld", "mixfld", "mix2fld")
@@ -48,6 +66,9 @@ class FederatedConfig:
     max_rounds: int = 20
     sample_bits: int = 6272        # b_s = 8 bit * 28 * 28
     seed: int = 0
+    shard_devices: bool = False    # mesh-shard the device axis (False: vmap)
+    mesh_shards: int = 0           # 0 = auto (largest divisor of |D| that
+    #                                fits the local chip count)
 
 
 class FederatedTrainer:
@@ -97,8 +118,7 @@ class FederatedTrainer:
             favg = out_sum / jnp.maximum(cnt[:, None], 1.0)
             return params, favg, cnt, jnp.mean(losses)
 
-        self._local_train = jax.jit(jax.vmap(
-            local_train, in_axes=(0, 0, 0, 0, 0, None)))
+        vmapped = jax.vmap(local_train, in_axes=(0, 0, 0, 0, 0, None))
 
         def accuracy(params, x, y):
             logits = apply_fn(params, x)
@@ -106,19 +126,64 @@ class FederatedTrainer:
 
         self._accuracy = jax.jit(accuracy)
 
+        # cross-device reductions: the weighted model average and the
+        # eq. 2 per-class output average over the successful device set
         def weighted_avg(stacked, weights):
             wsum = jnp.maximum(jnp.sum(weights), 1e-9)
             return jax.tree.map(
                 lambda s: jnp.tensordot(weights, s, axes=1) / wsum, stacked)
 
-        self._weighted_avg = jax.jit(weighted_avg)
+        def gout_update(favg, cnt, ok):
+            cw = ok[:, None] * cnt                  # (D, C) per-class wts
+            num = jnp.einsum("dc,dcm->cm", cw, favg)
+            den = jnp.sum(cw, axis=0)
+            return num / jnp.maximum(den[:, None], 1.0)
+
+        self.mesh = None
+        if not fc.shard_devices:
+            self._local_train = jax.jit(vmapped)
+            self._weighted_avg = jax.jit(weighted_avg)
+            self._gout_update = jax.jit(gout_update)
+            return
+
+        # ---- mesh-sharded path: device axis along the "data" mesh axis,
+        # reductions as psum collectives over the shards ----
+        self.mesh = make_device_mesh(fc.num_devices,
+                                     fc.mesh_shards or None)
+        ps = federated_pspecs()
+        dev, rep = ps["device"], ps["replicated"]
+        self._local_train = jax.jit(shard_map(
+            vmapped, mesh=self.mesh,
+            in_specs=(dev, dev, dev, dev, dev, rep),
+            out_specs=(dev, dev, dev, dev), check_rep=False))
+
+        def weighted_avg_psum(stacked, weights):
+            wsum = jnp.maximum(jax.lax.psum(jnp.sum(weights), "data"), 1e-9)
+            part = jax.tree.map(
+                lambda s: jnp.tensordot(weights, s, axes=1), stacked)
+            return jax.tree.map(lambda t: jax.lax.psum(t, "data") / wsum,
+                                part)
+
+        def gout_update_psum(favg, cnt, ok):
+            cw = ok[:, None] * cnt
+            num = jax.lax.psum(jnp.einsum("dc,dcm->cm", cw, favg), "data")
+            den = jax.lax.psum(jnp.sum(cw, axis=0), "data")
+            return num / jnp.maximum(den[:, None], 1.0)
+
+        self._weighted_avg = jax.jit(shard_map(
+            weighted_avg_psum, mesh=self.mesh, in_specs=(dev, dev),
+            out_specs=rep, check_rep=False))
+        self._gout_update = jax.jit(shard_map(
+            gout_update_psum, mesh=self.mesh, in_specs=(dev, dev, dev),
+            out_specs=rep, check_rep=False))
 
     # ------------------------------------------------------------------
     def collect_seeds(self, dev_x, dev_y, key):
         """Round-1 seed collection, batched over the device axis.
 
-        Device-side Mixup is one vmapped ``mixup_pairs``/``make_mixup_batch``
-        over (D, n_seed); server-side pairing is the vectorized sort-based
+        Device-side Mixup is one vmapped ``mixup_pairs`` draw plus a single
+        ``make_mixup_batch_pallas`` kernel call over all (D, n_seed)
+        mixes; server-side pairing is the vectorized sort-based
         ``pair_symmetric`` over the whole (D*Ns,) upload set; the paired
         inverse-Mixup samples are computed in one shot through the
         ``mixup_pallas`` kernel (scalar ``mixup.inverse_mixup`` stays as the
@@ -147,11 +212,13 @@ class FederatedTrainer:
             return {"train_x": seeds_x, "train_y": seeds_y.reshape(-1),
                     "uploaded": seeds_x, "raw_pairs": None}
 
-        # ---- Mixup at devices (eq. 6), vmapped over the device axis ----
+        # ---- Mixup at devices (eq. 6), batched over the device axis and
+        # mixed through the mixup_pallas kernel (same treatment the
+        # server-side inverse gets below; jax.vmap(make_mixup_batch) is
+        # the parity oracle in tests/test_kernels.py) ----
         idx_i, idx_j = jax.vmap(mixup_pairs, in_axes=(0, 0, None, None))(
             keys, dev_y, fc.n_seed, C)                     # (D, Ns) each
-        mixed, softs, (minors, majors) = jax.vmap(
-            make_mixup_batch, in_axes=(0, 0, 0, 0, None, None))(
+        mixed, softs, (minors, majors) = make_mixup_batch_pallas(
             dev_x, dev_y, idx_i, idx_j, fc.lam, C)
         gather = jax.vmap(lambda x, i: x[i])
         raws = jnp.stack([gather(dev_x, idx_i), gather(dev_x, idx_j)],
@@ -282,12 +349,10 @@ class FederatedTrainer:
                     g_params = self._weighted_avg(dev_params, jnp.asarray(w))
             else:
                 if up_ok.any():
-                    # weight per-class rows by per-device counts (eq. 2
-                    # averaged over the successful device set)
-                    cw = jnp.asarray(up_ok[:, None]) * cnt  # (D, C)
-                    num = jnp.einsum("dc,dcm->cm", cw, favg)
-                    den = jnp.sum(cw, axis=0)               # (C,) per class
-                    gout = num / jnp.maximum(den[:, None], 1.0)
+                    # eq. 2 averaged over the successful device set (psum
+                    # collective on the sharded path)
+                    gout = self._gout_update(
+                        favg, cnt, jnp.asarray(up_ok, jnp.float32))
                 if proto != "fd":
                     g_params, _ = output_to_model(
                         self.model.apply, g_params, seeds["train_x"],

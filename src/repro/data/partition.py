@@ -34,24 +34,36 @@ def partition_iid(x, y, num_devices: int, per_device: int, num_classes: int,
 def partition_noniid(x, y, num_devices: int, num_classes: int = 10,
                      rare_labels: int = 2, rare_count: int = 2,
                      common_count: int = 62, seed: int = 0):
+    """Device-axis vectorized like :func:`partition_iid`: the rare-label
+    draw is one batched per-row permutation, each class pool is consumed
+    by all devices in a single slice (devices get disjoint samples until a
+    class runs out, then the shortfall is resampled with replacement), and
+    the (D, per_device) index matrix is assembled with one stable sort +
+    one batched in-row shuffle — no per-device Python loop."""
     rng = np.random.default_rng(seed)
     x, y = np.asarray(x), np.asarray(y)
-    by_class = [list(rng.permutation(np.flatnonzero(y == c))) for c in
-                range(num_classes)]
-    dev_x, dev_y = [], []
-    for _ in range(num_devices):
-        rare = rng.choice(num_classes, rare_labels, replace=False)
-        idx = []
-        for c in range(num_classes):
-            want = rare_count if c in rare else common_count
-            take, by_class[c] = by_class[c][:want], by_class[c][want:]
-            if len(take) < want:  # recycle if exhausted
-                extra = rng.choice(np.flatnonzero(y == c),
-                                   want - len(take)).tolist()
-                take = list(take) + extra
-            idx.extend(take)
-        idx = np.array(idx)
-        rng.shuffle(idx)
-        dev_x.append(x[idx])
-        dev_y.append(y[idx])
-    return np.stack(dev_x), np.stack(dev_y)
+    per_device = (rare_labels * rare_count
+                  + (num_classes - rare_labels) * common_count)
+    # (D, rare_labels) distinct rare classes per device, batched
+    rare = rng.permuted(
+        np.tile(np.arange(num_classes), (num_devices, 1)),
+        axis=1)[:, :rare_labels]
+    counts = np.full((num_devices, num_classes), common_count, np.int64)
+    np.put_along_axis(counts, rare, rare_count, axis=1)
+
+    dev_of, samp = [], []
+    for c in range(num_classes):
+        need = counts[:, c]
+        total = int(need.sum())
+        pool = rng.permutation(np.flatnonzero(y == c))
+        if pool.size < total:  # recycle if exhausted
+            extra = rng.choice(np.flatnonzero(y == c), total - pool.size)
+            pool = np.concatenate([pool, extra])
+        dev_of.append(np.repeat(np.arange(num_devices), need))
+        samp.append(pool[:total])
+    dev_of = np.concatenate(dev_of)
+    samp = np.concatenate(samp)
+    order = np.argsort(dev_of, kind="stable")
+    idx = samp[order].reshape(num_devices, per_device)
+    idx = rng.permuted(idx, axis=1)             # per-device shuffle, batched
+    return x[idx], y[idx]

@@ -15,6 +15,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .runtime import default_interpret as _default_interpret
+
 ROW_BLOCK = 256
 COL_BLOCK = 512
 
@@ -25,11 +27,6 @@ def _mixup_kernel(a_ref, b_ref, la_ref, lb_ref, o_ref):
     la = la_ref[...]  # (rows, 1)
     lb = lb_ref[...]
     o_ref[...] = (la * a + lb * b).astype(o_ref.dtype)
-
-
-def _default_interpret() -> bool:
-    """Compile on TPU (Mosaic), interpret everywhere else (CPU tests)."""
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))

@@ -5,17 +5,13 @@ TPU backends the same pallas_call lowers to Mosaic.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from .distill_loss import distill_loss_pallas
 from .flash_attention import flash_attention_pallas
 from .mixup_kernel import mixup_pallas
+from .runtime import default_interpret as _interpret
 from .ssd_scan import ssd_scan_pallas
-
-
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def mixup(a, b, lam: float):

@@ -1,0 +1,9 @@
+"""Shared kernel-dispatch policy."""
+from __future__ import annotations
+
+import jax
+
+
+def default_interpret() -> bool:
+    """Compile on TPU (Mosaic), interpret everywhere else (CPU tests)."""
+    return jax.default_backend() != "tpu"

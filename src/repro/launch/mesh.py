@@ -29,6 +29,26 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_device_mesh(num_devices: int, shards: int | None = None):
+    """1-D ("data",) mesh for the federated *device* axis of the round loop
+    (core.protocols, ``FederatedConfig.shard_devices``).
+
+    shard_map blocks must be equal-sized, so the shard count defaults to
+    the largest divisor of the device population that fits the local chip
+    count — a 1-chip host gets a 1-shard mesh (the sharded path then
+    reduces to the vmapped path exactly, which the protocol-regression
+    equivalence test locks down).
+    """
+    avail = len(jax.devices())
+    if shards is None:
+        shards = max(n for n in range(1, min(num_devices, avail) + 1)
+                     if num_devices % n == 0)
+    if num_devices % shards:
+        raise ValueError(f"device population {num_devices} not divisible "
+                         f"by {shards} mesh shards")
+    return jax.make_mesh((shards,), ("data",))
+
+
 def data_axes(mesh) -> tuple:
     """Axes that shard the batch: ("pod","data") when pods exist."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

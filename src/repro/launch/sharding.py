@@ -30,6 +30,20 @@ def batch_axes(mesh):
 
 
 # ---------------------------------------------------------------------------
+# Federated round-loop rules (device axis)
+# ---------------------------------------------------------------------------
+
+def federated_pspecs():
+    """PartitionSpecs for the shard_mapped federated round loop over a 1-D
+    ("data",) mesh (launch.mesh.make_device_mesh): ``device`` shards the
+    leading device axis of every per-device operand (stacked params,
+    local datasets, per-round PRNG keys, per-device G_out tables),
+    ``replicated`` covers scalars and the aggregated tables the psum
+    collectives return on every shard."""
+    return {"device": P("data"), "replicated": P()}
+
+
+# ---------------------------------------------------------------------------
 # Parameter rules
 # ---------------------------------------------------------------------------
 

@@ -6,7 +6,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
-from repro.kernels.distill_loss import distill_loss_pallas
+from repro.kernels.distill_loss import distill_loss_pallas, distill_phi_psi
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.mixup_kernel import mixup_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
@@ -62,6 +62,143 @@ def test_distill_loss_agrees_with_core_fd_loss():
     got = ops.distill_loss(logits, labels, gout, 0.01)
     want, _ = fd_loss(logits, labels, gout, 0.01)
     np.testing.assert_allclose(float(got), float(want), rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Hot-path parity: the fused phi/psi custom_vjp pair behind fd_loss and the
+# device-side Mixup kernel behind collect_seeds, vs their jnp references
+# (interpret mode on CPU; shapes include non-divisible row/col blocks)
+# ---------------------------------------------------------------------------
+
+def _fd_batch(n, c, seed=0):
+    k = jax.random.PRNGKey(seed)
+    logits = jax.random.normal(k, (n, c)) * 3
+    labels = jax.random.randint(jax.random.fold_in(k, 1), (n,), 0, c)
+    gout = jax.nn.softmax(
+        jax.random.normal(jax.random.fold_in(k, 2), (c, c)) * 2)
+    return logits, labels, gout
+
+
+# 100/300 break ROW_BLOCK=128; 257/33 are odd class/class-row dims
+@pytest.mark.parametrize("n,c", [(16, 10), (128, 10), (100, 33),
+                                 (300, 64), (50, 257)])
+def test_fd_loss_kernel_value_parity(n, c):
+    from repro.core.losses import fd_loss
+    logits, labels, gout = _fd_batch(n, c)
+    got, (gphi, gpsi) = fd_loss(logits, labels, gout, 0.01)
+    want, (wphi, wpsi) = fd_loss(logits, labels, gout, 0.01,
+                                 use_kernel=False)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+    np.testing.assert_allclose(float(gphi), float(wphi), rtol=1e-5)
+    np.testing.assert_allclose(float(gpsi), float(wpsi), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n,c", [(16, 10), (100, 33), (300, 64)])
+@pytest.mark.parametrize("beta", [0.0, 0.01, 0.5])
+def test_fd_loss_kernel_grad_parity(n, c, beta):
+    """custom_vjp backward kernel vs jax-derived reference gradients, in
+    both differentiable arguments (logits and the G_out table through the
+    row gather)."""
+    from repro.core.losses import fd_loss
+    logits, labels, gout = _fd_batch(n, c, seed=1)
+
+    for arg in (0, 1):
+        gk = jax.grad(lambda l, g: fd_loss(l, labels, g, beta)[0],
+                      argnums=arg)(logits, gout)
+        gr = jax.grad(
+            lambda l, g: fd_loss(l, labels, g, beta, use_kernel=False)[0],
+            argnums=arg)(logits, gout)
+        np.testing.assert_allclose(np.asarray(gk), np.asarray(gr),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_fd_loss_kernel_unnormalised_gout_rows():
+    """psi carries the exact sum(g)*lse term: zero / unnormalised G_out
+    rows (classes never observed in eq. 2) must still match the jnp
+    reference, not assume sum(g) = 1."""
+    from repro.core.losses import fd_loss
+    logits, labels, gout = _fd_batch(64, 10, seed=2)
+    gout = gout.at[::2].set(0.0)  # half the rows zeroed
+    got, _ = fd_loss(logits, labels, gout, 0.3)
+    want, _ = fd_loss(logits, labels, gout, 0.3, use_kernel=False)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5)
+    gk = jax.grad(lambda l: fd_loss(l, labels, gout, 0.3)[0])(logits)
+    gr = jax.grad(lambda l: fd_loss(l, labels, gout, 0.3,
+                                    use_kernel=False)[0])(logits)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), atol=1e-5)
+
+
+def test_fd_loss_kernel_under_vmap_scan_value_and_grad():
+    """The exact hot-path composition: fd_loss under value_and_grad inside
+    a scan, vmapped over the device axis (what _local_train traces)."""
+    from repro.core.losses import fd_loss
+    d, b, c = 3, 16, 10
+    k = jax.random.PRNGKey(4)
+    logits = jax.random.normal(k, (d, b, c))
+    labels = jax.random.randint(jax.random.fold_in(k, 1), (d, b), 0, c)
+    gout = jax.nn.softmax(jax.random.normal(jax.random.fold_in(k, 2),
+                                            (c, c)))
+
+    def device_loss(use_kernel):
+        def per_device(lg, lb):
+            def body(carry, _):
+                l, g = jax.value_and_grad(
+                    lambda z: fd_loss(z, lb, gout, 0.1,
+                                      use_kernel=use_kernel)[0])(lg)
+                return carry + l, g
+            tot, gs = jax.lax.scan(body, 0.0, jnp.arange(2))
+            return tot, gs
+        return jax.vmap(per_device)(logits, labels)
+
+    tk, gk = device_loss(True)
+    tr, gr = device_loss(False)
+    np.testing.assert_allclose(np.asarray(tk), np.asarray(tr), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(gk), np.asarray(gr), atol=1e-5)
+
+
+def test_distill_phi_psi_per_sample_values():
+    """Per-sample (phi, psi) vs a hand-rolled jnp computation."""
+    logits, labels, gout = _fd_batch(37, 12, seed=5)
+    g_rows = gout[labels]
+    phi, psi = distill_phi_psi(logits, labels, g_rows)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    wphi = lse - jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+    wpsi = (jnp.sum(g_rows, -1) * lse - jnp.sum(g_rows * logits, -1))
+    np.testing.assert_allclose(np.asarray(phi), np.asarray(wphi),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(psi), np.asarray(wpsi),
+                               rtol=1e-5, atol=1e-6)
+
+
+# (D, Ns, n_local) shapes chosen so D*Ns and the flattened feature dim
+# both miss the kernel's 256/512 block sizes
+@pytest.mark.parametrize("d,ns,n_local", [(3, 7, 40), (5, 10, 64),
+                                          (2, 3, 20)])
+@pytest.mark.parametrize("lam", [0.2, 0.4])
+def test_device_mixup_kernel_matches_vmapped_eq6(d, ns, n_local, lam):
+    """make_mixup_batch_pallas (one kernel call over all D*Ns mixes) vs
+    the vmapped jnp eq. 6 path it replaced on the seed-collection hot
+    path — samples, soft labels and class metadata."""
+    from repro.core.mixup import (make_mixup_batch, make_mixup_batch_pallas,
+                                  mixup_pairs)
+    c = 10
+    k = jax.random.PRNGKey(6)
+    dev_x = jax.random.uniform(k, (d, n_local, 9, 5, 1))
+    dev_y = jax.random.randint(jax.random.fold_in(k, 1), (d, n_local), 0, c)
+    keys = jax.random.split(jax.random.fold_in(k, 2), d)
+    idx_i, idx_j = jax.vmap(mixup_pairs, in_axes=(0, 0, None, None))(
+        keys, dev_y, ns, c)
+    got_x, got_s, (got_mi, got_ma) = make_mixup_batch_pallas(
+        dev_x, dev_y, idx_i, idx_j, lam, c)
+    want_x, want_s, (want_mi, want_ma) = jax.vmap(
+        make_mixup_batch, in_axes=(0, 0, 0, 0, None, None))(
+        dev_x, dev_y, idx_i, idx_j, lam, c)
+    np.testing.assert_allclose(np.asarray(got_x), np.asarray(want_x),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                               atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(got_mi), np.asarray(want_mi))
+    np.testing.assert_array_equal(np.asarray(got_ma), np.asarray(want_ma))
 
 
 @pytest.mark.parametrize("bh,s,d", [(2, 256, 64), (4, 512, 32), (1, 512, 128)])

@@ -145,6 +145,98 @@ def test_collect_seeds_fld_draws_without_replacement(data):
     assert seeds["train_y"].shape == (fc.num_devices * fc.n_seed,)
 
 
+# ---------------------------------------------------------------------------
+# Fixed-seed regression goldens + sharded-vs-vmapped equivalence (fast
+# configs: these run in the tier-1 suite and lock the round loop down)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def golden_data():
+    x, y = synthetic_images(jax.random.PRNGKey(42), 1400)
+    dev_x, dev_y = partition_iid(np.asarray(x[:1200]), np.asarray(y[:1200]),
+                                 4, 300, 10, seed=0)
+    return dev_x, dev_y, jnp.asarray(x[1200:]), jnp.asarray(y[1200:])
+
+
+def _golden_cfg(protocol, **kw):
+    base = dict(protocol=protocol, num_devices=4, local_iters=8,
+                local_batch=16, server_iters=8, server_batch=16,
+                max_rounds=3, n_seed=6, n_inverse=12, seed=0)
+    base.update(kw)
+    return FederatedConfig(**base)
+
+
+GOLDEN_CH = ChannelConfig(num_devices=4, p_up_dbm=40.0)
+
+# 3-round histories recorded when the sharded round loop / Pallas hot
+# path landed; if an *intentional* numerics change lands, regenerate with
+# the snippet in docs/sharded_round_loop.md §Regression goldens
+GOLDEN = {
+    "fl": dict(
+        acc=[0.075, 0.125, 0.285],
+        loss=[2.324292, 2.29544, 2.267828],
+        latency_s=[0.062, 0.06, 0.062]),
+    "fd": dict(
+        acc=[0.11, 0.105, 0.14],
+        loss=[2.324292, 2.31746, 2.294407],
+        latency_s=[0.002, 0.002, 0.002]),
+    "fld": dict(
+        acc=[0.12, 0.12, 0.13],
+        loss=[2.324292, 2.32959, 2.335337],
+        latency_s=[0.027, 0.021, 0.022]),
+    "mix2fld": dict(
+        acc=[0.09, 0.09, 0.21],
+        loss=[2.324292, 2.43485, 2.411686],
+        latency_s=[0.027, 0.021, 0.022]),
+}
+
+
+@pytest.mark.parametrize("protocol", sorted(GOLDEN))
+def test_protocol_golden_history(protocol, golden_data):
+    """Fixed-seed 3-round histories must reproduce the recorded goldens:
+    catches silent numerics drift anywhere on the round loop (local SGD,
+    kernels, aggregation, channel, conversion)."""
+    dev_x, dev_y, tx, ty = golden_data
+    tr = FederatedTrainer(CNN(), _golden_cfg(protocol), GOLDEN_CH)
+    h = tr.run(dev_x, dev_y, tx, ty)
+    want = GOLDEN[protocol]
+    np.testing.assert_allclose(h["acc"], want["acc"], atol=1e-4)
+    np.testing.assert_allclose(h["loss"], want["loss"], atol=1e-4)
+    np.testing.assert_allclose(h["round_latency_s"], want["latency_s"],
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("protocol", ["fd", "mix2fld"])
+def test_sharded_round_loop_matches_vmapped(protocol, golden_data):
+    """shard_devices=True on a 1-chip mesh must reproduce the vmapped
+    path's fixed-seed history within 1e-4 (the psum collectives reduce to
+    the tensordot/einsum reductions when there is one shard)."""
+    dev_x, dev_y, tx, ty = golden_data
+    tr_v = FederatedTrainer(CNN(), _golden_cfg(protocol), GOLDEN_CH)
+    h_v = tr_v.run(dev_x, dev_y, tx, ty)
+    tr_s = FederatedTrainer(CNN(), _golden_cfg(protocol, shard_devices=True),
+                            GOLDEN_CH)
+    assert tr_s.mesh is not None and tr_v.mesh is None
+    h_s = tr_s.run(dev_x, dev_y, tx, ty)
+    np.testing.assert_allclose(h_s["acc"], h_v["acc"], atol=1e-4)
+    np.testing.assert_allclose(h_s["loss"], h_v["loss"], atol=1e-4)
+    assert h_s["round_latency_s"] == h_v["round_latency_s"]
+    assert h_s["converged_round"] == h_v["converged_round"]
+    np.testing.assert_allclose(np.asarray(tr_s.last_dev_gout),
+                               np.asarray(tr_v.last_dev_gout), atol=1e-5)
+
+
+def test_sharded_mesh_auto_shard_count():
+    """make_device_mesh picks the largest divisor of |D| that fits the
+    local chip count, and rejects non-divisible explicit counts."""
+    from repro.launch.mesh import make_device_mesh
+    mesh = make_device_mesh(10)
+    assert mesh.axis_names == ("data",)
+    assert 10 % mesh.devices.size == 0
+    with pytest.raises(ValueError):
+        make_device_mesh(10, shards=3)
+
+
 # downlink that never decodes (p_dn far below the SNR target) vs always
 NO_DN = ChannelConfig(num_devices=5, p_up_dbm=40.0, p_dn_dbm=-60.0)
 
