@@ -2,7 +2,12 @@
 
 Prints ``name,us_per_call,derived`` CSV rows.  Full (paper-scale) variants
 run via each module's __main__; here the quick variants keep the whole
-suite CPU-tractable.
+suite CPU-tractable.  Protocol-grid modules (protocols, seed_sweep) run
+on the compiled sweep engine (repro.sweep) — whole grids per program —
+and seed_sweep also records the engine's sweep-vs-loop speedup
+(benchmarks/results/sweep_engine.json).
+
+Select a subset by name: ``python -m benchmarks.run seed_sweep kernels``.
 """
 from __future__ import annotations
 
@@ -10,7 +15,7 @@ import sys
 import traceback
 
 
-def main() -> None:
+def main(argv=None) -> None:
     from . import (bench_kernels, bench_payload, bench_privacy,
                    bench_protocols, bench_roofline, bench_scalability,
                    bench_seed_sweep)
@@ -20,10 +25,18 @@ def main() -> None:
         ("privacy", bench_privacy),      # Tables II & III
         ("kernels", bench_kernels),      # Pallas kernels vs oracles
         ("roofline", bench_roofline),    # dry-run roofline terms
-        ("protocols", bench_protocols),  # Fig. 2 (quick)
-        ("seed_sweep", bench_seed_sweep),  # (N_S, N_I) tradeoff (quick)
+        ("protocols", bench_protocols),  # Fig. 2 (quick, sweep engine)
+        ("seed_sweep", bench_seed_sweep),  # (N_S, N_I) grid + engine speedup
         ("scalability", bench_scalability),  # Fig. 3 (quick)
     ]
+    wanted = set(sys.argv[1:] if argv is None else argv)
+    if wanted:
+        unknown = wanted - {n for n, _ in modules}
+        if unknown:
+            raise SystemExit(f"unknown benchmark module(s): "
+                             f"{sorted(unknown)}; "
+                             f"available: {[n for n, _ in modules]}")
+        modules = [(n, m) for n, m in modules if n in wanted]
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in modules:

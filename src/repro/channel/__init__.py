@@ -1,4 +1,5 @@
 """Wireless channel model (Sec. II-C): Rayleigh block fading, SNR-threshold
 decoding, FDMA uplink / multicast downlink, latency and outage."""
-from .model import ChannelConfig, simulate_link, round_trip  # noqa: F401
-from .payload import payload_bits  # noqa: F401
+from .model import (ChannelConfig, link_outcomes, round_trip,  # noqa: F401
+                    round_trip_traced, simulate_link, slots_needed)
+from .payload import payload_bits, round_slot_plan  # noqa: F401

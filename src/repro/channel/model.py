@@ -4,6 +4,15 @@ SNR_{d,t} = P h_{d,t} r_d^-alpha / (W^y N_0),  h ~ Exp(1) IID.
 A slot decodes iff SNR >= theta, delivering tau * W^y * log2(1 + theta)
 bits.  Latency T^y = first slot where cumulative bits >= payload;
 outage if T^y > T_max.
+
+The draw itself lives in :func:`link_outcomes`, which accepts the success
+probability and the required slot count as *traced* scalars — the
+protocol-sweep engine (repro.sweep) vmaps it over per-config channel
+regimes, while the host-side :func:`simulate_link`/:func:`round_trip`
+wrappers feed it Python scalars.  Both paths therefore consume the PRNG
+identically: equal keys and equal (p, slots) values give bitwise-equal
+masks and latencies, which is what the sweep-vs-loop equivalence tests
+lock down.
 """
 from __future__ import annotations
 
@@ -42,22 +51,43 @@ class ChannelConfig:
         return p_success, bits
 
 
+def slots_needed(payload_bits: float, bits_per_slot: float) -> int:
+    """Host-side decode-slot requirement for one payload (>= 1)."""
+    return max(1, math.ceil(payload_bits / bits_per_slot))
+
+
+def link_outcomes(key, p_success, slots, n_links: int, t_max_slots: int):
+    """Traced core of the link draw: (latency_slots (n,), success (n,)).
+
+    ``p_success`` and ``slots`` may be Python scalars or traced scalars;
+    ``n_links``/``t_max_slots`` are static (they size the bernoulli draw).
+    Latency is t_max for outage links (they spent the whole window
+    trying), per Sec. II-C.
+    """
+    good = jax.random.bernoulli(key, p_success, (n_links, t_max_slots))
+    cum = jnp.cumsum(good.astype(jnp.int32), axis=1)
+    reached = cum >= slots
+    latency = jnp.where(reached.any(axis=1),
+                        jnp.argmax(reached, axis=1) + 1,
+                        t_max_slots)
+    return latency, reached.any(axis=1)
+
+
+def slowest_ok_slots(t, ok, t_max_slots: int):
+    """Slots spent waiting on the slowest *successful* link; the full
+    window only when every link outages (they contribute nothing)."""
+    return jnp.where(jnp.any(ok), jnp.max(jnp.where(ok, t, 0)), t_max_slots)
+
+
 def simulate_link(key, cfg: ChannelConfig, payload_bits: float, up: bool,
                   n_links: int):
     """Simulate ``n_links`` independent links for one global update.
 
-    Returns (latency_slots (n,), success (n,) bool).  Latency is t_max for
-    outage links (they spent the whole window trying), per Sec. II-C.
+    Returns (latency_slots (n,), success (n,) bool).
     """
     p, bits = cfg.link_budget(up)
-    slots_needed = max(1, math.ceil(payload_bits / bits))
-    good = jax.random.bernoulli(key, p, (n_links, cfg.t_max_slots))
-    cum = jnp.cumsum(good.astype(jnp.int32), axis=1)
-    reached = cum >= slots_needed
-    latency = jnp.where(reached.any(axis=1),
-                        jnp.argmax(reached, axis=1) + 1,
-                        cfg.t_max_slots)
-    return latency, reached.any(axis=1)
+    return link_outcomes(key, p, slots_needed(payload_bits, bits), n_links,
+                         cfg.t_max_slots)
 
 
 def round_trip(key, cfg: ChannelConfig, up_bits: float, dn_bits: float):
@@ -75,12 +105,28 @@ def round_trip(key, cfg: ChannelConfig, up_bits: float, dn_bits: float):
     t_up, ok_up = simulate_link(ku, cfg, up_bits, True, cfg.num_devices)
     t_dn, ok_dn = simulate_link(kd, cfg, dn_bits, False, cfg.num_devices)
 
-    def _slowest_ok(t, ok):
-        return float(jnp.where(jnp.any(ok),
-                               jnp.max(jnp.where(ok, t, 0)),
-                               cfg.t_max_slots))
+    latency_s = cfg.tau_s * (
+        float(slowest_ok_slots(t_up, ok_up, cfg.t_max_slots)) +
+        float(slowest_ok_slots(t_dn, ok_dn, cfg.t_max_slots)))
+    return {"up_ok": ok_up, "dn_ok": ok_dn, "t_up": t_up, "t_dn": t_dn,
+            "latency_s": latency_s}
 
-    latency_s = cfg.tau_s * (_slowest_ok(t_up, ok_up) +
-                             _slowest_ok(t_dn, ok_dn))
+
+def round_trip_traced(key, p_up, up_slots, p_dn, dn_slots, n_links: int,
+                      t_max_slots: int, tau_s: float):
+    """Fully-traced :func:`round_trip` for the protocol-sweep engine.
+
+    ``p_up``/``p_dn`` (per-slot success probabilities) and
+    ``up_slots``/``dn_slots`` (decode-slot requirements, precomputed
+    host-side with :func:`slots_needed` so no traced-float ceil can drift
+    from the loop path) may be per-config traced scalars; vmapping this
+    function over them batches whole channel regimes into one draw.
+    Given equal inputs it consumes the PRNG exactly like ``round_trip``.
+    """
+    ku, kd = jax.random.split(key)
+    t_up, ok_up = link_outcomes(ku, p_up, up_slots, n_links, t_max_slots)
+    t_dn, ok_dn = link_outcomes(kd, p_dn, dn_slots, n_links, t_max_slots)
+    latency_s = tau_s * (slowest_ok_slots(t_up, ok_up, t_max_slots) +
+                         slowest_ok_slots(t_dn, ok_dn, t_max_slots))
     return {"up_ok": ok_up, "dn_ok": ok_dn, "t_up": t_up, "t_dn": t_dn,
             "latency_s": latency_s}

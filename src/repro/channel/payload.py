@@ -25,3 +25,34 @@ def payload_bits(protocol: str, *, n_mod: int, n_labels: int,
         up = out_bits + (sample_bits * n_seed if first_round else 0)
         return up, mod_bits
     raise ValueError(protocol)
+
+
+def round_slot_plan(protocol: str, cfg, *, n_mod: int, n_labels: int,
+                    sample_bits: int = 0, n_seed: int = 0) -> dict:
+    """Host-side per-round link plan for one (protocol, channel) point.
+
+    Returns the per-slot success probabilities and the decode-slot
+    requirements the traced channel draw (``model.round_trip_traced``)
+    consumes: ``up_slots_first`` covers the seed-carrying first round of
+    the FLD family, ``up_slots`` every later round (identical for FL/FD).
+    The sweep engine stacks these over its config grid so batched
+    SNR/outage draws stay bitwise-equal to the per-point loop.
+    """
+    from .model import slots_needed
+
+    p_up, bits_up = cfg.link_budget(True)
+    p_dn, bits_dn = cfg.link_budget(False)
+    up1, dn1 = payload_bits(protocol, n_mod=n_mod, n_labels=n_labels,
+                            sample_bits=sample_bits, n_seed=n_seed,
+                            first_round=True)
+    up, dn = payload_bits(protocol, n_mod=n_mod, n_labels=n_labels,
+                          sample_bits=sample_bits, n_seed=n_seed,
+                          first_round=False)
+    if dn1 != dn:  # the plan carries ONE dn_slots; a round-dependent
+        # downlink payload would silently desync sweeps from the loop path
+        raise ValueError(f"round-dependent downlink payload for "
+                         f"{protocol!r}: {dn1} vs {dn} bits")
+    return {"p_up": p_up, "p_dn": p_dn,
+            "up_slots_first": slots_needed(up1, bits_up),
+            "up_slots": slots_needed(up, bits_up),
+            "dn_slots": slots_needed(dn, bits_dn)}

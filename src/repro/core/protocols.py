@@ -17,8 +17,16 @@ selected by ``FederatedConfig.shard_devices``:
   average) are psum collectives, so multi-chip hosts scale the population
   with the chip count.
 
-The round loop itself is host-side (it mixes channel sampling,
-convergence checks and tic-toc compute timing, as the paper does).
+``FederatedTrainer.run`` keeps a host-side round loop (it mixes channel
+sampling, convergence checks and tic-toc compute timing, as the paper
+does).  The per-round math itself is factored into pure module-level
+pieces — :func:`make_local_train`, :func:`weighted_avg`,
+:func:`gout_update`, :func:`collect_seeds` — which
+:func:`make_grid_round_step` recombines into a fully-traced round step
+batched over a leading *config-grid* axis: the protocol-sweep engine
+(``repro.sweep``) scans it over rounds so a whole hyperparameter grid
+runs as one compiled program.  The sweep-vs-loop equivalence tests in
+tests/test_sweep.py lock the two formulations together.
 """
 from __future__ import annotations
 
@@ -35,17 +43,19 @@ try:  # jax >= 0.6 graduated shard_map out of experimental
 except ImportError:
     from jax.experimental.shard_map import shard_map
 
-from ..channel import ChannelConfig, payload_bits, round_trip
+from ..channel import ChannelConfig, payload_bits, round_trip, round_trip_traced
 from ..kernels.mixup_kernel import mixup_pallas
 from ..launch.mesh import make_device_mesh
 from ..launch.sharding import federated_pspecs
-from .conversion import output_to_model
+from .conversion import output_to_model, output_to_model_steps
 from .losses import fd_loss
 from .mixup import (find_label_cycles, inverse_mixup_cycles,
                     make_mixup_batch_pallas, mixup_pairs, pair_symmetric)
 from .outputs import label_averaged_outputs
 
 PROTOCOLS = ("fl", "fd", "fld", "mixfld", "mix2fld")
+# protocols that upload (mixed) seed samples and convert outputs to a model
+FLD_FAMILY = ("fld", "mixfld", "mix2fld")
 
 
 @dataclasses.dataclass
@@ -71,6 +81,207 @@ class FederatedConfig:
     #                                fits the local chip count)
 
 
+# ---------------------------------------------------------------------------
+# Pure per-round pieces (shared by the trainer loop and the sweep engine)
+# ---------------------------------------------------------------------------
+
+def make_local_train(apply_fn, num_classes: int, local_iters: int,
+                     local_batch: int):
+    """Per-device local SGD (eq. 1 / 3) for one device's shard.
+
+    ``eta``/``beta`` are *arguments* rather than baked-in constants so the
+    sweep engine can vmap them over a config grid; passing the config's
+    Python floats yields the same lowering as closing over them.
+    Returns ``local_train(params, x, y, key, gout, use_kd, eta, beta) ->
+    (params, favg (C, C), cnt (C,), mean loss)``.
+    """
+    C = num_classes
+
+    def local_train(params, x, y, key, gout, use_kd, eta, beta):
+        def step(carry, k):
+            p, out_sum, cnt = carry
+            idx = jax.random.randint(k, (local_batch,), 0, x.shape[0])
+            xb, yb = x[idx], y[idx]
+
+            def loss_fn(p_):
+                logits = apply_fn(p_, xb)
+                b = jnp.where(use_kd, beta, 0.0)
+                l, _ = fd_loss(logits, yb, gout, b)
+                return l, logits
+
+            (l, logits), g = jax.value_and_grad(loss_fn, has_aux=True)(p)
+            p = jax.tree.map(lambda a, b_: a - eta * b_, p, g)
+            probs = jax.nn.softmax(logits, axis=-1)
+            oh = jax.nn.one_hot(yb, C)
+            out_sum = out_sum + oh.T @ probs
+            cnt = cnt + jnp.sum(oh, axis=0)
+            return (p, out_sum, cnt), l
+
+        init = (params, jnp.zeros((C, C)), jnp.zeros((C,)))
+        (params, out_sum, cnt), losses = jax.lax.scan(
+            step, init, jax.random.split(key, local_iters))
+        favg = out_sum / jnp.maximum(cnt[:, None], 1.0)
+        return params, favg, cnt, jnp.mean(losses)
+
+    return local_train
+
+
+def make_grid_local_train(apply_fn, num_classes: int, local_iters: int,
+                          local_batch: int):
+    """:func:`make_local_train` double-vmapped for a config grid:
+    operates on (G, D, ...) device state with shared (D, ...) data and
+    per-config (G,) eta/beta.  The sweep engine wraps this in shard_map
+    for ``shard_devices`` grids; keeping the vmap chain here means the
+    in_axes stay in one place."""
+    base = make_local_train(apply_fn, num_classes, local_iters, local_batch)
+    per_dev = jax.vmap(base, in_axes=(0, 0, 0, 0, 0, None, None, None))
+    return jax.vmap(per_dev, in_axes=(0, None, None, 0, 0, None, 0, 0))
+
+
+def weighted_avg(stacked, weights):
+    """Weighted model average over the device axis (uplink-success set)."""
+    wsum = jnp.maximum(jnp.sum(weights), 1e-9)
+    return jax.tree.map(
+        lambda s: jnp.tensordot(weights, s, axes=1) / wsum, stacked)
+
+
+def gout_update(favg, cnt, ok):
+    """eq. 2: per-class output average over the successful device set."""
+    cw = ok[:, None] * cnt                  # (D, C) per-class wts
+    num = jnp.einsum("dc,dcm->cm", cw, favg)
+    den = jnp.sum(cw, axis=0)
+    return num / jnp.maximum(den[:, None], 1.0)
+
+
+def weighted_avg_psum(stacked, weights):
+    """:func:`weighted_avg` for one shard of a shard_mapped device axis:
+    partial tensordot over the local slice, psum over "data"."""
+    wsum = jnp.maximum(jax.lax.psum(jnp.sum(weights), "data"), 1e-9)
+    part = jax.tree.map(
+        lambda s: jnp.tensordot(weights, s, axes=1), stacked)
+    return jax.tree.map(lambda t: jax.lax.psum(t, "data") / wsum, part)
+
+
+def gout_update_psum(favg, cnt, ok):
+    """:func:`gout_update` with psum collectives over the "data" axis."""
+    cw = ok[:, None] * cnt
+    num = jax.lax.psum(jnp.einsum("dc,dcm->cm", cw, favg), "data")
+    den = jax.lax.psum(jnp.sum(cw, axis=0), "data")
+    return num / jnp.maximum(den[:, None], 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Round-1 seed collection (host-side: pairing and cycle search are
+# sort/DFS algorithms, run once per training job)
+# ---------------------------------------------------------------------------
+
+def collect_seeds(fc: FederatedConfig, dev_x, dev_y, key):
+    """Round-1 seed collection, batched over the device axis.
+
+    Device-side Mixup is one vmapped ``mixup_pairs`` draw plus a single
+    ``make_mixup_batch_pallas`` kernel call over all (D, n_seed)
+    mixes; server-side pairing is the vectorized sort-based
+    ``pair_symmetric`` over the whole (D*Ns,) upload set; the paired
+    inverse-Mixup samples are computed in one shot through the
+    ``mixup_pallas`` kernel (scalar ``mixup.inverse_mixup`` stays as the
+    reference oracle), and cycle augmentation beyond the pair set uses
+    the batched ``inverse_mixup_cycles`` contraction.  Returns dict with
+    uploaded samples, labels (hard or soft), metadata, and the
+    server-side training set."""
+    D = fc.num_devices
+    C = fc.num_classes
+    proto = fc.protocol
+    if proto in ("fl", "fd"):
+        return None
+    dev_x = jnp.asarray(dev_x)
+    dev_y = jnp.asarray(dev_y)
+    n_local = dev_x.shape[1]
+    feat = dev_x.shape[2:]
+    keys = jax.random.split(key, D)
+
+    if proto == "fld":  # raw samples (privacy leak, the baseline)
+        idx = jax.vmap(lambda k: jax.random.choice(
+            k, n_local, (fc.n_seed,), replace=False))(keys)
+        seeds_x = jax.vmap(lambda x, i: x[i])(dev_x, idx)
+        seeds_y = jnp.take_along_axis(dev_y, idx, axis=1)
+        seeds_x = seeds_x.reshape((D * fc.n_seed,) + feat)
+        return {"train_x": seeds_x, "train_y": seeds_y.reshape(-1),
+                "uploaded": seeds_x, "raw_pairs": None}
+
+    # ---- Mixup at devices (eq. 6), batched over the device axis and
+    # mixed through the mixup_pallas kernel (same treatment the
+    # server-side inverse gets below; jax.vmap(make_mixup_batch) is
+    # the parity oracle in tests/test_kernels.py) ----
+    idx_i, idx_j = jax.vmap(mixup_pairs, in_axes=(0, 0, None, None))(
+        keys, dev_y, fc.n_seed, C)                     # (D, Ns) each
+    mixed, softs, (minors, majors) = make_mixup_batch_pallas(
+        dev_x, dev_y, idx_i, idx_j, fc.lam, C)
+    gather = jax.vmap(lambda x, i: x[i])
+    raws = jnp.stack([gather(dev_x, idx_i), gather(dev_x, idx_j)],
+                     axis=2)                           # (D, Ns, 2, ...)
+    mixed = mixed.reshape((D * fc.n_seed,) + feat)
+    softs = softs.reshape(D * fc.n_seed, C)
+    minors = np.asarray(minors).reshape(-1)
+    majors = np.asarray(majors).reshape(-1)
+    raws = raws.reshape((D * fc.n_seed, 2) + feat)
+    dev_ids = np.repeat(np.arange(D), fc.n_seed)
+
+    if proto == "mixfld":
+        return {"train_x": mixed, "train_y": softs,
+                "uploaded": mixed, "raw_pairs": raws}
+
+    # ---- Mix2FLD: inverse-Mixup across devices (eq. 7, Prop. 1) ----
+    if abs(2.0 * fc.lam - 1.0) < 1e-6:
+        # lam = 0.5 makes the inverse ratios singular (Prop. 1);
+        # degrade to soft-label training instead of dividing by zero
+        return {"train_x": mixed, "train_y": softs,
+                "uploaded": mixed, "raw_pairs": raws}
+    pairs = pair_symmetric(minors, majors, dev_ids)    # (P, 2)
+    want_total = fc.n_inverse * D
+    mixed_flat = mixed.reshape(mixed.shape[0], -1)
+    inv_chunks, lab_chunks = [], []
+    if len(pairs):
+        # one batched kernel call per side: s1 = lam_hat*m_i +
+        # (1-lam_hat)*m_j and its mirror, for every pair at once
+        lam_hat = fc.lam / (2.0 * fc.lam - 1.0)
+        a = mixed_flat[jnp.asarray(pairs[:, 0])]
+        b = mixed_flat[jnp.asarray(pairs[:, 1])]
+        la = jnp.full((len(pairs),), lam_hat, jnp.float32)
+        s1 = mixup_pallas(a, b, la, 1.0 - la)
+        s2 = mixup_pallas(b, a, la, 1.0 - la)
+        inv_chunks.append(jnp.stack([s1, s2], axis=1).reshape(
+            2 * len(pairs), -1))
+        lab_chunks.append(np.stack([minors[pairs[:, 0]],
+                                    minors[pairs[:, 1]]], 1).reshape(-1))
+    # augmentation beyond 2*P: longer label cycles draw *distinct*
+    # cyclic lam-orders (Prop. 1 rows differ with N), so extra draws
+    # are new samples rather than duplicates of the pair set
+    total = 2 * len(pairs)
+    length = 3
+    while total < want_total and length <= max(3, min(C, 6)):
+        cycles = find_label_cycles(minors, majors, dev_ids, length)
+        if len(cycles):
+            inv_chunks.append(inverse_mixup_cycles(
+                mixed_flat, cycles, fc.lam))
+            lab_chunks.append(minors[cycles].reshape(-1))
+            total += cycles.size
+        length += 1
+    if not inv_chunks:  # degenerate pairing: fall back to soft labels
+        return {"train_x": mixed, "train_y": softs,
+                "uploaded": mixed, "raw_pairs": raws}
+    inv_x = jnp.concatenate(inv_chunks)
+    inv_y = np.concatenate(lab_chunks)
+    if inv_x.shape[0] < want_total:  # last resort: tile (explicit, old
+        reps = -(-want_total // inv_x.shape[0])  # behaviour duplicated
+        inv_x = jnp.tile(inv_x, (reps, 1))       # silently)
+        inv_y = np.tile(inv_y, reps)
+    inv_x = inv_x[:want_total].reshape((-1,) + feat)
+    inv_y = jnp.asarray(inv_y[:want_total], jnp.int32)
+    return {"train_x": inv_x, "train_y": inv_y,
+            "uploaded": mixed, "raw_pairs": raws,
+            "n_pairs": len(pairs)}
+
+
 class FederatedTrainer:
     """Runs one protocol over a simulated device population.
 
@@ -89,55 +300,21 @@ class FederatedTrainer:
     # ------------------------------------------------------------------
     def _build(self):
         fc = self.fc
-        apply_fn = self.model.apply
-        C = fc.num_classes
+        base = make_local_train(self.model.apply, fc.num_classes,
+                                fc.local_iters, fc.local_batch)
 
         def local_train(params, x, y, key, gout, use_kd):
-            def step(carry, k):
-                p, out_sum, cnt = carry
-                idx = jax.random.randint(k, (fc.local_batch,), 0, x.shape[0])
-                xb, yb = x[idx], y[idx]
-
-                def loss_fn(p_):
-                    logits = apply_fn(p_, xb)
-                    beta = jnp.where(use_kd, fc.beta, 0.0)
-                    l, _ = fd_loss(logits, yb, gout, beta)
-                    return l, logits
-
-                (l, logits), g = jax.value_and_grad(loss_fn, has_aux=True)(p)
-                p = jax.tree.map(lambda a, b: a - fc.eta * b, p, g)
-                probs = jax.nn.softmax(logits, axis=-1)
-                oh = jax.nn.one_hot(yb, C)
-                out_sum = out_sum + oh.T @ probs
-                cnt = cnt + jnp.sum(oh, axis=0)
-                return (p, out_sum, cnt), l
-
-            init = (params, jnp.zeros((C, C)), jnp.zeros((C,)))
-            (params, out_sum, cnt), losses = jax.lax.scan(
-                step, init, jax.random.split(key, fc.local_iters))
-            favg = out_sum / jnp.maximum(cnt[:, None], 1.0)
-            return params, favg, cnt, jnp.mean(losses)
+            return base(params, x, y, key, gout, use_kd, fc.eta, fc.beta)
 
         vmapped = jax.vmap(local_train, in_axes=(0, 0, 0, 0, 0, None))
+
+        apply_fn = self.model.apply
 
         def accuracy(params, x, y):
             logits = apply_fn(params, x)
             return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
 
         self._accuracy = jax.jit(accuracy)
-
-        # cross-device reductions: the weighted model average and the
-        # eq. 2 per-class output average over the successful device set
-        def weighted_avg(stacked, weights):
-            wsum = jnp.maximum(jnp.sum(weights), 1e-9)
-            return jax.tree.map(
-                lambda s: jnp.tensordot(weights, s, axes=1) / wsum, stacked)
-
-        def gout_update(favg, cnt, ok):
-            cw = ok[:, None] * cnt                  # (D, C) per-class wts
-            num = jnp.einsum("dc,dcm->cm", cw, favg)
-            den = jnp.sum(cw, axis=0)
-            return num / jnp.maximum(den[:, None], 1.0)
 
         self.mesh = None
         if not fc.shard_devices:
@@ -156,20 +333,6 @@ class FederatedTrainer:
             vmapped, mesh=self.mesh,
             in_specs=(dev, dev, dev, dev, dev, rep),
             out_specs=(dev, dev, dev, dev), check_rep=False))
-
-        def weighted_avg_psum(stacked, weights):
-            wsum = jnp.maximum(jax.lax.psum(jnp.sum(weights), "data"), 1e-9)
-            part = jax.tree.map(
-                lambda s: jnp.tensordot(weights, s, axes=1), stacked)
-            return jax.tree.map(lambda t: jax.lax.psum(t, "data") / wsum,
-                                part)
-
-        def gout_update_psum(favg, cnt, ok):
-            cw = ok[:, None] * cnt
-            num = jax.lax.psum(jnp.einsum("dc,dcm->cm", cw, favg), "data")
-            den = jax.lax.psum(jnp.sum(cw, axis=0), "data")
-            return num / jnp.maximum(den[:, None], 1.0)
-
         self._weighted_avg = jax.jit(shard_map(
             weighted_avg_psum, mesh=self.mesh, in_specs=(dev, dev),
             out_specs=rep, check_rep=False))
@@ -179,111 +342,9 @@ class FederatedTrainer:
 
     # ------------------------------------------------------------------
     def collect_seeds(self, dev_x, dev_y, key):
-        """Round-1 seed collection, batched over the device axis.
-
-        Device-side Mixup is one vmapped ``mixup_pairs`` draw plus a single
-        ``make_mixup_batch_pallas`` kernel call over all (D, n_seed)
-        mixes; server-side pairing is the vectorized sort-based
-        ``pair_symmetric`` over the whole (D*Ns,) upload set; the paired
-        inverse-Mixup samples are computed in one shot through the
-        ``mixup_pallas`` kernel (scalar ``mixup.inverse_mixup`` stays as the
-        reference oracle), and cycle augmentation beyond the pair set uses
-        the batched ``inverse_mixup_cycles`` contraction.  Returns dict with
-        uploaded samples, labels (hard or soft), metadata, and the
-        server-side training set."""
-        fc = self.fc
-        D = fc.num_devices
-        C = fc.num_classes
-        proto = fc.protocol
-        if proto in ("fl", "fd"):
-            return None
-        dev_x = jnp.asarray(dev_x)
-        dev_y = jnp.asarray(dev_y)
-        n_local = dev_x.shape[1]
-        feat = dev_x.shape[2:]
-        keys = jax.random.split(key, D)
-
-        if proto == "fld":  # raw samples (privacy leak, the baseline)
-            idx = jax.vmap(lambda k: jax.random.choice(
-                k, n_local, (fc.n_seed,), replace=False))(keys)
-            seeds_x = jax.vmap(lambda x, i: x[i])(dev_x, idx)
-            seeds_y = jnp.take_along_axis(dev_y, idx, axis=1)
-            seeds_x = seeds_x.reshape((D * fc.n_seed,) + feat)
-            return {"train_x": seeds_x, "train_y": seeds_y.reshape(-1),
-                    "uploaded": seeds_x, "raw_pairs": None}
-
-        # ---- Mixup at devices (eq. 6), batched over the device axis and
-        # mixed through the mixup_pallas kernel (same treatment the
-        # server-side inverse gets below; jax.vmap(make_mixup_batch) is
-        # the parity oracle in tests/test_kernels.py) ----
-        idx_i, idx_j = jax.vmap(mixup_pairs, in_axes=(0, 0, None, None))(
-            keys, dev_y, fc.n_seed, C)                     # (D, Ns) each
-        mixed, softs, (minors, majors) = make_mixup_batch_pallas(
-            dev_x, dev_y, idx_i, idx_j, fc.lam, C)
-        gather = jax.vmap(lambda x, i: x[i])
-        raws = jnp.stack([gather(dev_x, idx_i), gather(dev_x, idx_j)],
-                         axis=2)                           # (D, Ns, 2, ...)
-        mixed = mixed.reshape((D * fc.n_seed,) + feat)
-        softs = softs.reshape(D * fc.n_seed, C)
-        minors = np.asarray(minors).reshape(-1)
-        majors = np.asarray(majors).reshape(-1)
-        raws = raws.reshape((D * fc.n_seed, 2) + feat)
-        dev_ids = np.repeat(np.arange(D), fc.n_seed)
-
-        if proto == "mixfld":
-            return {"train_x": mixed, "train_y": softs,
-                    "uploaded": mixed, "raw_pairs": raws}
-
-        # ---- Mix2FLD: inverse-Mixup across devices (eq. 7, Prop. 1) ----
-        if abs(2.0 * fc.lam - 1.0) < 1e-6:
-            # lam = 0.5 makes the inverse ratios singular (Prop. 1);
-            # degrade to soft-label training instead of dividing by zero
-            return {"train_x": mixed, "train_y": softs,
-                    "uploaded": mixed, "raw_pairs": raws}
-        pairs = pair_symmetric(minors, majors, dev_ids)    # (P, 2)
-        want_total = fc.n_inverse * D
-        mixed_flat = mixed.reshape(mixed.shape[0], -1)
-        inv_chunks, lab_chunks = [], []
-        if len(pairs):
-            # one batched kernel call per side: s1 = lam_hat*m_i +
-            # (1-lam_hat)*m_j and its mirror, for every pair at once
-            lam_hat = fc.lam / (2.0 * fc.lam - 1.0)
-            a = mixed_flat[jnp.asarray(pairs[:, 0])]
-            b = mixed_flat[jnp.asarray(pairs[:, 1])]
-            la = jnp.full((len(pairs),), lam_hat, jnp.float32)
-            s1 = mixup_pallas(a, b, la, 1.0 - la)
-            s2 = mixup_pallas(b, a, la, 1.0 - la)
-            inv_chunks.append(jnp.stack([s1, s2], axis=1).reshape(
-                2 * len(pairs), -1))
-            lab_chunks.append(np.stack([minors[pairs[:, 0]],
-                                        minors[pairs[:, 1]]], 1).reshape(-1))
-        # augmentation beyond 2*P: longer label cycles draw *distinct*
-        # cyclic lam-orders (Prop. 1 rows differ with N), so extra draws
-        # are new samples rather than duplicates of the pair set
-        total = 2 * len(pairs)
-        length = 3
-        while total < want_total and length <= max(3, min(C, 6)):
-            cycles = find_label_cycles(minors, majors, dev_ids, length)
-            if len(cycles):
-                inv_chunks.append(inverse_mixup_cycles(
-                    mixed_flat, cycles, fc.lam))
-                lab_chunks.append(minors[cycles].reshape(-1))
-                total += cycles.size
-            length += 1
-        if not inv_chunks:  # degenerate pairing: fall back to soft labels
-            return {"train_x": mixed, "train_y": softs,
-                    "uploaded": mixed, "raw_pairs": raws}
-        inv_x = jnp.concatenate(inv_chunks)
-        inv_y = np.concatenate(lab_chunks)
-        if inv_x.shape[0] < want_total:  # last resort: tile (explicit, old
-            reps = -(-want_total // inv_x.shape[0])  # behaviour duplicated
-            inv_x = jnp.tile(inv_x, (reps, 1))       # silently)
-            inv_y = np.tile(inv_y, reps)
-        inv_x = inv_x[:want_total].reshape((-1,) + feat)
-        inv_y = jnp.asarray(inv_y[:want_total], jnp.int32)
-        return {"train_x": inv_x, "train_y": inv_y,
-                "uploaded": mixed, "raw_pairs": raws,
-                "n_pairs": len(pairs)}
+        """See module-level :func:`collect_seeds` (this wrapper keeps the
+        established trainer API)."""
+        return collect_seeds(self.fc, dev_x, dev_y, key)
 
     # ------------------------------------------------------------------
     def run(self, dev_x, dev_y, test_x, test_y, log=None):
@@ -329,7 +390,7 @@ class FederatedTrainer:
             jax.block_until_ready(favg)
 
             # ---- seed collection (first round, FLD family) ----
-            if p == 1 and proto in ("fld", "mixfld", "mix2fld"):
+            if p == 1 and proto in FLD_FAMILY:
                 seeds = self.collect_seeds(dev_x, dev_y,
                                            jax.random.fold_in(kr, 2))
 
@@ -388,7 +449,7 @@ class FederatedTrainer:
                     f"lat={link['latency_s']*1e3:.0f}ms")
 
             # ---- convergence (relative change < eps) ----
-            if proto == "fl" or proto in ("fld", "mixfld", "mix2fld"):
+            if proto == "fl" or proto in FLD_FAMILY:
                 flat = jnp.concatenate([jnp.ravel(x) for x in
                                         jax.tree.leaves(g_params)])
                 if g_prev is not None:
@@ -409,3 +470,161 @@ class FederatedTrainer:
         history["final_acc"] = history["acc"][-1]
         self.last_dev_gout = dev_gout  # per-device KD tables (tests inspect)
         return history
+
+
+# ---------------------------------------------------------------------------
+# Grid-batched round step (the protocol-sweep engine's compiled core)
+# ---------------------------------------------------------------------------
+
+def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
+                         num_classes: int, local_iters: int,
+                         local_batch: int, server_batch: int,
+                         t_max_slots: int, tau_s: float,
+                         dev_x, dev_y, test_x, test_y, consts: dict,
+                         local_train_fn: Optional[Callable] = None,
+                         weighted_avg_fn: Optional[Callable] = None,
+                         gout_update_fn: Optional[Callable] = None):
+    """Pure per-round protocol step batched over a leading config-grid
+    axis — ``FederatedTrainer.run``'s round body with every host decision
+    (success gating, convergence bookkeeping) expressed as masked lax ops,
+    so ``jax.lax.scan`` over rounds compiles a whole G-point grid into
+    one program.
+
+    ``consts`` holds the per-config traced constants, every leaf with a
+    leading grid axis G:
+
+    ======================  ======================================
+    ``key``       (G, 2)    per-config round key — the *second* output of
+                            ``split(PRNGKey(seed))`` exactly as in ``run``
+    ``eta, beta`` (G,)      SGD step / KD weight (local SGD *and* the
+                            eq. 5 conversion, as in the loop path)
+    ``s_iters``   (G,)      conversion iterations (masked to the grid max)
+    ``eps``       (G,)      convergence threshold
+    ``n_train``   (G,)      live prefix of the padded seed sets
+    ``seeds_x``   (G, N, ...), ``seeds_y`` (G, N[, C])  padded seed sets
+    ``p_up, p_dn`` (G,)     per-slot link success probabilities
+    ======================  ======================================
+
+    The scan inputs ``xs`` per round: ``p`` (scalar, 1-based round),
+    ``up_slots``/``dn_slots`` (G,) decode-slot requirements, and
+    ``conv_keys`` (G, K_max, 2) host-precomputed conversion step keys
+    (``jax.random.split`` is not prefix-stable, so ragged per-config
+    ``s_iters`` can't split in-graph and stay equal to the loop path).
+
+    State: ``dev_params`` (G, D, ...), ``g_params`` (G, ...), ``gout``
+    (G, C, C), ``dev_gout`` (G, D, C, C), ``prev`` (G, P) flattened
+    convergence reference, ``converged`` (G,) int32 (0 = not yet).
+
+    ``local_train_fn``/``weighted_avg_fn``/``gout_update_fn`` default to
+    the vmapped single-chip forms; the sweep engine substitutes
+    shard_mapped variants (device axis on the "data" mesh) for
+    ``shard_devices`` grids.
+    """
+    proto = protocol
+    D, C = num_devices, num_classes
+    n_local = dev_x.shape[1]
+
+    if local_train_fn is None:
+        local_train_fn = make_grid_local_train(model_apply, C, local_iters,
+                                               local_batch)
+    if weighted_avg_fn is None:
+        weighted_avg_fn = jax.vmap(weighted_avg)
+    if gout_update_fn is None:
+        gout_update_fn = jax.vmap(gout_update)
+
+    def conv_one(params, sx, sy, gout, keys, iters, n_train, eta, beta):
+        return output_to_model_steps(model_apply, params, sx, sy, gout,
+                                     keys, iters, n_train, server_batch,
+                                     eta, beta)
+
+    conv_fn = jax.vmap(conv_one)
+
+    def acc_one(params):
+        logits = model_apply(params, test_x)
+        return jnp.mean((jnp.argmax(logits, -1) == test_y)
+                        .astype(jnp.float32))
+
+    acc_fn = jax.vmap(acc_one)
+
+    def flatten_grid(tree):
+        return jnp.concatenate(
+            [x.reshape(x.shape[0], -1) for x in jax.tree.leaves(tree)],
+            axis=1)
+
+    channel_fn = jax.vmap(round_trip_traced,
+                          in_axes=(0, 0, 0, 0, 0, None, None, None))
+
+    def round_step(state, xs):
+        p = xs["p"]
+        kr = jax.vmap(jax.random.fold_in, in_axes=(0, None))(
+            consts["key"], p)
+        use_kd = (p > 1) if proto != "fl" else jnp.asarray(False)
+
+        # ---- local updates (eq. 1 / 3) ----
+        dkeys = jax.vmap(
+            lambda k: jax.random.split(jax.random.fold_in(k, 1), D))(kr)
+        dev_params, favg, cnt, mloss = local_train_fn(
+            state["dev_params"], dev_x, dev_y, dkeys, state["dev_gout"],
+            use_kd, consts["eta"], consts["beta"])
+
+        # ---- channel (batched SNR/outage draws over the grid) ----
+        ck = jax.vmap(lambda k: jax.random.fold_in(k, 3))(kr)
+        link = channel_fn(ck, consts["p_up"], xs["up_slots"],
+                          consts["p_dn"], xs["dn_slots"], D, t_max_slots,
+                          tau_s)
+        up_ok = link["up_ok"]                        # (G, D)
+        dn_ok = link["dn_ok"]
+        w = up_ok.astype(jnp.float32) * n_local
+        any_up = jnp.any(up_ok, axis=1)              # (G,)
+
+        # ---- aggregation + (FLD) conversion, success-gated by where ----
+        g_params, gout = state["g_params"], state["gout"]
+        if proto == "fl":
+            new_g = weighted_avg_fn(dev_params, w)
+            g_params = jax.tree.map(
+                lambda n_, o: jnp.where(
+                    any_up.reshape((-1,) + (1,) * (o.ndim - 1)), n_, o),
+                new_g, g_params)
+        else:
+            new_gout = gout_update_fn(favg, cnt, up_ok.astype(jnp.float32))
+            gout = jnp.where(any_up[:, None, None], new_gout, gout)
+            if proto != "fd":
+                g_params, _ = conv_fn(
+                    g_params, consts["seeds_x"], consts["seeds_y"], gout,
+                    xs["conv_keys"], consts["s_iters"], consts["n_train"],
+                    consts["eta"], consts["beta"])
+
+        # ---- downlink (gated per device by dn_ok) ----
+        dev_gout = jnp.where(dn_ok[:, :, None, None], gout[:, None],
+                             state["dev_gout"])
+        if proto != "fd":
+            dev_params = jax.tree.map(
+                lambda dp, gp: jnp.where(
+                    dn_ok.reshape(dn_ok.shape + (1,) * (dp.ndim - 2)),
+                    jnp.expand_dims(gp, 1), dp),
+                dev_params, g_params)
+
+        # ---- evaluation of the reference device (device 0) ----
+        ref = jax.tree.map(lambda dp: dp[:, 0], dev_params)
+        acc = acc_fn(ref)
+
+        # ---- convergence (relative change < eps), first hit recorded ----
+        if proto == "fd":
+            flat = gout.reshape(gout.shape[0], -1)
+        else:
+            flat = flatten_grid(g_params)
+        rel = jax.vmap(
+            lambda a, b: jnp.linalg.norm(a - b) /
+            jnp.maximum(jnp.linalg.norm(b), 1e-12))(flat, state["prev"])
+        hit = (p >= 2) & (rel < consts["eps"]) & (state["converged"] == 0)
+        converged = jnp.where(hit, p, state["converged"])
+
+        out = {"acc": acc, "loss": jnp.mean(mloss, axis=1),
+               "latency_s": link["latency_s"],
+               "up_ok": jnp.sum(up_ok, axis=1).astype(jnp.int32)}
+        new_state = {"dev_params": dev_params, "g_params": g_params,
+                     "gout": gout, "dev_gout": dev_gout, "prev": flat,
+                     "converged": converged}
+        return new_state, out
+
+    return round_step

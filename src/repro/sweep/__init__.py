@@ -1,0 +1,6 @@
+"""Vectorized protocol-sweep engine: whole hyperparameter grids as one
+compiled program (vmap over configs × scan over rounds × [shard_map over
+devices]).  See docs/sweep_engine.md."""
+from .axes import CH_SWEEPABLE, FED_SWEEPABLE, SweepGrid, make_grid  # noqa: F401
+from .engine import SweepRunner, run_pointwise, run_sweep  # noqa: F401
+from .results import SweepResult  # noqa: F401

@@ -1,0 +1,99 @@
+"""Sweep grids: which hyperparameters batch, and how points are built.
+
+A :class:`SweepGrid` is the cartesian product of value lists over named
+axes, rooted at one base ``FederatedConfig`` + ``ChannelConfig``.  Every
+axis must be *sweepable*: a field whose variation the compiled sweep can
+express as a traced per-config scalar (learning rates, KD weights, seed
+budgets, conversion iterations, channel link budgets) or absorb host-side
+before the program runs (``n_seed``/``n_inverse``/``lam`` change the
+round-1 seed sets, ``seed`` the key chain, SNR fields the per-slot
+success probabilities).  Fields that would change compiled *shapes or
+control flow* across points — the protocol itself, population size,
+local SGD geometry, round count, the fading window — are static: they
+are taken from the base configs and shared by every point.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+
+from ..channel import ChannelConfig
+from ..core.protocols import FederatedConfig
+
+# Traced per-config scalars, or host-absorbed before compilation.
+FED_SWEEPABLE = frozenset({
+    "eta", "beta", "eps", "lam", "n_seed", "n_inverse", "server_iters",
+    "sample_bits", "seed",
+})
+# Channel fields only enter via the host-computed link budget
+# (per-slot success probability + decode-slot counts), so any of them
+# can sweep except the draw-shaping t_max_slots / num_devices / tau_s.
+CH_SWEEPABLE = frozenset({
+    "num_channels", "bandwidth_hz", "p_up_dbm", "p_dn_dbm", "distance_m",
+    "pathloss_exp", "noise_dbm_hz", "theta",
+})
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepGrid:
+    """A validated config grid: ``points[g]`` is the (fc, ch) pair of grid
+    point g, in C-order (last axis fastest) over ``axes``."""
+    base_fc: FederatedConfig
+    base_ch: ChannelConfig
+    axes: tuple[tuple[str, tuple], ...]   # ((name, values), ...)
+    points: tuple
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return tuple(len(v) for _, v in self.axes)
+
+    @property
+    def size(self) -> int:
+        return len(self.points)
+
+    def labels(self) -> list[dict]:
+        """Per-point {axis: value} dicts, aligned with ``points``."""
+        names = [n for n, _ in self.axes]
+        return [dict(zip(names, combo)) for combo in
+                itertools.product(*(v for _, v in self.axes))]
+
+    def point_name(self, g: int, label: dict | None = None) -> str:
+        lab = label if label is not None else self.labels()[g]
+        return "_".join(f"{k}{v}" for k, v in lab.items()) or f"pt{g}"
+
+
+def make_grid(base_fc: FederatedConfig,
+              base_ch: ChannelConfig | None = None, **axes) -> SweepGrid:
+    """Build a :class:`SweepGrid` from a base config pair and keyword
+    axes, e.g. ``make_grid(fc, ch, n_seed=(10, 50), eta=(0.01, 0.02))``.
+
+    Raises ``ValueError`` for unknown or non-sweepable axis names and for
+    empty value lists; axis order (= C-order of the grid) follows the
+    keyword order.
+    """
+    base_ch = base_ch or ChannelConfig(num_devices=base_fc.num_devices)
+    axes = {n: tuple(v) for n, v in axes.items()}  # once: generators exhaust
+    for name, values in axes.items():
+        if name not in FED_SWEEPABLE | CH_SWEEPABLE:
+            fed_static = {f.name for f in dataclasses.fields(FederatedConfig)
+                          } - FED_SWEEPABLE
+            ch_static = {f.name for f in dataclasses.fields(ChannelConfig)
+                         } - CH_SWEEPABLE
+            kind = ("static (shape/control-flow) field"
+                    if name in fed_static | ch_static else "unknown field")
+            raise ValueError(
+                f"axis {name!r} is a {kind}; sweepable axes: "
+                f"{sorted(FED_SWEEPABLE)} + {sorted(CH_SWEEPABLE)}")
+        if not values:
+            raise ValueError(f"axis {name!r} has no values")
+
+    items = tuple(axes.items())
+    points = []
+    for combo in itertools.product(*(v for _, v in items)):
+        fc_kw, ch_kw = {}, {}
+        for (name, _), value in zip(items, combo):
+            (fc_kw if name in FED_SWEEPABLE else ch_kw)[name] = value
+        points.append((dataclasses.replace(base_fc, **fc_kw),
+                       dataclasses.replace(base_ch, **ch_kw)))
+    return SweepGrid(base_fc=base_fc, base_ch=base_ch, axes=items,
+                     points=tuple(points))

@@ -1,0 +1,239 @@
+"""The compiled protocol-sweep runner.
+
+``SweepRunner`` turns a :class:`~repro.sweep.axes.SweepGrid` into ONE
+jitted program: per-config constants (step sizes, conversion budgets,
+link budgets, padded seed sets, PRNG keys) are stacked along a leading
+grid axis G, the per-round protocol step from
+``repro.core.protocols.make_grid_round_step`` is vmapped over that axis,
+and ``jax.lax.scan`` drives it over rounds — so a grid of G configs ×
+D devices × R rounds executes without returning to Python.  With
+``shard_devices`` set on the base config, the device axis additionally
+runs under ``shard_map`` on the 1-D "data" mesh (the same placement the
+trainer uses), composing grid-vmap × device-sharding.
+
+Everything the compiled program cannot express is absorbed host-side
+*before* the scan, in exactly the per-point order the loop path uses:
+
+* round-1 seed collection (sort-based pairing + cycle DFS) runs once per
+  config via ``collect_seeds`` with the loop path's key chain, then pads
+  the ragged train sets to the grid maximum (``n_train`` masks the
+  `randint` draws onto the live prefix);
+* conversion step keys are precomputed per (round, config) because
+  ``jax.random.split`` is not prefix-stable across split counts;
+* channel link budgets reduce to per-slot success probabilities and
+  decode-slot counts (``round_slot_plan``), so traced draws stay
+  bitwise-equal to the loop path.
+
+The sweep-vs-loop equivalence tests (tests/test_sweep.py) assert the
+whole per-round history matches ``FederatedTrainer.run`` per grid point.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+try:  # jax >= 0.6 graduated shard_map out of experimental
+    from jax import shard_map  # type: ignore[attr-defined]
+except ImportError:
+    from jax.experimental.shard_map import shard_map
+
+from ..channel import round_slot_plan
+from ..core.protocols import (FLD_FAMILY, FederatedTrainer, collect_seeds,
+                              gout_update_psum, make_grid_local_train,
+                              make_grid_round_step, weighted_avg_psum)
+from ..launch.mesh import make_device_mesh
+from .axes import SweepGrid
+from .results import SweepResult
+
+
+def _pad_seed_sets(seed_sets, num_classes: int):
+    """Stack ragged per-config train sets: (G, Nmax, ...) x, (G, Nmax[, C])
+    y, (G,) live sizes.  Mixed hard/soft grids (e.g. a ``lam`` axis that
+    crosses 0.5) promote hard labels to one-hot rows — the conversion
+    losses are identical for one-hot targets, so only mixed grids pay the
+    (ulp-level) formulation change."""
+    xs = [np.asarray(s["train_x"]) for s in seed_sets]
+    ys = [np.asarray(s["train_y"]) for s in seed_sets]
+    n = np.asarray([x.shape[0] for x in xs], np.int32)
+    n_max = int(n.max())
+    feat = xs[0].shape[1:]
+    px = np.zeros((len(xs), n_max) + feat, np.float32)
+    for g, x in enumerate(xs):
+        px[g, :x.shape[0]] = x
+    hard = [y.ndim == 1 for y in ys]
+    if all(hard):
+        py = np.zeros((len(ys), n_max), np.int32)
+        for g, y in enumerate(ys):
+            py[g, :y.shape[0]] = y
+    else:
+        py = np.zeros((len(ys), n_max, num_classes), np.float32)
+        for g, y in enumerate(ys):
+            if y.ndim == 1:
+                y = np.eye(num_classes, dtype=np.float32)[y]
+            py[g, :y.shape[0]] = y
+    return px, py, n
+
+
+class SweepRunner:
+    """Compiles one grid into one program; ``run()`` re-executes the same
+    compiled scan (warm calls skip tracing and compilation)."""
+
+    def __init__(self, model, grid: SweepGrid, dev_x, dev_y, test_x, test_y):
+        fc0, ch0 = grid.points[0]
+        if ch0.num_devices != fc0.num_devices:
+            raise ValueError(
+                f"channel simulates {ch0.num_devices} links but the "
+                f"population has {fc0.num_devices} devices")
+        self.model = model
+        self.grid = grid
+        self.proto = fc0.protocol
+        G, D, C, R = grid.size, fc0.num_devices, fc0.num_classes, \
+            fc0.max_rounds
+        dev_x = jnp.asarray(dev_x)
+        dev_y = jnp.asarray(dev_y)
+
+        # ---- host prep, per config in the loop path's exact key order ----
+        run_keys, inits, conv_keys, seed_sets = [], [], [], []
+        plans = {"p_up": [], "p_dn": [], "up1": [], "up": [], "dn": []}
+        k_max = max(fc.server_iters for fc, _ in grid.points)
+        for fc, ch in grid.points:
+            kinit, key = jax.random.split(jax.random.PRNGKey(fc.seed))
+            run_keys.append(np.asarray(key))
+            params = self.model.init(kinit)
+            inits.append(params)
+            n_mod = sum(p.size for p in jax.tree.leaves(params))
+            if self.proto in FLD_FAMILY:
+                kr1 = jax.random.fold_in(key, 1)
+                seed_sets.append(collect_seeds(
+                    fc, dev_x, dev_y, jax.random.fold_in(kr1, 2)))
+                ck = np.zeros((R, k_max, 2), np.uint32)
+                for p in range(1, R + 1):
+                    base = jax.random.fold_in(jax.random.fold_in(key, p), 4)
+                    ck[p - 1, :fc.server_iters] = np.asarray(
+                        jax.random.split(base, fc.server_iters))
+                conv_keys.append(ck)
+            plan = round_slot_plan(
+                self.proto, ch, n_mod=n_mod, n_labels=C,
+                sample_bits=fc.sample_bits, n_seed=fc.n_seed)
+            plans["p_up"].append(plan["p_up"])
+            plans["p_dn"].append(plan["p_dn"])
+            plans["up1"].append(plan["up_slots_first"])
+            plans["up"].append(plan["up_slots"])
+            plans["dn"].append(plan["dn_slots"])
+
+        g_params = jax.tree.map(lambda *ls: jnp.stack(ls), *inits)
+        n_params = sum(p[0].size for p in jax.tree.leaves(g_params))
+
+        consts = {
+            "key": jnp.asarray(np.stack(run_keys)),
+            "eta": jnp.asarray([fc.eta for fc, _ in grid.points],
+                               jnp.float32),
+            "beta": jnp.asarray([fc.beta for fc, _ in grid.points],
+                                jnp.float32),
+            "s_iters": jnp.asarray(
+                [fc.server_iters for fc, _ in grid.points], jnp.int32),
+            "eps": jnp.asarray([fc.eps for fc, _ in grid.points],
+                               jnp.float32),
+            "p_up": jnp.asarray(plans["p_up"], jnp.float32),
+            "p_dn": jnp.asarray(plans["p_dn"], jnp.float32),
+        }
+        if self.proto in FLD_FAMILY:
+            px, py, n_train = _pad_seed_sets(seed_sets, C)
+            consts["seeds_x"] = jnp.asarray(px)
+            consts["seeds_y"] = jnp.asarray(py)
+            consts["n_train"] = jnp.asarray(n_train)
+            ck = jnp.asarray(np.stack(conv_keys, axis=1))  # (R, G, Kmax, 2)
+        else:
+            consts["seeds_x"] = jnp.zeros((G, 1) + dev_x.shape[2:])
+            consts["seeds_y"] = jnp.zeros((G, 1), jnp.int32)
+            consts["n_train"] = jnp.ones((G,), jnp.int32)
+            ck = jnp.zeros((R, G, 1, 2), jnp.uint32)
+
+        up_slots = np.tile(np.asarray(plans["up"], np.int32), (R, 1))
+        up_slots[0] = np.asarray(plans["up1"], np.int32)
+        self._xs = {
+            "p": jnp.arange(1, R + 1, dtype=jnp.int32),
+            "up_slots": jnp.asarray(up_slots),
+            "dn_slots": jnp.tile(jnp.asarray(plans["dn"], jnp.int32)[None],
+                                 (R, 1)),
+            "conv_keys": ck,
+        }
+
+        # ---- device-axis placement: vmapped, or shard_mapped over the
+        # "data" mesh exactly like the trainer's sharded path ----
+        fns = {}
+        self.mesh = None
+        if fc0.shard_devices:
+            self.mesh = make_device_mesh(D, fc0.mesh_shards or None)
+            grid_lt = make_grid_local_train(self.model.apply, C,
+                                            fc0.local_iters, fc0.local_batch)
+            gdev = P(None, "data")   # (G, D, ...): shard the device dim
+            ddev = P("data")         # (D, ...) shared data
+            rep = P()
+            fns["local_train_fn"] = shard_map(
+                grid_lt, mesh=self.mesh,
+                in_specs=(gdev, ddev, ddev, gdev, gdev, rep, rep, rep),
+                out_specs=(gdev, gdev, gdev, gdev), check_rep=False)
+            fns["weighted_avg_fn"] = shard_map(
+                jax.vmap(weighted_avg_psum), mesh=self.mesh,
+                in_specs=(gdev, gdev), out_specs=rep, check_rep=False)
+            fns["gout_update_fn"] = shard_map(
+                jax.vmap(gout_update_psum), mesh=self.mesh,
+                in_specs=(gdev, gdev, gdev), out_specs=rep,
+                check_rep=False)
+
+        round_step = make_grid_round_step(
+            self.model.apply, protocol=self.proto, num_devices=D,
+            num_classes=C, local_iters=fc0.local_iters,
+            local_batch=fc0.local_batch, server_batch=fc0.server_batch,
+            t_max_slots=ch0.t_max_slots, tau_s=ch0.tau_s,
+            dev_x=dev_x, dev_y=dev_y, test_x=jnp.asarray(test_x),
+            test_y=jnp.asarray(test_y), consts=consts, **fns)
+        self._program = jax.jit(
+            lambda state, xs: jax.lax.scan(round_step, state, xs))
+
+        self._state0 = {
+            "dev_params": jax.tree.map(
+                lambda p: jnp.broadcast_to(
+                    p[:, None], (G, D) + p.shape[1:]).copy(), g_params),
+            "g_params": g_params,
+            "gout": jnp.full((G, C, C), 1.0 / C),
+            "dev_gout": jnp.full((G, D, C, C), 1.0 / C),
+            "prev": jnp.zeros(
+                (G, C * C if self.proto == "fd" else n_params)),
+            "converged": jnp.zeros((G,), jnp.int32),
+        }
+        self.seed_sets = seed_sets if self.proto in FLD_FAMILY else None
+
+    # ------------------------------------------------------------------
+    def run(self) -> SweepResult:
+        t0 = time.perf_counter()
+        state, out = self._program(self._state0, self._xs)
+        out = jax.tree.map(np.asarray, jax.block_until_ready(out))
+        wall = time.perf_counter() - t0
+        return SweepResult(
+            grid=self.grid,
+            acc=out["acc"].T, loss=out["loss"].T,          # (G, R)
+            latency_s=out["latency_s"].T.astype(np.float64),
+            up_ok=out["up_ok"].T,
+            converged=np.asarray(state["converged"]),
+            wall_s=wall)
+
+
+def run_sweep(model, grid: SweepGrid, dev_x, dev_y, test_x, test_y
+              ) -> SweepResult:
+    """One-shot convenience: build a :class:`SweepRunner` and run it."""
+    return SweepRunner(model, grid, dev_x, dev_y, test_x, test_y).run()
+
+
+def run_pointwise(model, grid: SweepGrid, dev_x, dev_y, test_x, test_y,
+                  log=None) -> list[dict]:
+    """The per-point loop the sweep replaces (and the equivalence oracle):
+    one ``FederatedTrainer.run`` per grid point, re-tracing each time."""
+    return [FederatedTrainer(model, fc, ch).run(dev_x, dev_y, test_x,
+                                                test_y, log=log)
+            for fc, ch in grid.points]

@@ -1,0 +1,83 @@
+"""Result frames for compiled protocol sweeps.
+
+A :class:`SweepResult` holds the stacked per-round histories of every
+grid point — (G, R) arrays — plus the wall-clock of the single compiled
+execution that produced all of them.  ``history(g)`` reconstructs the
+per-point dict shape ``FederatedTrainer.run`` returns (the equivalence
+tests compare them field by field); ``frames()`` flattens the grid into
+JSON-ready rows for the benchmark tables.
+
+Timing semantics: channel latency is simulated per round per config
+(``latency_s``), but compute wall-clock exists only for the sweep as a
+whole — one program ran G configs at once.  ``cum_time_s`` therefore
+amortizes the sweep's wall time evenly across configs and rounds, which
+is the honest per-point cost of a batched run (and the number that makes
+sweep rows comparable with loop-path rows in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class SweepResult:
+    grid: object                 # SweepGrid
+    acc: np.ndarray              # (G, R)
+    loss: np.ndarray             # (G, R)
+    latency_s: np.ndarray        # (G, R)
+    up_ok: np.ndarray            # (G, R) int
+    converged: np.ndarray        # (G,) int32, 0 = never
+    wall_s: float
+
+    @property
+    def rounds(self) -> int:
+        return self.acc.shape[1]
+
+    def cum_time_s(self, g: int) -> list[float]:
+        """Cumulative latency + amortized compute for point ``g``."""
+        per_round_compute = self.wall_s / (self.grid.size * self.rounds)
+        lat = np.cumsum(self.latency_s[g])
+        return list(lat + per_round_compute * np.arange(1, self.rounds + 1))
+
+    def history(self, g: int) -> dict:
+        """Per-point history in ``FederatedTrainer.run``'s shape (minus
+        the host-only seeds/compute_s fields)."""
+        return {
+            "acc": [float(a) for a in self.acc[g]],
+            "loss": [float(l) for l in self.loss[g]],
+            "round_latency_s": [float(t) for t in self.latency_s[g]],
+            "uplink_ok": [int(u) for u in self.up_ok[g]],
+            "cum_time_s": self.cum_time_s(g),
+            "converged_round": (int(self.converged[g])
+                                if self.converged[g] else None),
+            "final_acc": float(self.acc[g, -1]),
+            "protocol": self.grid.points[g][0].protocol,
+        }
+
+    def frames(self) -> list[dict]:
+        """One JSON-ready row per grid point: axis values + summary."""
+        rows = []
+        for g, label in enumerate(self.grid.labels()):
+            h = self.history(g)
+            rows.append({
+                "point": self.grid.point_name(g, label),
+                **label,
+                "final_acc": h["final_acc"],
+                "cum_time_s": h["cum_time_s"][-1],
+                "round1_latency_s": h["round_latency_s"][0],
+                "converged_round": h["converged_round"],
+                "acc": h["acc"],
+            })
+        return rows
+
+    def to_payload(self) -> dict:
+        """Whole-sweep JSON payload (grid axes + per-point frames)."""
+        return {
+            "protocol": self.grid.points[0][0].protocol,
+            "axes": {n: list(v) for n, v in self.grid.axes},
+            "grid_shape": list(self.grid.shape),
+            "wall_s": round(self.wall_s, 4),
+            "points": self.frames(),
+        }

@@ -1,0 +1,121 @@
+"""Output-to-model conversion (eq. 5): PRNG-key regression and the
+masked-scan grid path.
+
+The key regression guards the fix for the old silent ``PRNGKey(0)``
+default: every caller that omitted ``key`` drew the *identical* batch
+sequence — across rounds and across configs — so conversion "randomness"
+was a constant.  ``key`` is now a required argument.
+"""
+import inspect
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.conversion import output_to_model, output_to_model_steps
+from repro.models.cnn import CNN
+
+
+@pytest.fixture(scope="module")
+def setup():
+    model = CNN()
+    params = model.init(jax.random.PRNGKey(0))
+    k = jax.random.PRNGKey(3)
+    seeds_x = jax.random.normal(k, (40, 28, 28, 1))
+    seeds_y = jax.random.randint(jax.random.fold_in(k, 1), (40,), 0, 10)
+    gout = jax.nn.softmax(jax.random.normal(jax.random.fold_in(k, 2),
+                                            (10, 10)), -1)
+    return model, params, seeds_x, seeds_y, gout
+
+
+def test_two_keys_give_distinct_batch_draws(setup):
+    """Regression: distinct keys must produce distinct batch sequences
+    (and so distinct losses and converted params)."""
+    model, params, sx, sy, gout = setup
+    p1, l1 = output_to_model(model.apply, params, sx, sy, gout, 6, 8,
+                             0.05, 0.01, jax.random.PRNGKey(1))
+    p2, l2 = output_to_model(model.apply, params, sx, sy, gout, 6, 8,
+                             0.05, 0.01, jax.random.PRNGKey(2))
+    assert float(np.max(np.abs(np.asarray(l1) - np.asarray(l2)))) > 0
+    diffs = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()), p1, p2)
+    assert max(jax.tree.leaves(diffs)) > 0
+
+
+def test_same_key_is_deterministic(setup):
+    model, params, sx, sy, gout = setup
+    p1, l1 = output_to_model(model.apply, params, sx, sy, gout, 6, 8,
+                             0.05, 0.01, jax.random.PRNGKey(5))
+    p2, l2 = output_to_model(model.apply, params, sx, sy, gout, 6, 8,
+                             0.05, 0.01, jax.random.PRNGKey(5))
+    np.testing.assert_array_equal(np.asarray(l1), np.asarray(l2))
+
+
+def test_key_is_required(setup):
+    """No silent default: omitting the key must fail loudly."""
+    model, params, sx, sy, gout = setup
+    sig = inspect.signature(output_to_model)
+    assert sig.parameters["key"].default is inspect.Parameter.empty
+    with pytest.raises(TypeError):
+        output_to_model(model.apply, params, sx, sy, gout, 6, 8,
+                        0.05, 0.01)
+
+
+# ---------------------------------------------------------------------------
+# Masked-scan grid path
+# ---------------------------------------------------------------------------
+
+def test_masked_steps_equal_static_iters(setup):
+    """With host-precomputed step keys, the masked scan at iters < K_max
+    is bitwise-equal to the static-iters path at those iters.  Both sides
+    run under jit (as in the engine) — eager op-by-op execution may fuse
+    differently at the last ulp."""
+    import functools
+    model, params, sx, sy, gout = setup
+    key = jax.random.PRNGKey(7)
+    iters, k_max = 5, 9
+    ref_p, ref_l = output_to_model(model.apply, params, sx, sy, gout,
+                                   iters, 8, 0.05, 0.01, key)
+    step_keys = np.zeros((k_max, 2), np.uint32)
+    step_keys[:iters] = np.asarray(jax.random.split(key, iters))
+    jitted = jax.jit(functools.partial(output_to_model_steps, model.apply),
+                     static_argnums=(7,))
+    got_p, got_l = jitted(params, sx, sy, gout, jnp.asarray(step_keys),
+                          jnp.int32(iters), jnp.int32(sx.shape[0]), 8,
+                          0.05, 0.01)
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), ref_p, got_p)
+    np.testing.assert_array_equal(np.asarray(ref_l),
+                                  np.asarray(got_l)[:iters])
+    assert float(np.abs(np.asarray(got_l)[iters:]).max()) == 0  # masked
+
+
+def test_n_train_bound_never_samples_pad_rows(setup):
+    """Pad rows are poisoned with NaN; the n_train randint bound must keep
+    them out of every batch."""
+    model, params, sx, sy, gout = setup
+    n_live = 17
+    px = np.full((40, 28, 28, 1), np.nan, np.float32)
+    px[:n_live] = np.asarray(sx)[:n_live]
+    key = jax.random.PRNGKey(11)
+    step_keys = jnp.asarray(np.asarray(jax.random.split(key, 6)))
+    p, losses = output_to_model_steps(
+        model.apply, params, jnp.asarray(px), sy, gout, step_keys,
+        jnp.int32(6), jnp.int32(n_live), 8, 0.05, 0.01)
+    assert all(np.isfinite(np.asarray(l)) for l in losses)
+    assert all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(p))
+
+
+def test_soft_one_hot_labels_match_hard_labels(setup):
+    """Grid promotion of hard labels to one-hot rows (mixed hard/soft
+    grids) changes neither the loss nor the converted params."""
+    model, params, sx, sy, gout = setup
+    key = jax.random.PRNGKey(13)
+    p1, l1 = output_to_model(model.apply, params, sx, sy, gout, 6, 8,
+                             0.05, 0.01, key)
+    soft = jax.nn.one_hot(sy, 10)
+    p2, l2 = output_to_model(model.apply, params, sx, soft, gout, 6, 8,
+                             0.05, 0.01, key)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=1e-6)
+    jax.tree.map(lambda a, b: np.testing.assert_allclose(
+        np.asarray(a), np.asarray(b), atol=1e-6), p1, p2)

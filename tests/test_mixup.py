@@ -274,6 +274,83 @@ def test_cycle_lams_matrix_is_invertible_off_half():
 
 
 # ---------------------------------------------------------------------------
+# Cycle-search edge cases: single-class uploads, lam = 0.5 singularities,
+# and DFS step-budget exhaustion
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("length", [2, 3, 4])
+def test_find_label_cycles_single_class_uploads_is_empty(length):
+    """Single-class uploads have minor == major everywhere: no edge of the
+    label multigraph is usable, so every cycle length returns empty."""
+    minor = np.full(50, 3)
+    major = np.full(50, 3)
+    dev = np.arange(50) % 5
+    cycles = find_label_cycles(minor, major, dev, length)
+    assert cycles.shape == (0, length)
+
+
+def test_pair_symmetric_single_class_uploads_is_empty():
+    same = np.full(20, 7)
+    assert len(pair_symmetric(same, same, np.arange(20) % 4)) == 0
+
+
+def test_collect_seeds_single_class_degrades_to_soft_labels():
+    """A population that only holds one class cannot pair or cycle; the
+    mix2fld pipeline must fall back to soft-label training, not crash."""
+    from repro.core.protocols import FederatedConfig, collect_seeds
+    key = jax.random.PRNGKey(0)
+    dev_x = jax.random.normal(key, (4, 40, 28, 28, 1))
+    dev_y = jnp.full((4, 40), 2, jnp.int32)  # one class everywhere
+    fc = FederatedConfig(protocol="mix2fld", num_devices=4, n_seed=6,
+                         n_inverse=12)
+    seeds = collect_seeds(fc, dev_x, dev_y, key)
+    assert seeds["train_y"].ndim == 2  # soft-label fallback
+    assert bool(jnp.isfinite(seeds["train_x"]).all())
+
+
+def test_cycle_lams_pair_matrix_singular_at_half():
+    """n = 2, lam = 0.5 is the Prop. 1 singularity (eigenvalue
+    lam + (1-lam)*omega = 0): the circulant must NOT be invertible —
+    this is exactly why collect_seeds degrades at lam = 0.5."""
+    C = np.asarray(circulant(cycle_lams(2, 0.5)))
+    assert abs(np.linalg.det(C)) < 1e-6
+
+
+def test_inverse_mixup_cycles_odd_length_survives_lam_half():
+    """Odd cycle lengths keep all eigenvalues lam + (1-lam)*omega^k away
+    from zero even at lam = 0.5, so the general-N inverse still unmixes."""
+    length, lam = 3, 0.5
+    raw = np.random.default_rng(0).normal(
+        size=(length, 8)).astype(np.float32)
+    m = np.stack([lam * raw[k] + (1 - lam) * raw[(k + 1) % length]
+                  for k in range(length)])
+    cycles = np.arange(length)[None, :]
+    out = inverse_mixup_cycles(jnp.asarray(m), cycles, lam)
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_allclose(np.asarray(out), raw, atol=1e-3)
+
+
+def test_find_label_cycles_budget_exhaustion_returns_partial():
+    """A tiny step budget must terminate with whatever was found so far
+    (graceful degradation), never hang or raise."""
+    rng = np.random.default_rng(2)
+    n, C, D = 400, 10, 40
+    minor = rng.integers(0, C, n)
+    major = (minor + rng.integers(1, C, n)) % C
+    dev = rng.integers(0, D, n)
+    full = find_label_cycles(minor, major, dev, 3)
+    assert len(full) > 1  # solvable graph
+    tiny = find_label_cycles(minor, major, dev, 3, max_steps=4)
+    assert len(tiny) < len(full)  # budget cut the search short
+    assert tiny.shape[1:] == (3,)
+    for row in tiny:  # whatever was found is still valid
+        for k in range(3):
+            assert major[row[k]] == minor[row[(k + 1) % 3]]
+    zero = find_label_cycles(minor, major, dev, 3, max_steps=0)
+    assert len(zero) == 0
+
+
+# ---------------------------------------------------------------------------
 # Privacy ordering (Table II)
 # ---------------------------------------------------------------------------
 

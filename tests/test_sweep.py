@@ -1,0 +1,195 @@
+"""Sweep-vs-loop equivalence: the compiled grid engine must reproduce
+per-point ``FederatedTrainer.run`` histories bitwise-or-1e-6, on both the
+vmapped and the ``shard_devices`` round-loop paths.
+
+Configs are golden-sized (D=4, 8 local iters, 3 rounds) so the whole file
+stays in the fast tier.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.channel import ChannelConfig
+from repro.core.protocols import FederatedConfig
+from repro.data import partition_iid, synthetic_images
+from repro.models.cnn import CNN
+from repro.sweep import (CH_SWEEPABLE, FED_SWEEPABLE, SweepRunner,
+                         make_grid, run_pointwise, run_sweep)
+
+CH = ChannelConfig(num_devices=4, p_up_dbm=40.0)
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y = synthetic_images(jax.random.PRNGKey(42), 1400)
+    dev_x, dev_y = partition_iid(np.asarray(x[:1200]), np.asarray(y[:1200]),
+                                 4, 300, 10, seed=0)
+    return dev_x, dev_y, jnp.asarray(x[1200:]), jnp.asarray(y[1200:])
+
+
+def _base(**kw):
+    cfg = dict(protocol="mix2fld", num_devices=4, local_iters=8,
+               local_batch=16, server_iters=8, server_batch=16,
+               max_rounds=3, n_seed=6, n_inverse=12, seed=0)
+    cfg.update(kw)
+    return FederatedConfig(**cfg)
+
+
+def _assert_equivalent(result, histories):
+    for g, h in enumerate(histories):
+        sh = result.history(g)
+        np.testing.assert_allclose(sh["acc"], h["acc"], atol=1e-6,
+                                   err_msg=f"acc, point {g}")
+        np.testing.assert_allclose(sh["loss"], h["loss"], atol=1e-6,
+                                   err_msg=f"loss, point {g}")
+        np.testing.assert_allclose(sh["round_latency_s"],
+                                   h["round_latency_s"], rtol=1e-6,
+                                   err_msg=f"latency, point {g}")
+        assert sh["uplink_ok"] == h["uplink_ok"], f"uplink_ok, point {g}"
+        assert sh["converged_round"] == h["converged_round"], \
+            f"converged_round, point {g}"
+
+
+# ---------------------------------------------------------------------------
+# The headline equivalence: a 2x3 grid with ragged conversion budgets
+# (exercises the per-config iteration masking) on both round-loop paths
+# ---------------------------------------------------------------------------
+
+def test_sweep_matches_loop_2x3_vmapped(data):
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(), CH, eta=(0.01, 0.02),
+                     server_iters=(6, 8, 12))
+    assert grid.shape == (2, 3) and grid.size == 6
+    res = run_sweep(CNN(), grid, dev_x, dev_y, tx, ty)
+    _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y, tx, ty))
+
+
+def test_sweep_matches_loop_2x3_sharded(data):
+    """shard_devices grids place the device axis on the "data" mesh under
+    the grid vmap; on this host's mesh the history must still equal the
+    per-point (sharded) loop."""
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(shard_devices=True), CH, eta=(0.01, 0.02),
+                     server_iters=(6, 8, 12))
+    runner = SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
+    assert runner.mesh is not None
+    res = runner.run()
+    _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y, tx, ty))
+
+
+@pytest.mark.multichip
+def test_sweep_sharded_multichip_uses_multiple_shards(data):
+    """Pod validation: with >1 chip the sweep's device mesh must actually
+    split the population and still reproduce the vmapped sweep."""
+    dev_x, dev_y, tx, ty = data
+    grid_s = make_grid(_base(shard_devices=True), CH, eta=(0.01, 0.02))
+    runner = SweepRunner(CNN(), grid_s, dev_x, dev_y, tx, ty)
+    assert runner.mesh.devices.size > 1
+    res_s = runner.run()
+    grid_v = make_grid(_base(), CH, eta=(0.01, 0.02))
+    res_v = run_sweep(CNN(), grid_v, dev_x, dev_y, tx, ty)
+    np.testing.assert_allclose(res_s.acc, res_v.acc, atol=1e-4)
+    np.testing.assert_allclose(res_s.loss, res_v.loss, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Every protocol branch of the grid round step
+# ---------------------------------------------------------------------------
+
+def test_sweep_matches_loop_fl_channel_axis(data):
+    """Channel axes batch the SNR/outage draws: both regimes of a
+    ``p_up_dbm`` axis must reproduce their per-point loop runs, and the
+    regimes must actually differ (the low-power point pays more uplink
+    slots; at D=4 the FL payload still fits the window, unlike the
+    paper's D=10 boundary)."""
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(protocol="fl"), CH, p_up_dbm=(23.0, 40.0))
+    res = run_sweep(CNN(), grid, dev_x, dev_y, tx, ty)
+    hs = run_pointwise(CNN(), grid, dev_x, dev_y, tx, ty)
+    _assert_equivalent(res, hs)
+    assert res.history(0)["round_latency_s"] != res.history(1)[
+        "round_latency_s"]  # the two channel regimes drew differently
+
+
+def test_sweep_matches_loop_fd(data):
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(protocol="fd"), CH, beta=(0.005, 0.02))
+    res = run_sweep(CNN(), grid, dev_x, dev_y, tx, ty)
+    _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y, tx, ty))
+
+
+@pytest.mark.parametrize("protocol,axes", [
+    ("fld", dict(n_seed=(4, 6))),
+    ("mixfld", dict(lam=(0.1, 0.3))),
+])
+def test_sweep_matches_loop_fld_family(data, protocol, axes):
+    """Ragged seed budgets (padded train sets + n_train masking) and soft
+    MixFLD labels both reproduce the loop."""
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(protocol=protocol), CH, **axes)
+    res = run_sweep(CNN(), grid, dev_x, dev_y, tx, ty)
+    _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y, tx, ty))
+
+
+def test_sweep_warm_rerun_is_deterministic(data):
+    """A second run() of the same runner reuses the compiled program and
+    returns the identical histories."""
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(), CH, eta=(0.01, 0.02))
+    runner = SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
+    r1, r2 = runner.run(), runner.run()
+    np.testing.assert_array_equal(r1.acc, r2.acc)
+    np.testing.assert_array_equal(r1.loss, r2.loss)
+    # (warm-call speedup itself is measured by bench_seed_sweep, not
+    # asserted here — wall-clock ordering would flake on loaded CI)
+
+
+# ---------------------------------------------------------------------------
+# Grid construction & result frames
+# ---------------------------------------------------------------------------
+
+def test_make_grid_rejects_bad_axes():
+    fc = _base()
+    with pytest.raises(ValueError, match="static"):
+        make_grid(fc, CH, num_devices=(4, 8))     # shape-changing field
+    with pytest.raises(ValueError, match="static"):
+        make_grid(fc, CH, t_max_slots=(10, 100))  # draw-shaping field
+    with pytest.raises(ValueError, match="unknown"):
+        make_grid(fc, CH, nonsense=(1, 2))
+    with pytest.raises(ValueError, match="no values"):
+        make_grid(fc, CH, eta=())
+
+
+def test_make_grid_points_follow_c_order():
+    grid = make_grid(_base(), CH, eta=(0.01, 0.02), n_seed=(4, 6))
+    assert grid.shape == (2, 2)
+    etas = [fc.eta for fc, _ in grid.points]
+    seeds = [fc.n_seed for fc, _ in grid.points]
+    assert etas == [0.01, 0.01, 0.02, 0.02]   # last axis fastest
+    assert seeds == [4, 6, 4, 6]
+    labels = grid.labels()
+    assert labels[1] == {"eta": 0.01, "n_seed": 6}
+    assert set(FED_SWEEPABLE) & set(CH_SWEEPABLE) == set()
+
+
+def test_runner_rejects_channel_population_mismatch(data):
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(), ChannelConfig(num_devices=7), eta=(0.01,))
+    with pytest.raises(ValueError, match="devices"):
+        SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
+
+
+def test_result_frames_and_payload(data):
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(), CH, n_seed=(4, 6))
+    res = run_sweep(CNN(), grid, dev_x, dev_y, tx, ty)
+    rows = res.frames()
+    assert len(rows) == 2 and rows[0]["n_seed"] == 4
+    assert all(np.isfinite(r["final_acc"]) for r in rows)
+    assert all(len(r["acc"]) == 3 for r in rows)
+    # cum_time_s amortizes the sweep wall clock on top of channel latency
+    assert rows[0]["cum_time_s"] > sum(res.history(0)["round_latency_s"])
+    payload = res.to_payload()
+    import json
+    assert json.loads(json.dumps(payload))["grid_shape"] == [2]
