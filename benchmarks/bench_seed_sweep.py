@@ -23,8 +23,11 @@ from __future__ import annotations
 import sys
 import time
 
+import jax
+
 from repro.channel import ChannelConfig
 from repro.core.protocols import FederatedConfig
+from repro.core.seed_prep import SeedPrepMemo, prep_stats, prepare_seeds
 from repro.models.cnn import CNN
 from repro.sweep import SweepRunner, make_grid, run_pointwise
 
@@ -32,6 +35,65 @@ from .common import protocol_dataset, save_result
 
 GRID_NS = (10, 30, 50)
 GRID_NI = (20, 60, 100)
+
+
+def run_seed_prep(G=9):
+    """Loop-vs-memoized host seed prep on an eta-only G-point grid.
+
+    eta does not determine the round-1 seed sets, so the per-point loop
+    (what the sweep engine used to do) re-collects G identical sets; the
+    memoized prep layer collects once and serves G-1 content-key hits.
+    Numbers land in benchmarks/results/seed_prep.json.
+    """
+    dev_x, dev_y, _, _ = protocol_dataset(num_devices=5, iid=False)
+    ch = ChannelConfig(num_devices=5)
+    base = FederatedConfig(protocol="mix2fld", num_devices=5, n_seed=20,
+                           n_inverse=40, seed=2)
+    grid = make_grid(base, ch,
+                     eta=tuple(0.005 * (k + 1) for k in range(G)))
+
+    def point_key(fc):  # the loop path's exact key chain
+        _, key = jax.random.split(jax.random.PRNGKey(fc.seed))
+        return jax.random.fold_in(jax.random.fold_in(key, 1), 2)
+
+    # warm the jit caches once so both timings measure host prep, not
+    # first-call tracing
+    jax.block_until_ready(
+        prepare_seeds(base, dev_x, dev_y, point_key(base))["train_x"])
+
+    prep_stats.reset()
+    t0 = time.perf_counter()
+    for fc, _ in grid.points:
+        jax.block_until_ready(
+            prepare_seeds(fc, dev_x, dev_y, point_key(fc))["train_x"])
+    loop_s = time.perf_counter() - t0
+    loop_runs = prep_stats.runs
+
+    prep_stats.reset()
+    memo = SeedPrepMemo()
+    t0 = time.perf_counter()
+    for fc, _ in grid.points:
+        jax.block_until_ready(
+            prepare_seeds(fc, dev_x, dev_y, point_key(fc),
+                          memo=memo)["train_x"])
+    memo_s = time.perf_counter() - t0
+
+    out = {
+        "grid_points": G,
+        "axis": "eta",
+        "loop_s": round(loop_s, 4),
+        "memoized_s": round(memo_s, 4),
+        "speedup": round(loop_s / memo_s, 2),
+        "loop_prep_runs": loop_runs,
+        "memo_prep_runs": prep_stats.runs,
+        "memo_hits": memo.hits,
+    }
+    save_result("seed_prep", out)
+    print(f"seed prep at G={G} (eta-only): loop={loop_s:.3f}s "
+          f"({loop_runs} preps) memoized={memo_s:.3f}s "
+          f"({prep_stats.runs} prep, {memo.hits} hits) "
+          f"speedup={out['speedup']:.1f}x")
+    return out
 
 
 def run(local_iters=2, max_rounds=2, quick=False):
@@ -91,16 +153,20 @@ def run(local_iters=2, max_rounds=2, quick=False):
           f"cold={cold_s:.1f}s warm={warm_s:.1f}s "
           f"speedup warm={speedup_warm:.1f}x")
     save_result("seed_sweep", out)
-    return out, engine
+    prep = run_seed_prep()
+    return out, engine, prep
 
 
 def main(quick=True):
-    out, engine = run(quick=quick)
+    out, engine, prep = run(quick=quick)
     rows = [f"seed_sweep/{k},0,acc={v['final_acc']:.4f}"
             for k, v in out.items()]
     rows.append(f"sweep_engine/{engine['grid_points']}pt,"
                 f"{engine['sweep_warm_s']*1e6:.0f},"
                 f"speedup_warm={engine['speedup_warm']:.1f}x")
+    rows.append(f"seed_prep/G{prep['grid_points']}_eta,"
+                f"{prep['memoized_s']*1e6:.0f},"
+                f"speedup={prep['speedup']:.1f}x")
     return rows
 
 

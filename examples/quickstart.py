@@ -34,10 +34,11 @@ def main():
     trainer = FederatedTrainer(CNN(), fc, ch)
     h = trainer.run(dev_x, dev_y, test_x, test_y, log=print)
 
-    seeds = h["seeds"]
-    print(f"\nuploaded mixed-up seeds : {seeds['uploaded'].shape[0]}")
-    print(f"inversely mixed-up seeds: {seeds['train_x'].shape[0]} "
-          f"(augmented, hard labels)")
+    meta = h["seeds"]  # lightweight metadata; arrays via keep_seed_arrays
+    print(f"\nuploaded mixed-up seeds : {meta['n_uploaded']}")
+    print(f"inversely mixed-up seeds: {meta['n_train']} "
+          f"(augmented, hard labels={meta['hard_labels']})")
+    print(f"label-cycle histogram   : {meta['cycle_hist']}")
     print(f"accuracy after {fc.max_rounds} rounds: {h['acc'][-1]:.3f}")
 
 

@@ -44,14 +44,13 @@ except ImportError:
     from jax.experimental.shard_map import shard_map
 
 from ..channel import ChannelConfig, payload_bits, round_trip, round_trip_traced
-from ..kernels.mixup_kernel import mixup_pallas
 from ..launch.mesh import make_device_mesh
 from ..launch.sharding import federated_pspecs
 from .conversion import output_to_model, output_to_model_steps
 from .losses import fd_loss
-from .mixup import (find_label_cycles, inverse_mixup_cycles,
-                    make_mixup_batch_pallas, mixup_pairs, pair_symmetric)
 from .outputs import label_averaged_outputs
+from .seed_prep import (collect_seeds, prepare_seeds,  # noqa: F401
+                        summarize_seeds)
 
 PROTOCOLS = ("fl", "fd", "fld", "mixfld", "mix2fld")
 # protocols that upload (mixed) seed samples and convert outputs to a model
@@ -79,6 +78,24 @@ class FederatedConfig:
     shard_devices: bool = False    # mesh-shard the device axis (False: vmap)
     mesh_shards: int = 0           # 0 = auto (largest divisor of |D| that
     #                                fits the local chip count)
+    keep_seed_arrays: bool = False  # opt-in: keep the full round-1 seed
+    #                                arrays on history["seed_arrays"]
+    #                                (histories otherwise carry only the
+    #                                summarize_seeds metadata)
+
+    def __post_init__(self):
+        # data-dependent bounds (n_seed vs the per-device sample count)
+        # are checked where the data is first seen: seed_prep.collect_seeds
+        if self.protocol not in PROTOCOLS:
+            raise ValueError(f"unknown protocol {self.protocol!r}; "
+                             f"one of {PROTOCOLS}")
+        if self.n_seed < 1:
+            raise ValueError(f"n_seed must be >= 1, got {self.n_seed}")
+        if self.n_inverse < 1:
+            raise ValueError(f"n_inverse must be >= 1, got {self.n_inverse}")
+        if not 0.0 <= self.lam <= 1.0:
+            raise ValueError(f"lam is a mixing ratio in [0, 1], "
+                             f"got {self.lam}")
 
 
 # ---------------------------------------------------------------------------
@@ -170,116 +187,9 @@ def gout_update_psum(favg, cnt, ok):
     return num / jnp.maximum(den[:, None], 1.0)
 
 
-# ---------------------------------------------------------------------------
-# Round-1 seed collection (host-side: pairing and cycle search are
-# sort/DFS algorithms, run once per training job)
-# ---------------------------------------------------------------------------
-
-def collect_seeds(fc: FederatedConfig, dev_x, dev_y, key):
-    """Round-1 seed collection, batched over the device axis.
-
-    Device-side Mixup is one vmapped ``mixup_pairs`` draw plus a single
-    ``make_mixup_batch_pallas`` kernel call over all (D, n_seed)
-    mixes; server-side pairing is the vectorized sort-based
-    ``pair_symmetric`` over the whole (D*Ns,) upload set; the paired
-    inverse-Mixup samples are computed in one shot through the
-    ``mixup_pallas`` kernel (scalar ``mixup.inverse_mixup`` stays as the
-    reference oracle), and cycle augmentation beyond the pair set uses
-    the batched ``inverse_mixup_cycles`` contraction.  Returns dict with
-    uploaded samples, labels (hard or soft), metadata, and the
-    server-side training set."""
-    D = fc.num_devices
-    C = fc.num_classes
-    proto = fc.protocol
-    if proto in ("fl", "fd"):
-        return None
-    dev_x = jnp.asarray(dev_x)
-    dev_y = jnp.asarray(dev_y)
-    n_local = dev_x.shape[1]
-    feat = dev_x.shape[2:]
-    keys = jax.random.split(key, D)
-
-    if proto == "fld":  # raw samples (privacy leak, the baseline)
-        idx = jax.vmap(lambda k: jax.random.choice(
-            k, n_local, (fc.n_seed,), replace=False))(keys)
-        seeds_x = jax.vmap(lambda x, i: x[i])(dev_x, idx)
-        seeds_y = jnp.take_along_axis(dev_y, idx, axis=1)
-        seeds_x = seeds_x.reshape((D * fc.n_seed,) + feat)
-        return {"train_x": seeds_x, "train_y": seeds_y.reshape(-1),
-                "uploaded": seeds_x, "raw_pairs": None}
-
-    # ---- Mixup at devices (eq. 6), batched over the device axis and
-    # mixed through the mixup_pallas kernel (same treatment the
-    # server-side inverse gets below; jax.vmap(make_mixup_batch) is
-    # the parity oracle in tests/test_kernels.py) ----
-    idx_i, idx_j = jax.vmap(mixup_pairs, in_axes=(0, 0, None, None))(
-        keys, dev_y, fc.n_seed, C)                     # (D, Ns) each
-    mixed, softs, (minors, majors) = make_mixup_batch_pallas(
-        dev_x, dev_y, idx_i, idx_j, fc.lam, C)
-    gather = jax.vmap(lambda x, i: x[i])
-    raws = jnp.stack([gather(dev_x, idx_i), gather(dev_x, idx_j)],
-                     axis=2)                           # (D, Ns, 2, ...)
-    mixed = mixed.reshape((D * fc.n_seed,) + feat)
-    softs = softs.reshape(D * fc.n_seed, C)
-    minors = np.asarray(minors).reshape(-1)
-    majors = np.asarray(majors).reshape(-1)
-    raws = raws.reshape((D * fc.n_seed, 2) + feat)
-    dev_ids = np.repeat(np.arange(D), fc.n_seed)
-
-    if proto == "mixfld":
-        return {"train_x": mixed, "train_y": softs,
-                "uploaded": mixed, "raw_pairs": raws}
-
-    # ---- Mix2FLD: inverse-Mixup across devices (eq. 7, Prop. 1) ----
-    if abs(2.0 * fc.lam - 1.0) < 1e-6:
-        # lam = 0.5 makes the inverse ratios singular (Prop. 1);
-        # degrade to soft-label training instead of dividing by zero
-        return {"train_x": mixed, "train_y": softs,
-                "uploaded": mixed, "raw_pairs": raws}
-    pairs = pair_symmetric(minors, majors, dev_ids)    # (P, 2)
-    want_total = fc.n_inverse * D
-    mixed_flat = mixed.reshape(mixed.shape[0], -1)
-    inv_chunks, lab_chunks = [], []
-    if len(pairs):
-        # one batched kernel call per side: s1 = lam_hat*m_i +
-        # (1-lam_hat)*m_j and its mirror, for every pair at once
-        lam_hat = fc.lam / (2.0 * fc.lam - 1.0)
-        a = mixed_flat[jnp.asarray(pairs[:, 0])]
-        b = mixed_flat[jnp.asarray(pairs[:, 1])]
-        la = jnp.full((len(pairs),), lam_hat, jnp.float32)
-        s1 = mixup_pallas(a, b, la, 1.0 - la)
-        s2 = mixup_pallas(b, a, la, 1.0 - la)
-        inv_chunks.append(jnp.stack([s1, s2], axis=1).reshape(
-            2 * len(pairs), -1))
-        lab_chunks.append(np.stack([minors[pairs[:, 0]],
-                                    minors[pairs[:, 1]]], 1).reshape(-1))
-    # augmentation beyond 2*P: longer label cycles draw *distinct*
-    # cyclic lam-orders (Prop. 1 rows differ with N), so extra draws
-    # are new samples rather than duplicates of the pair set
-    total = 2 * len(pairs)
-    length = 3
-    while total < want_total and length <= max(3, min(C, 6)):
-        cycles = find_label_cycles(minors, majors, dev_ids, length)
-        if len(cycles):
-            inv_chunks.append(inverse_mixup_cycles(
-                mixed_flat, cycles, fc.lam))
-            lab_chunks.append(minors[cycles].reshape(-1))
-            total += cycles.size
-        length += 1
-    if not inv_chunks:  # degenerate pairing: fall back to soft labels
-        return {"train_x": mixed, "train_y": softs,
-                "uploaded": mixed, "raw_pairs": raws}
-    inv_x = jnp.concatenate(inv_chunks)
-    inv_y = np.concatenate(lab_chunks)
-    if inv_x.shape[0] < want_total:  # last resort: tile (explicit, old
-        reps = -(-want_total // inv_x.shape[0])  # behaviour duplicated
-        inv_x = jnp.tile(inv_x, (reps, 1))       # silently)
-        inv_y = np.tile(inv_y, reps)
-    inv_x = inv_x[:want_total].reshape((-1,) + feat)
-    inv_y = jnp.asarray(inv_y[:want_total], jnp.int32)
-    return {"train_x": inv_x, "train_y": inv_y,
-            "uploaded": mixed, "raw_pairs": raws,
-            "n_pairs": len(pairs)}
+# Round-1 seed collection lives in core.seed_prep (host-side pairing and
+# segment/sort cycle search, content-keyed memoization); ``collect_seeds``
+# is re-exported above for the established import path.
 
 
 class FederatedTrainer:
@@ -466,7 +376,12 @@ class FederatedTrainer:
                         history["converged_round"] = p
                 gout_prev = gout
 
-        history["seeds"] = seeds
+        # histories carry lightweight seed metadata, not device arrays —
+        # serialized results stay small; opt back into the raw arrays
+        # with FederatedConfig.keep_seed_arrays
+        history["seeds"] = summarize_seeds(seeds)
+        if fc.keep_seed_arrays:
+            history["seed_arrays"] = seeds
         history["final_acc"] = history["acc"][-1]
         self.last_dev_gout = dev_gout  # per-device KD tables (tests inspect)
         return history

@@ -1,0 +1,288 @@
+"""Round-1 seed-prep layer: host-side seed collection, memoized.
+
+``collect_seeds`` is the host-side half of Algorithm 1's round-1 seed
+exchange (device-side Mixup draws, the sort-based ``pair_symmetric``
+matcher, segment/sort label-cycle search, inverse-Mixup assembly).  It
+runs once per training job on the loop path — but a sweep grid used to
+re-run it once per grid point even when no seed-determining field
+varied (an eta-only grid re-collected G identical seed sets).
+
+This module factors that host prep behind a content-keyed memo:
+
+* :func:`seed_prep_key` — the seed-determining identity of a prep call:
+  the :data:`SEED_FIELDS` of the config (``protocol``, ``lam``,
+  ``n_seed``, ``n_inverse``, ``seed``, plus the shape-fixing
+  ``num_devices``/``num_classes``), a content fingerprint of the device
+  partition, and the PRNG key bytes.
+* :class:`SeedPrepMemo` + :func:`prepare_seeds` — memoized entry point;
+  grid points whose keys coincide share one prep run *and* one result
+  object (the sweep engine stacks shared padded seed sets by identity).
+* :func:`summarize_seeds` — lightweight metadata (counts, pair count,
+  cycle-length histogram) that ``FederatedTrainer.run`` stores in
+  histories instead of dragging device arrays into serialized results.
+* :data:`prep_stats` — a host-prep run counter; the memoization tests
+  assert an eta-only grid preps exactly once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import TYPE_CHECKING, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels.mixup_kernel import mixup_pallas
+from .mixup import (find_label_cycles, inverse_mixup_cycles,
+                    make_mixup_batch_pallas, mixup_pairs, pair_symmetric)
+
+if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids a cycle)
+    from .protocols import FederatedConfig
+
+#: Config fields that determine the round-1 seed sets.  Everything else
+#: (step sizes, conversion budgets, channel fields) leaves the host prep
+#: untouched, so grid points differing only there share one prep run.
+SEED_FIELDS = ("protocol", "lam", "n_seed", "n_inverse", "seed",
+               "num_devices", "num_classes")
+
+
+@dataclasses.dataclass
+class PrepStats:
+    """Global host-prep run counter (see ``prep_stats``)."""
+    runs: int = 0
+
+    def reset(self):
+        self.runs = 0
+
+
+prep_stats = PrepStats()
+
+
+def partition_fingerprint(dev_x, dev_y) -> str:
+    """Content digest of a device partition — the ``partition identity``
+    part of the memo key.  Hashing the bytes (~ms for MNIST-sized
+    partitions) is negligible next to one prep run and robust against
+    id() reuse across garbage-collected arrays."""
+    h = hashlib.sha1()
+    for a in (dev_x, dev_y):
+        a = np.asarray(a)
+        h.update(str((a.shape, str(a.dtype))).encode())
+        h.update(np.ascontiguousarray(a).tobytes())
+    return h.hexdigest()
+
+
+def seed_fields_key(fc) -> tuple:
+    """The :data:`SEED_FIELDS` tuple of one config — the config half of
+    the memo key, and the grouping key ``SweepGrid.seed_key`` exposes at
+    the grid level (one definition, used by both)."""
+    return tuple(getattr(fc, f) for f in SEED_FIELDS)
+
+
+def seed_prep_key(fc, dev_x, dev_y, key, fingerprint: Optional[str] = None
+                  ) -> tuple:
+    """Content key of one prep call: seed-determining config fields +
+    partition fingerprint + PRNG key bytes.  Pass a precomputed
+    ``fingerprint`` to skip re-hashing the partition."""
+    return (seed_fields_key(fc),
+            fingerprint or partition_fingerprint(dev_x, dev_y),
+            np.asarray(key).tobytes())
+
+
+class SeedPrepMemo:
+    """Content-keyed cache of prep results.  ``hits``/``misses`` are
+    instrumentation for tests and benchmark reporting.
+
+    The partition fingerprint is itself cached per array pair (keyed by
+    id, with the arrays retained so ids stay valid for the memo's
+    lifetime): a G-point grid hashes its shared partition once, so memo
+    *hits* cost a dict lookup, not a full-dataset sha1.  Consequence:
+    partitions handed to one memo must not be mutated in place between
+    calls (jax arrays are immutable; for numpy inputs, pass a fresh
+    array — or a fresh memo — when the data changes), or the stale
+    fingerprint will serve the old seed set."""
+
+    def __init__(self):
+        self._cache: dict = {}
+        self._fp_cache: dict = {}
+        self.hits = 0
+        self.misses = 0
+
+    def _fingerprint(self, dev_x, dev_y) -> str:
+        fpk = (id(dev_x), id(dev_y))
+        hit = self._fp_cache.get(fpk)
+        if hit is not None:
+            return hit[0]
+        fp = partition_fingerprint(dev_x, dev_y)
+        self._fp_cache[fpk] = (fp, dev_x, dev_y)
+        return fp
+
+    def get_or_collect(self, fc, dev_x, dev_y, key):
+        k = seed_prep_key(fc, dev_x, dev_y, key,
+                          fingerprint=self._fingerprint(dev_x, dev_y))
+        if k in self._cache:
+            self.hits += 1
+            return self._cache[k]
+        self.misses += 1
+        out = collect_seeds(fc, dev_x, dev_y, key)
+        self._cache[k] = out
+        return out
+
+
+def prepare_seeds(fc, dev_x, dev_y, key, memo: Optional[SeedPrepMemo] = None):
+    """Memoized front door to :func:`collect_seeds`.  Without a memo it
+    is a plain prep run; with one, repeat calls whose seed-determining
+    content coincides return the *same* result object."""
+    if memo is None:
+        return collect_seeds(fc, dev_x, dev_y, key)
+    return memo.get_or_collect(fc, dev_x, dev_y, key)
+
+
+def summarize_seeds(seeds) -> Optional[dict]:
+    """Lightweight, JSON-ready metadata of one seed set: set sizes, pair
+    count and the cycle-length histogram — what histories carry instead
+    of the device arrays (opt back in via
+    ``FederatedConfig.keep_seed_arrays``).
+
+    ``n_pairs``/``cycle_hist`` describe the *extraction* (the
+    augmentation pool before it is truncated — or, in the degenerate
+    last resort, tiled — to the ``n_inverse * D`` target); their sample
+    total is reported as ``n_extracted``, which therefore need not equal
+    ``n_train``."""
+    if seeds is None:
+        return None
+    hist = {str(k): int(v)  # string keys survive a JSON round-trip
+            for k, v in seeds.get("cycle_hist", {}).items()}
+    return {
+        "n_train": int(seeds["train_x"].shape[0]),
+        "n_uploaded": int(seeds["uploaded"].shape[0]),
+        "n_pairs": int(seeds.get("n_pairs", 0)),
+        "cycle_hist": hist,
+        "n_extracted": sum(int(k) * v for k, v in hist.items()),
+        "hard_labels": np.asarray(seeds["train_y"]).ndim == 1,
+    }
+
+
+# ---------------------------------------------------------------------------
+# The host prep itself (moved verbatim from core.protocols; pairing and
+# cycle search are host-side sort algorithms, run once per training job)
+# ---------------------------------------------------------------------------
+
+def collect_seeds(fc: "FederatedConfig", dev_x, dev_y, key):
+    """Round-1 seed collection, batched over the device axis.
+
+    Device-side Mixup is one vmapped ``mixup_pairs`` draw plus a single
+    ``make_mixup_batch_pallas`` kernel call over all (D, n_seed)
+    mixes; server-side pairing is the vectorized sort-based
+    ``pair_symmetric`` over the whole (D*Ns,) upload set; the paired
+    inverse-Mixup samples are computed in one shot through the
+    ``mixup_pallas`` kernel (scalar ``mixup.inverse_mixup`` stays as the
+    reference oracle), and cycle augmentation beyond the pair set uses
+    the batched ``inverse_mixup_cycles`` contraction over segment/sort
+    label cycles.  Returns dict with uploaded samples, labels (hard or
+    soft), metadata, and the server-side training set."""
+    D = fc.num_devices
+    C = fc.num_classes
+    proto = fc.protocol
+    if proto in ("fl", "fd"):
+        return None
+    dev_x = jnp.asarray(dev_x)
+    dev_y = jnp.asarray(dev_y)
+    n_local = dev_x.shape[1]
+    feat = dev_x.shape[2:]
+    if proto == "fld" and fc.n_seed > n_local:
+        raise ValueError(
+            f"n_seed={fc.n_seed} seed samples per device cannot be drawn "
+            f"without replacement from n_local={n_local} local samples; "
+            "reduce FederatedConfig.n_seed or give each device more data")
+    if proto in ("mixfld", "mix2fld") and n_local < 2:
+        raise ValueError(
+            f"Mixup seed collection needs at least 2 local samples per "
+            f"device to draw cross-class pairs, got n_local={n_local}")
+    prep_stats.runs += 1
+    keys = jax.random.split(key, D)
+
+    if proto == "fld":  # raw samples (privacy leak, the baseline)
+        idx = jax.vmap(lambda k: jax.random.choice(
+            k, n_local, (fc.n_seed,), replace=False))(keys)
+        seeds_x = jax.vmap(lambda x, i: x[i])(dev_x, idx)
+        seeds_y = jnp.take_along_axis(dev_y, idx, axis=1)
+        seeds_x = seeds_x.reshape((D * fc.n_seed,) + feat)
+        return {"train_x": seeds_x, "train_y": seeds_y.reshape(-1),
+                "uploaded": seeds_x, "raw_pairs": None}
+
+    # ---- Mixup at devices (eq. 6), batched over the device axis and
+    # mixed through the mixup_pallas kernel (same treatment the
+    # server-side inverse gets below; jax.vmap(make_mixup_batch) is
+    # the parity oracle in tests/test_kernels.py) ----
+    idx_i, idx_j = jax.vmap(mixup_pairs, in_axes=(0, 0, None, None))(
+        keys, dev_y, fc.n_seed, C)                     # (D, Ns) each
+    mixed, softs, (minors, majors) = make_mixup_batch_pallas(
+        dev_x, dev_y, idx_i, idx_j, fc.lam, C)
+    gather = jax.vmap(lambda x, i: x[i])
+    raws = jnp.stack([gather(dev_x, idx_i), gather(dev_x, idx_j)],
+                     axis=2)                           # (D, Ns, 2, ...)
+    mixed = mixed.reshape((D * fc.n_seed,) + feat)
+    softs = softs.reshape(D * fc.n_seed, C)
+    minors = np.asarray(minors).reshape(-1)
+    majors = np.asarray(majors).reshape(-1)
+    raws = raws.reshape((D * fc.n_seed, 2) + feat)
+    dev_ids = np.repeat(np.arange(D), fc.n_seed)
+
+    if proto == "mixfld":
+        return {"train_x": mixed, "train_y": softs,
+                "uploaded": mixed, "raw_pairs": raws}
+
+    # ---- Mix2FLD: inverse-Mixup across devices (eq. 7, Prop. 1) ----
+    if abs(2.0 * fc.lam - 1.0) < 1e-6:
+        # lam = 0.5 makes the inverse ratios singular (Prop. 1);
+        # degrade to soft-label training instead of dividing by zero
+        return {"train_x": mixed, "train_y": softs,
+                "uploaded": mixed, "raw_pairs": raws}
+    pairs = pair_symmetric(minors, majors, dev_ids)    # (P, 2)
+    want_total = fc.n_inverse * D
+    mixed_flat = mixed.reshape(mixed.shape[0], -1)
+    inv_chunks, lab_chunks = [], []
+    cycle_hist: dict[int, int] = {}
+    if len(pairs):
+        # one batched kernel call per side: s1 = lam_hat*m_i +
+        # (1-lam_hat)*m_j and its mirror, for every pair at once
+        lam_hat = fc.lam / (2.0 * fc.lam - 1.0)
+        a = mixed_flat[jnp.asarray(pairs[:, 0])]
+        b = mixed_flat[jnp.asarray(pairs[:, 1])]
+        la = jnp.full((len(pairs),), lam_hat, jnp.float32)
+        s1 = mixup_pallas(a, b, la, 1.0 - la)
+        s2 = mixup_pallas(b, a, la, 1.0 - la)
+        inv_chunks.append(jnp.stack([s1, s2], axis=1).reshape(
+            2 * len(pairs), -1))
+        lab_chunks.append(np.stack([minors[pairs[:, 0]],
+                                    minors[pairs[:, 1]]], 1).reshape(-1))
+        cycle_hist[2] = len(pairs)
+    # augmentation beyond 2*P: longer label cycles draw *distinct*
+    # cyclic lam-orders (Prop. 1 rows differ with N), so extra draws
+    # are new samples rather than duplicates of the pair set
+    total = 2 * len(pairs)
+    length = 3
+    while total < want_total and length <= max(3, min(C, 6)):
+        cycles = find_label_cycles(minors, majors, dev_ids, length)
+        if len(cycles):
+            inv_chunks.append(inverse_mixup_cycles(
+                mixed_flat, cycles, fc.lam))
+            lab_chunks.append(minors[cycles].reshape(-1))
+            total += cycles.size
+            cycle_hist[length] = len(cycles)
+        length += 1
+    if not inv_chunks:  # degenerate pairing: fall back to soft labels
+        return {"train_x": mixed, "train_y": softs,
+                "uploaded": mixed, "raw_pairs": raws}
+    inv_x = jnp.concatenate(inv_chunks)
+    inv_y = np.concatenate(lab_chunks)
+    if inv_x.shape[0] < want_total:  # last resort: tile (explicit, old
+        reps = -(-want_total // inv_x.shape[0])  # behaviour duplicated
+        inv_x = jnp.tile(inv_x, (reps, 1))       # silently)
+        inv_y = np.tile(inv_y, reps)
+    inv_x = inv_x[:want_total].reshape((-1,) + feat)
+    inv_y = jnp.asarray(inv_y[:want_total], jnp.int32)
+    return {"train_x": inv_x, "train_y": inv_y,
+            "uploaded": mixed, "raw_pairs": raws,
+            "n_pairs": len(pairs), "cycle_hist": cycle_hist}

@@ -19,6 +19,7 @@ import itertools
 
 from ..channel import ChannelConfig
 from ..core.protocols import FederatedConfig
+from ..core.seed_prep import seed_fields_key
 
 # Traced per-config scalars, or host-absorbed before compilation.
 FED_SWEEPABLE = frozenset({
@@ -60,6 +61,20 @@ class SweepGrid:
     def point_name(self, g: int, label: dict | None = None) -> str:
         lab = label if label is not None else self.labels()[g]
         return "_".join(f"{k}{v}" for k, v in lab.items()) or f"pt{g}"
+
+    def seed_key(self, g: int) -> tuple:
+        """The seed-determining config fields of point ``g`` — points
+        sharing it (and the partition, fixed per sweep) share one host
+        seed-prep run (``core.seed_prep.seed_fields_key``)."""
+        return seed_fields_key(self.points[g][0])
+
+    def seed_groups(self) -> dict:
+        """{seed_key: [point indices]} — e.g. an eta-only or channel-only
+        grid is one group, so the runner collects seeds exactly once."""
+        groups: dict = {}
+        for g in range(self.size):
+            groups.setdefault(self.seed_key(g), []).append(g)
+        return groups
 
 
 def make_grid(base_fc: FederatedConfig,

@@ -42,9 +42,10 @@ except ImportError:
     from jax.experimental.shard_map import shard_map
 
 from ..channel import round_slot_plan
-from ..core.protocols import (FLD_FAMILY, FederatedTrainer, collect_seeds,
+from ..core.protocols import (FLD_FAMILY, FederatedTrainer,
                               gout_update_psum, make_grid_local_train,
                               make_grid_round_step, weighted_avg_psum)
+from ..core.seed_prep import SeedPrepMemo, prepare_seeds
 from ..launch.mesh import make_device_mesh
 from .axes import SweepGrid
 from .results import SweepResult
@@ -52,30 +53,42 @@ from .results import SweepResult
 
 def _pad_seed_sets(seed_sets, num_classes: int):
     """Stack ragged per-config train sets: (G, Nmax, ...) x, (G, Nmax[, C])
-    y, (G,) live sizes.  Mixed hard/soft grids (e.g. a ``lam`` axis that
-    crosses 0.5) promote hard labels to one-hot rows — the conversion
-    losses are identical for one-hot targets, so only mixed grids pay the
-    (ulp-level) formulation change."""
-    xs = [np.asarray(s["train_x"]) for s in seed_sets]
-    ys = [np.asarray(s["train_y"]) for s in seed_sets]
+    y, (G,) live sizes.  Memoized seed prep hands grid points that share a
+    seed key the *same* result object, so padding runs once per unique set
+    and the stacked consts are fancy-indexed copies of those rows.  Mixed
+    hard/soft grids (e.g. a ``lam`` axis that crosses 0.5) promote hard
+    labels to one-hot rows — the conversion losses are identical for
+    one-hot targets, so only mixed grids pay the (ulp-level) formulation
+    change."""
+    uniq_of: dict[int, int] = {}
+    uniq, inv = [], []
+    for s in seed_sets:
+        u = uniq_of.get(id(s))
+        if u is None:
+            u = uniq_of[id(s)] = len(uniq)
+            uniq.append(s)
+        inv.append(u)
+    xs = [np.asarray(s["train_x"]) for s in uniq]
+    ys = [np.asarray(s["train_y"]) for s in uniq]
     n = np.asarray([x.shape[0] for x in xs], np.int32)
     n_max = int(n.max())
     feat = xs[0].shape[1:]
     px = np.zeros((len(xs), n_max) + feat, np.float32)
-    for g, x in enumerate(xs):
-        px[g, :x.shape[0]] = x
+    for u, x in enumerate(xs):
+        px[u, :x.shape[0]] = x
     hard = [y.ndim == 1 for y in ys]
     if all(hard):
         py = np.zeros((len(ys), n_max), np.int32)
-        for g, y in enumerate(ys):
-            py[g, :y.shape[0]] = y
+        for u, y in enumerate(ys):
+            py[u, :y.shape[0]] = y
     else:
         py = np.zeros((len(ys), n_max, num_classes), np.float32)
-        for g, y in enumerate(ys):
+        for u, y in enumerate(ys):
             if y.ndim == 1:
                 y = np.eye(num_classes, dtype=np.float32)[y]
-            py[g, :y.shape[0]] = y
-    return px, py, n
+            py[u, :y.shape[0]] = y
+    inv = np.asarray(inv)
+    return px[inv], py[inv], n[inv]
 
 
 class SweepRunner:
@@ -96,7 +109,11 @@ class SweepRunner:
         dev_x = jnp.asarray(dev_x)
         dev_y = jnp.asarray(dev_y)
 
-        # ---- host prep, per config in the loop path's exact key order ----
+        # ---- host prep, per config in the loop path's exact key order;
+        # seed prep is memoized on the seed-determining content (an
+        # eta-only or channel-only grid collects seeds exactly once and
+        # every point of a seed group shares one result object) ----
+        memo = SeedPrepMemo()
         run_keys, inits, conv_keys, seed_sets = [], [], [], []
         plans = {"p_up": [], "p_dn": [], "up1": [], "up": [], "dn": []}
         k_max = max(fc.server_iters for fc, _ in grid.points)
@@ -108,8 +125,9 @@ class SweepRunner:
             n_mod = sum(p.size for p in jax.tree.leaves(params))
             if self.proto in FLD_FAMILY:
                 kr1 = jax.random.fold_in(key, 1)
-                seed_sets.append(collect_seeds(
-                    fc, dev_x, dev_y, jax.random.fold_in(kr1, 2)))
+                seed_sets.append(prepare_seeds(
+                    fc, dev_x, dev_y, jax.random.fold_in(kr1, 2),
+                    memo=memo))
                 ck = np.zeros((R, k_max, 2), np.uint32)
                 for p in range(1, R + 1):
                     base = jax.random.fold_in(jax.random.fold_in(key, p), 4)
@@ -124,6 +142,14 @@ class SweepRunner:
             plans["up1"].append(plan["up_slots_first"])
             plans["up"].append(plan["up_slots"])
             plans["dn"].append(plan["dn_slots"])
+
+        self.seed_memo = memo
+        self.seed_prep_stats = {
+            "groups": (len(grid.seed_groups())
+                       if self.proto in FLD_FAMILY else 0),
+            "prep_runs": memo.misses,
+            "memo_hits": memo.hits,
+        }
 
         g_params = jax.tree.map(lambda *ls: jnp.stack(ls), *inits)
         n_params = sum(p[0].size for p in jax.tree.leaves(g_params))

@@ -1,0 +1,175 @@
+"""Segment/sort cycle search vs the DFS reference oracle.
+
+The production path (``find_label_cycles``, method="auto"/"segment") is
+the vectorized segment/sort formulation — sort uploads by minor label,
+rank-align majors to minors into an injective successor map, extract
+disjoint fixed-length windows from the pointer trails.  The budgeted
+greedy DFS stays as the small-n reference oracle; these tests pin the
+parity contract from both sides:
+
+* small inputs — same validity constraints, and at-least-oracle yield
+  (exactly the known maximum on planted graphs);
+* budget-exhausting adversarial inputs at n >= 10^4 — the DFS degrades
+  to (near) zero, the segment search keeps (most of) the planted yield.
+"""
+import numpy as np
+import pytest
+
+from repro.core.mixup import (find_label_cycles, find_label_cycles_dfs,
+                              find_label_cycles_segment)
+
+
+def _assert_valid(rows, minor, major, dev, length):
+    """The shared cycle contract: disjoint rows, cyclic label chain,
+    adjacent members from different devices, no degenerate members."""
+    flat = rows.reshape(-1)
+    assert len(set(flat.tolist())) == flat.size
+    for row in rows:
+        for k in range(length):
+            nxt = row[(k + 1) % length]
+            assert major[row[k]] == minor[nxt]
+            assert dev[row[k]] != dev[nxt]
+        assert not np.any(minor[row] == major[row])
+
+
+def _random_graph(seed, n=200, C=10, D=20):
+    rng = np.random.default_rng(seed)
+    minor = rng.integers(0, C, n)
+    major = (minor + rng.integers(1, C, n)) % C
+    dev = rng.integers(0, D, n)
+    return minor, major, dev
+
+
+# ---------------------------------------------------------------------------
+# Small-n parity vs the DFS oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+@pytest.mark.parametrize("length", [3, 4, 5])
+def test_small_n_yield_matches_or_beats_dfs_oracle(seed, length):
+    """On small inputs the default path must never yield fewer samples
+    than the greedy DFS (the auto dispatch keeps the better packing), and
+    every row must satisfy the oracle's validity constraints."""
+    minor, major, dev = _random_graph(seed)
+    ref = find_label_cycles_dfs(minor, major, dev, length)
+    got = find_label_cycles(minor, major, dev, length)
+    _assert_valid(got, minor, major, dev, length)
+    assert len(got) >= len(ref)
+
+
+@pytest.mark.parametrize("length", [3, 4, 5])
+def test_planted_disjoint_cycles_found_exactly(length):
+    """Planted disjoint label cycles are the full packing; both searches
+    must find exactly all of them (exact yield parity)."""
+    reps = 40
+    # rep r uses labels r*length .. r*length+length-1 in a cycle, so
+    # cycles cannot straddle reps: the max packing is exactly `reps`
+    minor = np.concatenate([np.arange(length) + r * length
+                            for r in range(reps)])
+    major = np.concatenate([(np.arange(length) + 1) % length + r * length
+                            for r in range(reps)])
+    dev = np.tile(np.arange(length), reps)
+    ref = find_label_cycles_dfs(minor, major, dev, length)
+    got = find_label_cycles(minor, major, dev, length)
+    seg = find_label_cycles_segment(minor, major, dev, length)
+    assert len(ref) == len(got) == len(seg) == reps
+    _assert_valid(got, minor, major, dev, length)
+    _assert_valid(seg, minor, major, dev, length)
+
+
+def test_dispatch_methods():
+    minor, major, dev = _random_graph(7)
+    dfs = find_label_cycles(minor, major, dev, 3, method="dfs")
+    np.testing.assert_array_equal(
+        dfs, find_label_cycles_dfs(minor, major, dev, 3))
+    seg = find_label_cycles(minor, major, dev, 3, method="segment")
+    _assert_valid(seg, minor, major, dev, 3)
+    with pytest.raises(ValueError, match="method"):
+        find_label_cycles(minor, major, dev, 3, method="bogus")
+
+
+def test_segment_empty_and_degenerate_inputs():
+    empty = find_label_cycles_segment(np.array([], np.int64),
+                                      np.array([], np.int64),
+                                      np.array([], np.int64), 3)
+    assert empty.shape == (0, 3)
+    # single-class uploads: no usable edge at any length
+    same = np.full(50, 3)
+    for length in (2, 3, 4):
+        got = find_label_cycles_segment(same, same, np.arange(50) % 5,
+                                        length)
+        assert got.shape == (0, length)
+
+
+# ---------------------------------------------------------------------------
+# Degenerate (minor == major) uploads must never sit mid-cycle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["dfs", "segment", "auto"])
+def test_degenerate_upload_excluded_mid_cycle(method):
+    """Regression: a minor==major upload used to be skipped only as a DFS
+    *start* — it could still sit mid-cycle and produce single-class
+    "inverse" samples.  The only length-3 closure here routes through the
+    degenerate edge 1->1, so the search must return nothing."""
+    minor = np.array([0, 1, 1])
+    major = np.array([1, 1, 0])  # e0: 0->1, e1: 1->1 (degenerate), e2: 1->0
+    dev = np.array([0, 1, 2])
+    got = find_label_cycles(minor, major, dev, 3, method=method)
+    assert len(got) == 0
+
+
+@pytest.mark.parametrize("method", ["dfs", "segment"])
+def test_degenerate_uploads_never_in_membership_at_scale(method):
+    minor, major, dev = _random_graph(11, n=400)
+    poison = np.random.default_rng(1).choice(400, 60, replace=False)
+    minor = minor.copy()
+    minor[poison] = major[poison]  # inject degenerate uploads
+    for length in (3, 4):
+        rows = find_label_cycles(minor, major, dev, length, method=method)
+        assert not np.isin(rows.reshape(-1), poison).any()
+        _assert_valid(rows, minor, major, dev, length)
+
+
+# ---------------------------------------------------------------------------
+# Budget-exhausting adversarial graph at n >= 10^4
+# ---------------------------------------------------------------------------
+
+def _adversarial_graph(n_ladder=9000, n_planted=500, seed=0):
+    """Ladder edges l -> l+1 can never close a cycle (no wrap edges), but
+    they dominate the index order and the branching, so the greedy DFS
+    exhausts its step budget before reaching the planted 3-cycles at the
+    end of the index space.  Only planted edges (label jumps 0->4->8->0)
+    can appear in any 3-cycle, so the max packing is exactly
+    ``n_planted``."""
+    rng = np.random.default_rng(seed)
+    lm = rng.integers(0, 11, n_ladder)
+    ladder = np.stack([lm, lm + 1], 1)
+    planted = np.tile(np.array([[0, 4], [4, 8], [8, 0]]), (n_planted, 1))
+    edges = np.concatenate([ladder, planted])
+    dev = np.concatenate([rng.integers(0, 50, n_ladder),
+                          np.tile([0, 1, 2], n_planted)])
+    return edges[:, 0], edges[:, 1], dev, n_planted
+
+
+def test_adversarial_graph_segment_beats_budgeted_dfs():
+    """The acceptance contract of the tentpole: at n >= 10^4 on a graph
+    built to exhaust the DFS step budget, the segment/sort search keeps
+    the planted yield while the DFS degrades toward zero."""
+    minor, major, dev, n_planted = _adversarial_graph()
+    assert minor.shape[0] >= 10_000
+    ref = find_label_cycles_dfs(minor, major, dev, 3)  # default budget
+    got = find_label_cycles(minor, major, dev, 3)      # auto -> segment
+    _assert_valid(got, minor, major, dev, 3)
+    assert len(got) >= len(ref)
+    assert len(got) >= n_planted // 2  # most of the planted packing
+    assert len(ref) < n_planted // 10  # the DFS really did degrade
+
+
+def test_adversarial_graph_segment_is_fast():
+    """No step budget does not mean unbounded time: the sweep loop is
+    O(n log n) per matching and must stay interactive at 10^4+ uploads."""
+    import time
+    minor, major, dev, _ = _adversarial_graph()
+    t0 = time.perf_counter()
+    find_label_cycles_segment(minor, major, dev, 3)
+    assert time.perf_counter() - t0 < 30

@@ -182,6 +182,78 @@ def test_find_label_cycles_bounded_on_open_chains():
     assert len(cycles) == 0
 
 
+def _greedy_pairs_oracle(minor, major, dev):
+    """Plain greedy matcher: forwards in index order, first unused
+    cross-device symmetric reverse in index order.  O(n^2) reference for
+    the maximality contract of the sort-based matcher."""
+    n = minor.shape[0]
+    used = np.zeros(n, bool)
+    out = []
+    for a in range(n):
+        if used[a] or minor[a] >= major[a]:
+            continue
+        for b in range(n):
+            if (not used[b] and minor[b] > major[b]
+                    and minor[a] == major[b] and major[a] == minor[b]
+                    and dev[a] != dev[b]):
+                used[a] = used[b] = True
+                out.append((a, b))
+                break
+    return out
+
+
+def test_pair_symmetric_duplicate_keys_rank_misalignment():
+    """Adversarial tie case: one unordered key (0, 1) with device orders
+    chosen so the bulk rank alignment hits a same-device pair mid-group;
+    the greedy repair pass must recover what is recoverable and the yield
+    must match the plain greedy oracle."""
+    # forwards (0 -> 1) on devices [0, 1, 2]; reverses (1 -> 0) on
+    # devices [2, 1, 0]: device-ascending vs device-descending sorting
+    # aligns rank 1 to the same device (1 vs 1) and drops it
+    minor = np.array([0, 0, 0, 1, 1, 1])
+    major = np.array([1, 1, 1, 0, 0, 0])
+    dev = np.array([0, 1, 2, 2, 1, 0])
+    pairs = pair_symmetric(minor, major, dev)
+    assert np.all(minor[pairs[:, 0]] == major[pairs[:, 1]])
+    assert np.all(dev[pairs[:, 0]] != dev[pairs[:, 1]])
+    assert len(pairs) >= len(_greedy_pairs_oracle(minor, major, dev))
+    assert len(pairs) == 3  # the full matching exists and must be found
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_pair_symmetric_same_device_heavy_uses_repair(seed):
+    """Two devices with heavily skewed upload counts force many
+    same-device bulk alignments — the greedy-repair path must still
+    deliver at least the plain greedy oracle's yield."""
+    rng = np.random.default_rng(seed)
+    n, C = 120, 4
+    minor = rng.integers(0, C, n)
+    major = (minor + rng.integers(1, C, n)) % C
+    # 90% of uploads on device 0, the rest on device 1
+    dev = np.where(rng.random(n) < 0.9, 0, 1)
+    pairs = pair_symmetric(minor, major, dev)
+    assert np.all(minor[pairs[:, 0]] == major[pairs[:, 1]])
+    assert np.all(major[pairs[:, 0]] == minor[pairs[:, 1]])
+    assert np.all(dev[pairs[:, 0]] != dev[pairs[:, 1]])
+    flat = pairs.reshape(-1)
+    assert len(set(flat.tolist())) == flat.size
+    assert len(pairs) >= len(_greedy_pairs_oracle(minor, major, dev))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5])
+def test_pair_symmetric_yield_matches_greedy_oracle(seed):
+    """Maximality contract at the trainer's upload-set scale: the
+    sort-based matcher never yields fewer pairs than the plain greedy
+    matcher it replaced."""
+    rng = np.random.default_rng(seed)
+    n, C, D = 300, 6, 8
+    minor = rng.integers(0, C, n)
+    major = (minor + rng.integers(1, C, n)) % C
+    dev = rng.integers(0, D, n)
+    pairs = pair_symmetric(minor, major, dev)
+    assert len(pairs) >= len(_greedy_pairs_oracle(minor, major, dev))
+
+
 def test_pair_symmetric_empty_and_degenerate():
     empty = pair_symmetric(np.array([]), np.array([]), np.array([]))
     assert empty.shape == (0, 2)
@@ -330,23 +402,27 @@ def test_inverse_mixup_cycles_odd_length_survives_lam_half():
     np.testing.assert_allclose(np.asarray(out), raw, atol=1e-3)
 
 
-def test_find_label_cycles_budget_exhaustion_returns_partial():
-    """A tiny step budget must terminate with whatever was found so far
-    (graceful degradation), never hang or raise."""
+def test_find_label_cycles_dfs_budget_exhaustion_returns_partial():
+    """A tiny step budget must terminate the DFS reference with whatever
+    was found so far (graceful degradation), never hang or raise.  The
+    default segment/sort path has no budget — the production-path
+    guarantee (full yield where the DFS degrades) is covered by
+    tests/test_cycle_search.py."""
+    from repro.core.mixup import find_label_cycles_dfs
     rng = np.random.default_rng(2)
     n, C, D = 400, 10, 40
     minor = rng.integers(0, C, n)
     major = (minor + rng.integers(1, C, n)) % C
     dev = rng.integers(0, D, n)
-    full = find_label_cycles(minor, major, dev, 3)
+    full = find_label_cycles_dfs(minor, major, dev, 3)
     assert len(full) > 1  # solvable graph
-    tiny = find_label_cycles(minor, major, dev, 3, max_steps=4)
+    tiny = find_label_cycles_dfs(minor, major, dev, 3, max_steps=4)
     assert len(tiny) < len(full)  # budget cut the search short
     assert tiny.shape[1:] == (3,)
     for row in tiny:  # whatever was found is still valid
         for k in range(3):
             assert major[row[k]] == minor[row[(k + 1) % 3]]
-    zero = find_label_cycles(minor, major, dev, 3, max_steps=0)
+    zero = find_label_cycles_dfs(minor, major, dev, 3, max_steps=0)
     assert len(zero) == 0
 
 

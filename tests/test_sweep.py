@@ -146,6 +146,84 @@ def test_sweep_warm_rerun_is_deterministic(data):
 
 
 # ---------------------------------------------------------------------------
+# Memoized host seed prep: grids that do not vary seed-determining fields
+# collect seeds exactly once (counter-instrumented) and still reproduce
+# the per-point loop
+# ---------------------------------------------------------------------------
+
+def test_eta_only_grid_preps_seeds_exactly_once(data):
+    """eta does not determine the round-1 seed sets, so a G=3 eta grid is
+    one seed group: host prep must run once, the other two points must be
+    memo hits, and the sweep must still match the per-point loop
+    histories within 1e-6."""
+    from repro.core.seed_prep import prep_stats
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(), CH, eta=(0.01, 0.02, 0.03))
+    assert len(grid.seed_groups()) == 1
+    prep_stats.reset()
+    runner = SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
+    assert prep_stats.runs == 1  # host prep ran exactly once for G=3
+    assert runner.seed_prep_stats == {
+        "groups": 1, "prep_runs": 1, "memo_hits": 2}
+    res = runner.run()
+    _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y, tx, ty))
+
+
+def test_seed_axis_grid_preps_once_per_group(data):
+    """A (n_seed x eta) grid has one seed group per n_seed value; the
+    eta replicas inside each group are memo hits sharing one prep result
+    object."""
+    from repro.core.seed_prep import prep_stats
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(), CH, n_seed=(4, 6), eta=(0.01, 0.02))
+    groups = grid.seed_groups()
+    assert len(groups) == 2 and all(len(g) == 2 for g in groups.values())
+    prep_stats.reset()
+    runner = SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
+    assert prep_stats.runs == 2
+    assert runner.seed_prep_stats == {
+        "groups": 2, "prep_runs": 2, "memo_hits": 2}
+    # C-order points: (ns4, eta.01), (ns4, eta.02), (ns6, ...), (ns6, ...)
+    assert runner.seed_sets[0] is runner.seed_sets[1]
+    assert runner.seed_sets[2] is runner.seed_sets[3]
+    assert runner.seed_sets[0] is not runner.seed_sets[2]
+    res = runner.run()
+    _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y, tx, ty))
+
+
+def test_channel_only_grid_preps_seeds_exactly_once(data):
+    """Channel fields never touch the seed sets: a p_up_dbm axis on an
+    FLD-family protocol is one seed group."""
+    from repro.core.seed_prep import prep_stats
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(protocol="fld"), CH, p_up_dbm=(23.0, 40.0))
+    assert len(grid.seed_groups()) == 1
+    prep_stats.reset()
+    runner = SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
+    assert prep_stats.runs == 1
+    res = runner.run()
+    _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y, tx, ty))
+
+
+def test_memoized_points_share_padded_seed_rows(data):
+    """Points of one seed group share one prep result object, and the
+    stacked (G, Nmax, ...) padded consts carry bitwise-identical rows for
+    them (padding runs once per unique set)."""
+    import numpy as np
+    from repro.sweep.engine import _pad_seed_sets
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(), CH, eta=(0.01, 0.02))
+    runner = SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
+    # the memo handed both points the same object; no quadratic reprep
+    assert runner.seed_memo.hits == 1 and runner.seed_memo.misses == 1
+    assert runner.seed_sets[0] is runner.seed_sets[1]
+    px, py, n = _pad_seed_sets(runner.seed_sets, 10)
+    np.testing.assert_array_equal(px[0], px[1])
+    np.testing.assert_array_equal(py[0], py[1])
+    assert n[0] == n[1]
+
+
+# ---------------------------------------------------------------------------
 # Grid construction & result frames
 # ---------------------------------------------------------------------------
 
