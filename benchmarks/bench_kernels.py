@@ -4,9 +4,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.kernels import ops, ref
+from repro.kernels import ref
 from repro.kernels.distill_loss import distill_loss_pallas
 from repro.kernels.mixup_kernel import mixup_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas

@@ -87,6 +87,10 @@ def run_seed_prep(G=9):
         "loop_prep_runs": loop_runs,
         "memo_prep_runs": prep_stats.runs,
         "memo_hits": memo.hits,
+        # the regression gate (benchmarks/check_regression.py) compares
+        # this against the committed baseline: an eta-only grid must
+        # keep serving G-1 of G points from the memo
+        "hit_rate": round(memo.hits / G, 4),
     }
     save_result("seed_prep", out)
     print(f"seed prep at G={G} (eta-only): loop={loop_s:.3f}s "
@@ -128,6 +132,7 @@ def run(local_iters=2, max_rounds=2, quick=False):
         "grid_points": grid.size,
         "rounds": max_rounds,
         "local_iters": local_iters,
+        "quick": bool(quick),
         "loop_s": round(loop_s, 3),
         "sweep_cold_s": round(cold_s, 3),
         "sweep_warm_s": round(warm_s, 3),

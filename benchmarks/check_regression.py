@@ -1,0 +1,175 @@
+"""CI benchmark-regression gate for the compiled sweep path.
+
+Compares freshly produced ``benchmarks/results/*.json`` (the ``--quick``
+sweep/seed-prep benchmarks the CI ``sweeps`` job just ran) against the
+*committed* baselines of the same files, with per-metric tolerances —
+so a compiled-path regression (sweep-vs-loop speedup collapse, seed-prep
+memo stops hitting, sweep numerics drifting off the loop path) fails the
+PR instead of hiding in an artifact.
+
+Baselines come from ``git show <ref>:<file>`` by default (the checkout's
+committed state, which the benchmark run just overwrote in the working
+tree), or from a directory snapshot via ``--baseline-dir``.
+
+Gate modes:
+
+* ``min_ratio`` — fresh >= ratio * baseline (speedups, hit rates; ratio
+  below 1 absorbs machine-to-machine noise, the speedup itself is a
+  wall-clock *ratio* so host speed largely cancels);
+* ``max_value`` — fresh <= absolute limit (numeric equivalence drift);
+* ``not_above_baseline`` — fresh <= baseline (counters that must never
+  grow, e.g. memoized prep runs).
+
+Regime guard: gates only fire when the ``match`` keys (grid geometry,
+quick flag) agree between fresh and baseline — comparing a quick run
+against a full-run baseline would gate on noise.  A skipped gate prints
+a warning; refresh the committed baselines when the regime changes.
+
+Usage::
+
+    python -m benchmarks.check_regression            # git HEAD baselines
+    python -m benchmarks.check_regression --baseline-dir /tmp/base
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS = os.path.join(ROOT, "benchmarks", "results")
+
+#: (file, metric, mode, tolerance) — see module docstring for modes.
+GATES = [
+    # compiled sweep vs per-point loop: the engine's headline number
+    {"file": "sweep_engine", "metric": "speedup_warm",
+     "mode": "min_ratio", "ratio": 0.7,
+     "match": ("grid_points", "rounds", "local_iters", "quick")},
+    {"file": "sweep_engine", "metric": "max_abs_acc_dev_vs_loop",
+     "mode": "max_value", "limit": 1e-6, "match": ()},
+    # memoized host seed prep: speed and hit rate must hold
+    {"file": "seed_prep", "metric": "speedup",
+     "mode": "min_ratio", "ratio": 0.7, "match": ("grid_points", "axis")},
+    # 0.99, not 1.0: the recorded rate is rounded to 4 decimals; a real
+    # regression moves it by >= 1/G (11% at G=9), far beyond rounding
+    {"file": "seed_prep", "metric": "hit_rate",
+     "mode": "min_ratio", "ratio": 0.99, "match": ("grid_points", "axis")},
+    {"file": "seed_prep", "metric": "memo_prep_runs",
+     "mode": "not_above_baseline", "match": ("grid_points", "axis")},
+]
+
+
+def load_fresh(name: str, results_dir: str):
+    path = os.path.join(results_dir, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def load_baseline(name: str, baseline_dir: str | None, ref: str):
+    if baseline_dir:
+        return load_fresh(name, baseline_dir)
+    rel = f"benchmarks/results/{name}.json"
+    try:
+        out = subprocess.run(
+            ["git", "show", f"{ref}:{rel}"], cwd=ROOT, check=True,
+            capture_output=True, text=True).stdout
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return None
+    return json.loads(out)
+
+
+def derive(payload: dict | None) -> dict | None:
+    """Fill metrics older baselines predate (hit_rate) from raw fields."""
+    if payload is None:
+        return None
+    if "hit_rate" not in payload and "memo_hits" in payload \
+            and "grid_points" in payload:
+        payload = dict(payload)
+        payload["hit_rate"] = payload["memo_hits"] / payload["grid_points"]
+    return payload
+
+
+def check_gate(gate: dict, fresh: dict, base: dict) -> tuple[bool, str]:
+    """Returns (ok, message)."""
+    metric = gate["metric"]
+    fv = fresh.get(metric)
+    mode = gate["mode"]
+    if mode == "max_value":
+        ok = fv is not None and fv <= gate["limit"]
+        return ok, f"{metric}={fv!r} (limit {gate['limit']:g})"
+    bv = base.get(metric)
+    if fv is None or bv is None:
+        return False, f"{metric} missing (fresh={fv!r}, baseline={bv!r})"
+    if mode == "min_ratio":
+        floor = gate["ratio"] * bv
+        return fv >= floor, (f"{metric}={fv:g} vs baseline {bv:g} "
+                             f"(floor {floor:g} = {gate['ratio']}x)")
+    if mode == "not_above_baseline":
+        return fv <= bv, f"{metric}={fv!r} vs baseline {bv!r}"
+    raise ValueError(f"unknown gate mode {mode!r}")
+
+
+def run_checks(results_dir: str = RESULTS, baseline_dir: str | None = None,
+               ref: str = "HEAD") -> int:
+    failures = 0
+    cache: dict = {}
+    for gate in GATES:
+        name = gate["file"]
+        if name not in cache:
+            cache[name] = (derive(load_fresh(name, results_dir)),
+                           derive(load_baseline(name, baseline_dir, ref)))
+        fresh, base = cache[name]
+        tag = f"{name}.{gate['metric']}"
+        if fresh is None:
+            print(f"FAIL  {tag}: no fresh result in {results_dir} "
+                  f"(did the benchmark step run?)")
+            failures += 1
+            continue
+        if gate["mode"] == "max_value":
+            # absolute gates need no baseline — never skippable
+            ok, msg = check_gate(gate, fresh, base or {})
+            print(f"{'ok   ' if ok else 'FAIL '} {tag}: {msg}")
+            failures += 0 if ok else 1
+            continue
+        if base is None:
+            print(f"skip  {tag}: no committed baseline (first run? "
+                  f"commit benchmarks/results/{name}.json)")
+            continue
+        mismatch = [k for k in gate.get("match", ())
+                    if k in base and fresh.get(k) != base.get(k)]
+        if mismatch:
+            print(f"skip  {tag}: regime mismatch on {mismatch} "
+                  f"(fresh {[fresh.get(k) for k in mismatch]} vs baseline "
+                  f"{[base.get(k) for k in mismatch]}) — refresh the "
+                  f"committed baseline")
+            continue
+        ok, msg = check_gate(gate, fresh, base)
+        print(f"{'ok   ' if ok else 'FAIL '} {tag}: {msg}")
+        failures += 0 if ok else 1
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results-dir", default=RESULTS,
+                    help="fresh results to check (default: "
+                         "benchmarks/results)")
+    ap.add_argument("--baseline-dir", default=None,
+                    help="baseline snapshot dir (default: git show <ref>)")
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref for committed baselines (default: HEAD)")
+    args = ap.parse_args(argv)
+    failures = run_checks(args.results_dir, args.baseline_dir, args.ref)
+    if failures:
+        print(f"\n{failures} benchmark-regression gate(s) failed")
+        return 1
+    print("\nall benchmark-regression gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,6 +6,7 @@ import os
 import time
 
 import jax
+import numpy as np
 
 RESULTS = os.path.join(os.path.dirname(__file__), "results")
 
@@ -45,3 +46,15 @@ def protocol_dataset(num_devices: int = 10, per_device: int = 500,
         dev_x, dev_y = partition_noniid(x[:ntr], y[:ntr], num_devices,
                                         seed=seed)
     return dev_x, dev_y, jnp.asarray(x[ntr:]), jnp.asarray(y[ntr:])
+
+
+def sample_pool(n_train: int, n_test: int = 1000, seed: int = 0):
+    """Flat (pool_x, pool_y, test_x, test_y) for partitioned sweep grids
+    (each grid point's PartitionSpec splits the pool itself)."""
+    import jax.numpy as jnp
+
+    from repro.data import synthetic_images
+
+    x, y = synthetic_images(jax.random.PRNGKey(seed), n_train + n_test)
+    return (np.asarray(x[:n_train]), np.asarray(y[:n_train]),
+            jnp.asarray(x[n_train:]), jnp.asarray(y[n_train:]))

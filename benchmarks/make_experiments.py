@@ -71,6 +71,43 @@ def protocol_tables():
             f"| {dist}/{chan} | {proto} | {v['acc'][-1]:.3f} "
             f"| {v['uplink_ok']} | {v['converged_round']} "
             f"| {v['cum_time_s'][-1]:.1f} |")
+    first = next(iter(res.values()))
+    if "programs" in first:
+        lines.append("")
+        lines.append(
+            f"All cells above come from ONE heterogeneous sweep call "
+            f"(protocol x partition x channel grid; "
+            f"{first['programs']} compiled programs — one per distinct "
+            f"protocol — {first['wall_s']}s total).")
+    return "\n".join(lines)
+
+
+def protocol_table1():
+    """Table I: cross-protocol comparison (final accuracy per data split
+    and channel regime, convergence round under the asymmetric channel),
+    pivoted from the same heterogeneous-sweep results as Fig. 2."""
+    res = _load("protocols_fig2")
+    if not res:
+        return "(protocol run pending)"
+    protos, cells = [], {}
+    for k, v in sorted(res.items()):
+        proto, dist, chan = k.split("_")
+        if proto not in protos:
+            protos.append(proto)
+        cells[(proto, dist, chan)] = v
+    cols = [("iid", "asym"), ("iid", "sym"), ("noniid", "asym"),
+            ("noniid", "sym")]
+    lines = ["| protocol | " + " | ".join(f"{d}/{c} acc" for d, c in cols)
+             + " | converged (noniid/asym) |",
+             "|---" * (len(cols) + 2) + "|"]
+    for p in protos:
+        row = [f"| {p} "]
+        for d, c in cols:
+            v = cells.get((p, d, c))
+            row.append(f"| {v['acc'][-1]:.3f} " if v else "| — ")
+        v = cells.get((p, "noniid", "asym"))
+        row.append(f"| {v['converged_round'] if v else '—'} |")
+        lines.append("".join(row))
     return "\n".join(lines)
 
 
@@ -147,6 +184,10 @@ def main():
 ### Fig. 2 (protocol comparison; reduced budgets, relative claims)
 
 {protocol_tables()}
+
+### Table I (cross-protocol pivot of the same heterogeneous sweep)
+
+{protocol_table1()}
 
 ### Tables II/III (sample privacy vs lambda, synthetic images)
 

@@ -109,15 +109,20 @@ def make_local_train(apply_fn, num_classes: int, local_iters: int,
     ``eta``/``beta`` are *arguments* rather than baked-in constants so the
     sweep engine can vmap them over a config grid; passing the config's
     Python floats yields the same lowering as closing over them.
-    Returns ``local_train(params, x, y, key, gout, use_kd, eta, beta) ->
-    (params, favg (C, C), cnt (C,), mean loss)``.
+    ``n_loc`` bounds the batch draws — the loop path passes the static
+    ``x.shape[0]``, the sweep engine a traced per-config scalar (ragged
+    partitions are zero-padded to the grid maximum, and a traced bound
+    equal in value to the static one draws identical indices, so pad rows
+    are never sampled — same contract as the conversion's ``n_train``).
+    Returns ``local_train(params, x, y, key, gout, use_kd, eta, beta,
+    n_loc) -> (params, favg (C, C), cnt (C,), mean loss)``.
     """
     C = num_classes
 
-    def local_train(params, x, y, key, gout, use_kd, eta, beta):
+    def local_train(params, x, y, key, gout, use_kd, eta, beta, n_loc):
         def step(carry, k):
             p, out_sum, cnt = carry
-            idx = jax.random.randint(k, (local_batch,), 0, x.shape[0])
+            idx = jax.random.randint(k, (local_batch,), 0, n_loc)
             xb, yb = x[idx], y[idx]
 
             def loss_fn(p_):
@@ -144,15 +149,20 @@ def make_local_train(apply_fn, num_classes: int, local_iters: int,
 
 
 def make_grid_local_train(apply_fn, num_classes: int, local_iters: int,
-                          local_batch: int):
+                          local_batch: int, per_config_data: bool = False):
     """:func:`make_local_train` double-vmapped for a config grid:
-    operates on (G, D, ...) device state with shared (D, ...) data and
-    per-config (G,) eta/beta.  The sweep engine wraps this in shard_map
-    for ``shard_devices`` grids; keeping the vmap chain here means the
+    operates on (G, D, ...) device state with shared (D, ...) data — or,
+    with ``per_config_data``, per-config (G, D, ...) data (heterogeneous
+    partition grids; ragged ``n_local`` zero-padded to the grid maximum
+    and masked by the per-config ``n_loc`` draw bound) — and per-config
+    (G,) eta/beta/n_loc.  The sweep engine wraps this in shard_map for
+    ``shard_devices`` grids; keeping the vmap chain here means the
     in_axes stay in one place."""
     base = make_local_train(apply_fn, num_classes, local_iters, local_batch)
-    per_dev = jax.vmap(base, in_axes=(0, 0, 0, 0, 0, None, None, None))
-    return jax.vmap(per_dev, in_axes=(0, None, None, 0, 0, None, 0, 0))
+    per_dev = jax.vmap(base, in_axes=(0, 0, 0, 0, 0, None, None, None, None))
+    dx = 0 if per_config_data else None
+    return jax.vmap(per_dev,
+                    in_axes=(0, dx, dx, 0, 0, None, 0, 0, 0))
 
 
 def weighted_avg(stacked, weights):
@@ -214,7 +224,11 @@ class FederatedTrainer:
                                 fc.local_iters, fc.local_batch)
 
         def local_train(params, x, y, key, gout, use_kd):
-            return base(params, x, y, key, gout, use_kd, fc.eta, fc.beta)
+            # x is one device's (n_local, ...) shard under the vmap, so
+            # the static shape is the exact batch-draw bound (the sweep
+            # engine passes the same value as a traced per-config scalar)
+            return base(params, x, y, key, gout, use_kd, fc.eta, fc.beta,
+                        x.shape[0])
 
         vmapped = jax.vmap(local_train, in_axes=(0, 0, 0, 0, 0, None))
 
@@ -396,6 +410,7 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
                          local_batch: int, server_batch: int,
                          t_max_slots: int, tau_s: float,
                          dev_x, dev_y, test_x, test_y, consts: dict,
+                         per_config_data: bool = False,
                          local_train_fn: Optional[Callable] = None,
                          weighted_avg_fn: Optional[Callable] = None,
                          gout_update_fn: Optional[Callable] = None):
@@ -415,10 +430,18 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
                             eq. 5 conversion, as in the loop path)
     ``s_iters``   (G,)      conversion iterations (masked to the grid max)
     ``eps``       (G,)      convergence threshold
+    ``n_local``   (G,)      per-config |S_d| — the local batch-draw bound
+                            and the aggregation weight (heterogeneous
+                            partition grids pad ragged partitions to the
+                            grid maximum; the traced bound masks the pad)
     ``n_train``   (G,)      live prefix of the padded seed sets
     ``seeds_x``   (G, N, ...), ``seeds_y`` (G, N[, C])  padded seed sets
     ``p_up, p_dn`` (G,)     per-slot link success probabilities
     ======================  ======================================
+
+    ``dev_x``/``dev_y`` are shared (D, n, ...) data by default; with
+    ``per_config_data`` they carry a leading grid axis (G, D, n, ...) —
+    one (padded) partition per config.
 
     The scan inputs ``xs`` per round: ``p`` (scalar, 1-based round),
     ``up_slots``/``dn_slots`` (G,) decode-slot requirements, and
@@ -437,11 +460,11 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
     """
     proto = protocol
     D, C = num_devices, num_classes
-    n_local = dev_x.shape[1]
 
     if local_train_fn is None:
         local_train_fn = make_grid_local_train(model_apply, C, local_iters,
-                                               local_batch)
+                                               local_batch,
+                                               per_config_data)
     if weighted_avg_fn is None:
         weighted_avg_fn = jax.vmap(weighted_avg)
     if gout_update_fn is None:
@@ -480,7 +503,7 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
             lambda k: jax.random.split(jax.random.fold_in(k, 1), D))(kr)
         dev_params, favg, cnt, mloss = local_train_fn(
             state["dev_params"], dev_x, dev_y, dkeys, state["dev_gout"],
-            use_kd, consts["eta"], consts["beta"])
+            use_kd, consts["eta"], consts["beta"], consts["n_local"])
 
         # ---- channel (batched SNR/outage draws over the grid) ----
         ck = jax.vmap(lambda k: jax.random.fold_in(k, 3))(kr)
@@ -489,7 +512,8 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
                           tau_s)
         up_ok = link["up_ok"]                        # (G, D)
         dn_ok = link["dn_ok"]
-        w = up_ok.astype(jnp.float32) * n_local
+        w = up_ok.astype(jnp.float32) * \
+            consts["n_local"].astype(jnp.float32)[:, None]
         any_up = jnp.any(up_ok, axis=1)              # (G,)
 
         # ---- aggregation + (FLD) conversion, success-gated by where ----

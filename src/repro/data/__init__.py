@@ -1,4 +1,6 @@
 """Data substrate: synthetic corpora (offline container) + partitioners."""
 from .synthetic import synthetic_images, synthetic_tokens  # noqa: F401
-from .partition import partition_iid, partition_noniid  # noqa: F401
+from .partition import (PARTITION_SCHEMES, PartitionSpec,  # noqa: F401
+                        partition_dirichlet, partition_iid,
+                        partition_noniid)
 from .pipeline import device_batches  # noqa: F401

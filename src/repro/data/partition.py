@@ -3,10 +3,24 @@
 IID: every label has the same number of samples per device.
 non-IID (paper's recipe): two randomly selected labels get 2 samples each,
 every other label gets 62 samples (|S_d| = 500, N_L = 10).
+Dirichlet: per-device label proportions drawn from Dir(alpha) — the
+standard non-IID severity dial of the FD literature (alpha -> 0 collapses
+each device onto few labels, alpha -> inf recovers IID).
+
+:class:`PartitionSpec` names one partitioning recipe as a hashable value
+object, so the protocol-sweep engine can carry *which partition a grid
+point trains on* as grid axes (``partition``/``alpha``/``n_local``) and
+build each distinct partition exactly once.
 """
 from __future__ import annotations
 
+import dataclasses
+
 import numpy as np
+
+#: Registered partitioning recipes (the valid values of the sweep
+#: engine's ``partition`` axis).
+PARTITION_SCHEMES = ("iid", "noniid", "dirichlet")
 
 
 def partition_iid(x, y, num_devices: int, per_device: int, num_classes: int,
@@ -67,3 +81,101 @@ def partition_noniid(x, y, num_devices: int, num_classes: int = 10,
     idx = samp[order].reshape(num_devices, per_device)
     idx = rng.permuted(idx, axis=1)             # per-device shuffle, batched
     return x[idx], y[idx]
+
+
+def partition_dirichlet(x, y, num_devices: int, per_device: int,
+                        num_classes: int, alpha: float = 1.0, seed: int = 0):
+    """Dirichlet non-IID split: device d draws its per-class sample counts
+    from Multinomial(per_device, q_d) with q_d ~ Dir(alpha * 1_C), then
+    consumes the class pools with the same batched assembly as
+    :func:`partition_noniid` (disjoint until a class runs out, then
+    resampled with replacement).  Small ``alpha`` concentrates each device
+    on few labels; large ``alpha`` approaches :func:`partition_iid`."""
+    if alpha <= 0:
+        raise ValueError(f"dirichlet alpha must be > 0, got {alpha}")
+    rng = np.random.default_rng(seed)
+    x, y = np.asarray(x), np.asarray(y)
+    props = rng.dirichlet(np.full(num_classes, float(alpha)),
+                          size=num_devices)            # (D, C)
+    counts = np.stack([rng.multinomial(per_device, p) for p in props])
+
+    dev_of, samp = [], []
+    for c in range(num_classes):
+        need = counts[:, c]
+        total = int(need.sum())
+        pool = rng.permutation(np.flatnonzero(y == c))
+        if total and pool.size < total:  # recycle if exhausted
+            extra = rng.choice(np.flatnonzero(y == c), total - pool.size)
+            pool = np.concatenate([pool, extra])
+        dev_of.append(np.repeat(np.arange(num_devices), need))
+        samp.append(pool[:total])
+    dev_of = np.concatenate(dev_of)
+    samp = np.concatenate(samp)
+    order = np.argsort(dev_of, kind="stable")
+    idx = samp[order].reshape(num_devices, per_device)
+    idx = rng.permuted(idx, axis=1)             # per-device shuffle, batched
+    return x[idx], y[idx]
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionSpec:
+    """One partitioning recipe as a hashable value object.
+
+    ``scheme`` selects the partitioner; ``n_local`` is the per-device
+    sample count |S_d| (for the paper's ``noniid`` recipe the common-label
+    count is scaled so the row sums to ``n_local``); ``alpha`` is the
+    Dirichlet concentration (``dirichlet`` scheme only); ``seed`` drives
+    the partitioner's RNG.  Frozen + hashable so sweep grids can group
+    points by the partition they train on and build each distinct
+    partition exactly once.
+    """
+    scheme: str = "iid"
+    n_local: int = 500
+    alpha: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.scheme not in PARTITION_SCHEMES:
+            raise ValueError(f"unknown partition scheme {self.scheme!r}; "
+                             f"one of {PARTITION_SCHEMES}")
+        if self.n_local < 1:
+            raise ValueError(f"n_local must be >= 1, got {self.n_local}")
+        if self.alpha <= 0:
+            raise ValueError(f"alpha must be > 0, got {self.alpha}")
+
+    def build(self, x, y, num_devices: int, num_classes: int):
+        """Materialize the (dev_x (D, n_local, ...), dev_y (D, n_local))
+        partition from a flat sample pool."""
+        if np.asarray(y).ndim != 1:
+            raise ValueError(
+                "PartitionSpec.build partitions a flat sample pool "
+                f"(y must be 1-D, got shape {np.asarray(y).shape}); "
+                "partitioned grids take the raw pool, not (D, n) data")
+        if self.scheme == "iid":
+            return partition_iid(x, y, num_devices, self.n_local,
+                                 num_classes, seed=self.seed)
+        if self.scheme == "dirichlet":
+            return partition_dirichlet(x, y, num_devices, self.n_local,
+                                       num_classes, alpha=self.alpha,
+                                       seed=self.seed)
+        # paper's noniid recipe, with the common-label count scaled so the
+        # per-device row sums to n_local (rare labels keep 2 x 2 samples)
+        rare_labels, rare_count = 2, 2
+        common = ((self.n_local - rare_labels * rare_count)
+                  // (num_classes - rare_labels))
+        if common < 1:
+            raise ValueError(
+                f"n_local={self.n_local} too small for the noniid recipe "
+                f"with {num_classes} classes (needs >= "
+                f"{rare_labels * rare_count + num_classes - rare_labels})")
+        n_eff = rare_labels * rare_count + (num_classes - rare_labels) * \
+            common
+        if n_eff != self.n_local:
+            raise ValueError(
+                f"noniid n_local must satisfy n_local = {rare_labels}*"
+                f"{rare_count} + {num_classes - rare_labels}*common; "
+                f"nearest to {self.n_local} is {n_eff}")
+        return partition_noniid(x, y, num_devices, num_classes,
+                                rare_labels=rare_labels,
+                                rare_count=rare_count,
+                                common_count=common, seed=self.seed)

@@ -3,7 +3,6 @@ done with JAX PRNG so local training is fully traceable/vmappable."""
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 
 def device_batches(key, n_local: int, iters: int, batch_size: int):

@@ -26,7 +26,6 @@ from repro.launch import sharding as shp
 from repro.launch.mesh import (HBM_BW, ICI_BW, PEAK_FLOPS_BF16,
                                make_production_mesh)
 from repro.launch.steps import (make_decode_step, make_fd_sync_step,
-                                make_fd_sync_step_shardmap,
                                 make_fl_sync_step, make_prefill_step,
                                 make_train_step)
 from repro.models.shardhooks import set_activation_sharding

@@ -11,7 +11,6 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from ..core.losses import kd_regularizer
 from ..core.outputs import bucket_log_probs, bucketize_tokens
 from ..models import kvcache
 from ..models.transformer import forward, unembed_matrix

@@ -8,7 +8,6 @@ full, causal, sliding-window and ring-buffer cache attention one code path.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -7,14 +7,12 @@ depth-independent and activation memory is O(1) in depth.
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import attention as attn_mod
-from . import kvcache, mamba2
+from . import kvcache
 from .attention import (cross_attention, encode_cross_kv, gqa_attention,
                         mla_attention)
 from .layers import (apply_norm, dtype_of, embed_init, grad_dtype_guard,

@@ -2,7 +2,6 @@
 plus gradient clipping and LR schedules."""
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Callable, NamedTuple
 
 import jax

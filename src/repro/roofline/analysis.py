@@ -11,7 +11,6 @@ all-reduce / reduce-scatter / all-to-all / collective-permute.
 """
 from __future__ import annotations
 
-import math
 import re
 
 DTYPE_BYTES = {

@@ -1,6 +1,9 @@
-"""Vectorized protocol-sweep engine: whole hyperparameter grids as one
-compiled program (vmap over configs × scan over rounds × [shard_map over
-devices]).  See docs/sweep_engine.md."""
-from .axes import CH_SWEEPABLE, FED_SWEEPABLE, SweepGrid, make_grid  # noqa: F401
-from .engine import SweepRunner, run_pointwise, run_sweep  # noqa: F401
+"""Vectorized protocol-sweep engine: whole hyperparameter grids as few
+compiled programs as the grid's structure allows (vmap over configs ×
+scan over rounds × [shard_map over devices]; one program per distinct
+protocol, per-config device partitions).  See docs/sweep_engine.md."""
+from .axes import (ALL_SWEEPABLE, CH_SWEEPABLE, FED_SWEEPABLE,  # noqa: F401
+                   GROUP_SWEEPABLE, PART_SWEEPABLE, SweepGrid, make_grid)
+from .engine import (SweepRunner, engine_stats, run_pointwise,  # noqa: F401
+                     run_sweep)
 from .results import SweepResult  # noqa: F401

@@ -1,25 +1,38 @@
 """Sweep grids: which hyperparameters batch, and how points are built.
 
 A :class:`SweepGrid` is the cartesian product of value lists over named
-axes, rooted at one base ``FederatedConfig`` + ``ChannelConfig``.  Every
-axis must be *sweepable*: a field whose variation the compiled sweep can
-express as a traced per-config scalar (learning rates, KD weights, seed
-budgets, conversion iterations, channel link budgets) or absorb host-side
-before the program runs (``n_seed``/``n_inverse``/``lam`` change the
-round-1 seed sets, ``seed`` the key chain, SNR fields the per-slot
-success probabilities).  Fields that would change compiled *shapes or
-control flow* across points — the protocol itself, population size,
-local SGD geometry, round count, the fading window — are static: they
-are taken from the base configs and shared by every point.
+axes, rooted at one base ``FederatedConfig`` + ``ChannelConfig`` (+
+optionally one base :class:`~repro.data.partition.PartitionSpec`).  Four
+kinds of axis exist:
+
+* **traced / host-absorbed config axes** (:data:`FED_SWEEPABLE`,
+  :data:`CH_SWEEPABLE`) — fields whose variation the compiled sweep
+  expresses as a per-config scalar or absorbs host-side (seed budgets,
+  step sizes, SNR fields);
+* **the protocol axis** (``protocol``) — protocols differ *structurally*
+  (their round bodies branch), so the engine groups points by protocol
+  and compiles one vmapped ``lax.scan`` program per distinct protocol;
+* **partition axes** (:data:`PART_SWEEPABLE`: ``partition``, ``alpha``,
+  ``n_local``) — which device partition a point trains on.  Each grid
+  point carries a :class:`PartitionSpec`; the runner builds each
+  *distinct* spec once, stacks the (possibly ragged) partitions along
+  the grid axis, and routes seed prep through the content-keyed memo.
+
+Fields that would change compiled shapes in ways the engine cannot pad
+or group — population size, local SGD geometry, round count, the fading
+window — stay static: they are taken from the base configs and shared by
+every point.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+from typing import Optional
 
 from ..channel import ChannelConfig
-from ..core.protocols import FederatedConfig
+from ..core.protocols import PROTOCOLS, FederatedConfig
 from ..core.seed_prep import seed_fields_key
+from ..data.partition import PARTITION_SCHEMES, PartitionSpec
 
 # Traced per-config scalars, or host-absorbed before compilation.
 FED_SWEEPABLE = frozenset({
@@ -33,16 +46,29 @@ CH_SWEEPABLE = frozenset({
     "num_channels", "bandwidth_hz", "p_up_dbm", "p_dn_dbm", "distance_m",
     "pathloss_exp", "noise_dbm_hz", "theta",
 })
+# Partition axes -> PartitionSpec fields: which device partition a grid
+# point trains on (stacked per-config, ragged n_local padded + masked).
+PART_SWEEPABLE = frozenset({"partition", "alpha", "n_local"})
+_PART_FIELD = {"partition": "scheme", "alpha": "alpha", "n_local": "n_local"}
+# The protocol axis groups points into stacked per-protocol programs.
+GROUP_SWEEPABLE = frozenset({"protocol"})
+
+ALL_SWEEPABLE = FED_SWEEPABLE | CH_SWEEPABLE | PART_SWEEPABLE | \
+    GROUP_SWEEPABLE
 
 
 @dataclasses.dataclass(frozen=True)
 class SweepGrid:
     """A validated config grid: ``points[g]`` is the (fc, ch) pair of grid
-    point g, in C-order (last axis fastest) over ``axes``."""
+    point g, in C-order (last axis fastest) over ``axes``; ``parts[g]``
+    is the point's :class:`PartitionSpec` (None for grids that take one
+    pre-partitioned dataset)."""
     base_fc: FederatedConfig
     base_ch: ChannelConfig
     axes: tuple[tuple[str, tuple], ...]   # ((name, values), ...)
     points: tuple
+    parts: tuple = ()                     # per-point PartitionSpec | None
+    base_part: Optional[PartitionSpec] = None
 
     @property
     def shape(self) -> tuple[int, ...]:
@@ -51,6 +77,12 @@ class SweepGrid:
     @property
     def size(self) -> int:
         return len(self.points)
+
+    @property
+    def partitioned(self) -> bool:
+        """True iff every point names its own device partition (the
+        runner then takes a flat sample pool, not (D, n_local) data)."""
+        return bool(self.parts) and self.parts[0] is not None
 
     def labels(self) -> list[dict]:
         """Per-point {axis: value} dicts, aligned with ``points``."""
@@ -63,10 +95,12 @@ class SweepGrid:
         return "_".join(f"{k}{v}" for k, v in lab.items()) or f"pt{g}"
 
     def seed_key(self, g: int) -> tuple:
-        """The seed-determining config fields of point ``g`` — points
-        sharing it (and the partition, fixed per sweep) share one host
-        seed-prep run (``core.seed_prep.seed_fields_key``)."""
-        return seed_fields_key(self.points[g][0])
+        """The seed-determining identity of point ``g``: config fields
+        plus the partition spec it trains on — points sharing it share
+        one host seed-prep run (``core.seed_prep.seed_fields_key``; the
+        partition's *content* is additionally fingerprinted by the memo)."""
+        return (seed_fields_key(self.points[g][0]),
+                self.parts[g] if self.parts else None)
 
     def seed_groups(self) -> dict:
         """{seed_key: [point indices]} — e.g. an eta-only or channel-only
@@ -76,39 +110,84 @@ class SweepGrid:
             groups.setdefault(self.seed_key(g), []).append(g)
         return groups
 
+    def protocol_groups(self) -> dict:
+        """{protocol: [point indices]} in point order — one compiled
+        program per key (protocols differ structurally, so they cannot
+        share a round body; everything else batches inside a group)."""
+        groups: dict = {}
+        for g, (fc, _) in enumerate(self.points):
+            groups.setdefault(fc.protocol, []).append(g)
+        return groups
+
+
+def _validate_axis(name: str, values: tuple):
+    if name not in ALL_SWEEPABLE:
+        fed_static = {f.name for f in dataclasses.fields(FederatedConfig)
+                      } - FED_SWEEPABLE - GROUP_SWEEPABLE
+        ch_static = {f.name for f in dataclasses.fields(ChannelConfig)
+                     } - CH_SWEEPABLE
+        kind = ("static (shape/control-flow) field"
+                if name in fed_static | ch_static else "unknown field")
+        raise ValueError(
+            f"axis {name!r} is a {kind}; sweepable axes: "
+            f"{sorted(FED_SWEEPABLE)} + {sorted(CH_SWEEPABLE)} + "
+            f"{sorted(PART_SWEEPABLE)} + {sorted(GROUP_SWEEPABLE)}")
+    if not values:
+        raise ValueError(f"axis {name!r} has no values")
+    if name == "protocol":
+        for v in values:
+            if v not in PROTOCOLS:
+                raise ValueError(
+                    f"protocol axis value {v!r} is not a registered "
+                    f"protocol; one of {PROTOCOLS}")
+    if name == "partition":
+        for v in values:
+            if v not in PARTITION_SCHEMES:
+                raise ValueError(
+                    f"partition axis value {v!r} is not a registered "
+                    f"partition scheme; one of {PARTITION_SCHEMES}")
+
 
 def make_grid(base_fc: FederatedConfig,
-              base_ch: ChannelConfig | None = None, **axes) -> SweepGrid:
+              base_ch: ChannelConfig | None = None,
+              base_part: PartitionSpec | None = None, **axes) -> SweepGrid:
     """Build a :class:`SweepGrid` from a base config pair and keyword
-    axes, e.g. ``make_grid(fc, ch, n_seed=(10, 50), eta=(0.01, 0.02))``.
+    axes, e.g. ``make_grid(fc, ch, n_seed=(10, 50), eta=(0.01, 0.02))``
+    or, heterogeneously,
+    ``make_grid(fc, ch, protocol=("fl", "mix2fld"),
+    partition=("iid", "noniid"))``.
 
-    Raises ``ValueError`` for unknown or non-sweepable axis names and for
-    empty value lists; axis order (= C-order of the grid) follows the
-    keyword order.
+    Raises ``ValueError`` for unknown or non-sweepable axis names, for
+    empty value lists, and for unregistered ``protocol`` / ``partition``
+    axis values; axis order (= C-order of the grid) follows the keyword
+    order.  Grids with partition axes (or an explicit ``base_part``)
+    carry a :class:`PartitionSpec` per point; their runner takes the flat
+    sample pool instead of pre-partitioned (D, n_local) data.
     """
     base_ch = base_ch or ChannelConfig(num_devices=base_fc.num_devices)
     axes = {n: tuple(v) for n, v in axes.items()}  # once: generators exhaust
     for name, values in axes.items():
-        if name not in FED_SWEEPABLE | CH_SWEEPABLE:
-            fed_static = {f.name for f in dataclasses.fields(FederatedConfig)
-                          } - FED_SWEEPABLE
-            ch_static = {f.name for f in dataclasses.fields(ChannelConfig)
-                         } - CH_SWEEPABLE
-            kind = ("static (shape/control-flow) field"
-                    if name in fed_static | ch_static else "unknown field")
-            raise ValueError(
-                f"axis {name!r} is a {kind}; sweepable axes: "
-                f"{sorted(FED_SWEEPABLE)} + {sorted(CH_SWEEPABLE)}")
-        if not values:
-            raise ValueError(f"axis {name!r} has no values")
+        _validate_axis(name, values)
+
+    partitioned = base_part is not None or any(
+        n in PART_SWEEPABLE for n in axes)
+    base_part = base_part or (PartitionSpec() if partitioned else None)
 
     items = tuple(axes.items())
-    points = []
+    points, parts = [], []
     for combo in itertools.product(*(v for _, v in items)):
-        fc_kw, ch_kw = {}, {}
+        fc_kw, ch_kw, pt_kw = {}, {}, {}
         for (name, _), value in zip(items, combo):
-            (fc_kw if name in FED_SWEEPABLE else ch_kw)[name] = value
+            if name in CH_SWEEPABLE:
+                ch_kw[name] = value
+            elif name in PART_SWEEPABLE:
+                pt_kw[_PART_FIELD[name]] = value
+            else:  # FED_SWEEPABLE | {"protocol"}: FederatedConfig fields
+                fc_kw[name] = value
         points.append((dataclasses.replace(base_fc, **fc_kw),
                        dataclasses.replace(base_ch, **ch_kw)))
+        parts.append(dataclasses.replace(base_part, **pt_kw)
+                     if partitioned else None)
     return SweepGrid(base_fc=base_fc, base_ch=base_ch, axes=items,
-                     points=tuple(points))
+                     points=tuple(points), parts=tuple(parts),
+                     base_part=base_part)

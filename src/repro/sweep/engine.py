@@ -1,23 +1,41 @@
 """The compiled protocol-sweep runner.
 
-``SweepRunner`` turns a :class:`~repro.sweep.axes.SweepGrid` into ONE
-jitted program: per-config constants (step sizes, conversion budgets,
-link budgets, padded seed sets, PRNG keys) are stacked along a leading
-grid axis G, the per-round protocol step from
-``repro.core.protocols.make_grid_round_step`` is vmapped over that axis,
-and ``jax.lax.scan`` drives it over rounds — so a grid of G configs ×
-D devices × R rounds executes without returning to Python.  With
-``shard_devices`` set on the base config, the device axis additionally
-runs under ``shard_map`` on the 1-D "data" mesh (the same placement the
-trainer uses), composing grid-vmap × device-sharding.
+``SweepRunner`` turns a :class:`~repro.sweep.axes.SweepGrid` into as few
+jitted programs as the grid's structure allows: per-config constants
+(step sizes, conversion budgets, link budgets, padded seed sets, PRNG
+keys, device partitions) are stacked along a leading grid axis G, the
+per-round protocol step from ``repro.core.protocols.make_grid_round_step``
+is vmapped over that axis, and ``jax.lax.scan`` drives it over rounds —
+so a grid of G configs × D devices × R rounds executes without returning
+to Python.  Two axes cannot batch into one program and are handled
+structurally instead:
 
-Everything the compiled program cannot express is absorbed host-side
-*before* the scan, in exactly the per-point order the loop path uses:
+* **protocol** — round bodies differ across protocols (FL aggregates
+  models, FD only output tables, the FLD family converts outputs to a
+  model), so the runner groups grid points by protocol and compiles ONE
+  vmapped scan per distinct protocol (``engine_stats`` counts traces;
+  the heterogeneous-grid tests assert program count == #protocols);
+* **partition** — points may train on different device partitions
+  (``partition``/``alpha``/``n_local`` axes).  Each *distinct*
+  :class:`~repro.data.partition.PartitionSpec` is built exactly once,
+  ragged ``n_local`` partitions are zero-padded to the grid maximum and
+  stacked per-config, and the traced per-config ``n_local`` batch-draw
+  bound masks the pad rows (identical draws to the loop path's static
+  bound).
 
-* round-1 seed collection (sort-based pairing + cycle DFS) runs once per
-  config via ``collect_seeds`` with the loop path's key chain, then pads
-  the ragged train sets to the grid maximum (``n_train`` masks the
-  `randint` draws onto the live prefix);
+With ``shard_devices`` set on the base config, the device axis
+additionally runs under ``shard_map`` on the 1-D "data" mesh (the same
+placement the trainer uses), composing grid-vmap × device-sharding.
+
+Everything the compiled programs cannot express is absorbed host-side
+*before* the scans, in exactly the per-point order the loop path uses:
+
+* round-1 seed collection (sort-based pairing + cycle search) runs once
+  per *seed group* via the content-keyed ``core.seed_prep`` memo — the
+  key fingerprints the partition, so heterogeneous-partition grids prep
+  once per distinct (config fields, partition, key) content, not once
+  per point — then pads the ragged train sets to the grid maximum
+  (``n_train`` masks the `randint` draws onto the live prefix);
 * conversion step keys are precomputed per (round, config) because
   ``jax.random.split`` is not prefix-stable across split counts;
 * channel link budgets reduce to per-slot success probabilities and
@@ -25,10 +43,12 @@ Everything the compiled program cannot express is absorbed host-side
   bitwise-equal to the loop path.
 
 The sweep-vs-loop equivalence tests (tests/test_sweep.py) assert the
-whole per-round history matches ``FederatedTrainer.run`` per grid point.
+whole per-round history matches ``FederatedTrainer.run`` per grid point,
+heterogeneous grids included.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 
 import jax
@@ -49,6 +69,24 @@ from ..core.seed_prep import SeedPrepMemo, prepare_seeds
 from ..launch.mesh import make_device_mesh
 from .axes import SweepGrid
 from .results import SweepResult
+
+
+@dataclasses.dataclass
+class EngineStats:
+    """Trace/lower instrumentation: ``programs`` counts compiled-program
+    *builds*, ``traces`` counts actual jit trace events (the counter is a
+    Python side effect inside the jitted scan wrapper, so warm calls do
+    not increment it).  The heterogeneous-grid tests assert a mixed
+    protocol grid traces exactly once per distinct protocol."""
+    programs: int = 0
+    traces: int = 0
+
+    def reset(self):
+        self.programs = 0
+        self.traces = 0
+
+
+engine_stats = EngineStats()
 
 
 def _pad_seed_sets(seed_sets, num_classes: int):
@@ -91,43 +129,109 @@ def _pad_seed_sets(seed_sets, num_classes: int):
     return px[inv], py[inv], n[inv]
 
 
-class SweepRunner:
-    """Compiles one grid into one program; ``run()`` re-executes the same
-    compiled scan (warm calls skip tracing and compilation)."""
+def _stack_partitions(parts):
+    """Stack the per-point device partitions of one protocol group.
 
-    def __init__(self, model, grid: SweepGrid, dev_x, dev_y, test_x, test_y):
-        fc0, ch0 = grid.points[0]
-        if ch0.num_devices != fc0.num_devices:
+    ``parts``: list of (dev_x, dev_y) pairs, one per point — points
+    sharing a :class:`PartitionSpec` share the *same* array objects, so
+    identity dedup keeps padding O(#distinct partitions).  Returns
+    ``(dev_x, dev_y, n_local (G,), per_config)``: a group whose points
+    all train on one partition keeps the single (D, n, ...) arrays
+    (``per_config=False``, the classic homogeneous layout); otherwise
+    ragged ``n_local`` partitions are zero-padded to the group maximum
+    and stacked to (G, D, Nmax, ...).  Pad rows are never sampled: the
+    traced per-config ``n_local`` bounds every batch draw."""
+    n_local = np.asarray([x.shape[1] for x, _ in parts], np.int32)
+    if len({id(x) for x, _ in parts}) == 1:
+        x, y = parts[0]
+        return jnp.asarray(x), jnp.asarray(y), n_local, False
+    uniq_of: dict[int, int] = {}
+    uniq, inv = [], []
+    for pair in parts:
+        u = uniq_of.get(id(pair[0]))
+        if u is None:
+            u = uniq_of[id(pair[0])] = len(uniq)
+            uniq.append(pair)
+        inv.append(u)
+    xs = [np.asarray(x) for x, _ in uniq]
+    ys = [np.asarray(y) for _, y in uniq]
+    n_max = int(max(x.shape[1] for x in xs))
+    D = xs[0].shape[0]
+    feat = xs[0].shape[2:]
+    px = np.zeros((len(xs), D, n_max) + feat, np.float32)
+    py = np.zeros((len(ys), D, n_max), ys[0].dtype)
+    for u, (x, y) in enumerate(zip(xs, ys)):
+        px[u, :, :x.shape[1]] = x
+        py[u, :, :y.shape[1]] = y
+    inv = np.asarray(inv)
+    return jnp.asarray(px[inv]), jnp.asarray(py[inv]), n_local, True
+
+
+def _resolve_partitions(grid: SweepGrid, dev_x, dev_y, num_devices: int,
+                        num_classes: int):
+    """Per-point (dev_x, dev_y) pairs.  Partitioned grids build each
+    distinct :class:`PartitionSpec` exactly once from the flat sample
+    pool; classic grids share the given pre-partitioned arrays (one
+    object, so downstream identity dedup and the seed-prep fingerprint
+    cache both see a single partition)."""
+    if grid.partitioned:
+        pool_x, pool_y = np.asarray(dev_x), np.asarray(dev_y)
+        if pool_y.ndim != 1:
             raise ValueError(
-                f"channel simulates {ch0.num_devices} links but the "
-                f"population has {fc0.num_devices} devices")
-        self.model = model
-        self.grid = grid
-        self.proto = fc0.protocol
-        G, D, C, R = grid.size, fc0.num_devices, fc0.num_classes, \
+                "grids with partition axes take the flat sample pool "
+                f"(x (N, ...), y (N,)); got y shape {pool_y.shape} — "
+                "pass the unpartitioned data and let each point's "
+                "PartitionSpec split it")
+        built: dict = {}
+        for spec in grid.parts:
+            if spec not in built:
+                built[spec] = spec.build(pool_x, pool_y, num_devices,
+                                         num_classes)
+        return [built[spec] for spec in grid.parts]
+    if np.asarray(dev_y).ndim != 2:
+        raise ValueError(
+            "grids without partition axes take pre-partitioned "
+            f"(D, n_local) data; got dev_y shape "
+            f"{np.asarray(dev_y).shape}")
+    shared = (dev_x, dev_y)
+    return [shared] * grid.size
+
+
+class _ProtocolProgram:
+    """One compiled program: every grid point of one protocol.  This is
+    the stacking/tracing core the homogeneous runner used to be, now
+    scoped to a protocol group (``idxs``, in grid order) with per-config
+    partitions."""
+
+    def __init__(self, model, grid: SweepGrid, proto: str, idxs, parts,
+                 test_x, test_y, memo: SeedPrepMemo, mesh):
+        engine_stats.programs += 1
+        fc0, ch0 = grid.points[idxs[0]]
+        self.idxs = idxs
+        points = [grid.points[i] for i in idxs]
+        G, D, C, R = len(idxs), fc0.num_devices, fc0.num_classes, \
             fc0.max_rounds
-        dev_x = jnp.asarray(dev_x)
-        dev_y = jnp.asarray(dev_y)
+        dev_x, dev_y, n_local, per_config = _stack_partitions(parts)
+        feat = dev_x.shape[3:] if per_config else dev_x.shape[2:]
 
         # ---- host prep, per config in the loop path's exact key order;
-        # seed prep is memoized on the seed-determining content (an
-        # eta-only or channel-only grid collects seeds exactly once and
-        # every point of a seed group shares one result object) ----
-        memo = SeedPrepMemo()
+        # seed prep is memoized on the seed-determining content (config
+        # fields + partition fingerprint + key bytes), so points sharing
+        # a seed key — and, across partitions, distinct points sharing
+        # one partition's content — share one result object ----
         run_keys, inits, conv_keys, seed_sets = [], [], [], []
         plans = {"p_up": [], "p_dn": [], "up1": [], "up": [], "dn": []}
-        k_max = max(fc.server_iters for fc, _ in grid.points)
-        for fc, ch in grid.points:
+        k_max = max(fc.server_iters for fc, _ in points)
+        for (fc, ch), (px, py) in zip(points, parts):
             kinit, key = jax.random.split(jax.random.PRNGKey(fc.seed))
             run_keys.append(np.asarray(key))
-            params = self.model.init(kinit)
+            params = model.init(kinit)
             inits.append(params)
             n_mod = sum(p.size for p in jax.tree.leaves(params))
-            if self.proto in FLD_FAMILY:
+            if proto in FLD_FAMILY:
                 kr1 = jax.random.fold_in(key, 1)
                 seed_sets.append(prepare_seeds(
-                    fc, dev_x, dev_y, jax.random.fold_in(kr1, 2),
-                    memo=memo))
+                    fc, px, py, jax.random.fold_in(kr1, 2), memo=memo))
                 ck = np.zeros((R, k_max, 2), np.uint32)
                 for p in range(1, R + 1):
                     base = jax.random.fold_in(jax.random.fold_in(key, p), 4)
@@ -135,7 +239,7 @@ class SweepRunner:
                         jax.random.split(base, fc.server_iters))
                 conv_keys.append(ck)
             plan = round_slot_plan(
-                self.proto, ch, n_mod=n_mod, n_labels=C,
+                proto, ch, n_mod=n_mod, n_labels=C,
                 sample_bits=fc.sample_bits, n_seed=fc.n_seed)
             plans["p_up"].append(plan["p_up"])
             plans["p_dn"].append(plan["p_dn"])
@@ -143,38 +247,29 @@ class SweepRunner:
             plans["up"].append(plan["up_slots"])
             plans["dn"].append(plan["dn_slots"])
 
-        self.seed_memo = memo
-        self.seed_prep_stats = {
-            "groups": (len(grid.seed_groups())
-                       if self.proto in FLD_FAMILY else 0),
-            "prep_runs": memo.misses,
-            "memo_hits": memo.hits,
-        }
-
         g_params = jax.tree.map(lambda *ls: jnp.stack(ls), *inits)
         n_params = sum(p[0].size for p in jax.tree.leaves(g_params))
 
         consts = {
             "key": jnp.asarray(np.stack(run_keys)),
-            "eta": jnp.asarray([fc.eta for fc, _ in grid.points],
-                               jnp.float32),
-            "beta": jnp.asarray([fc.beta for fc, _ in grid.points],
+            "eta": jnp.asarray([fc.eta for fc, _ in points], jnp.float32),
+            "beta": jnp.asarray([fc.beta for fc, _ in points],
                                 jnp.float32),
             "s_iters": jnp.asarray(
-                [fc.server_iters for fc, _ in grid.points], jnp.int32),
-            "eps": jnp.asarray([fc.eps for fc, _ in grid.points],
-                               jnp.float32),
+                [fc.server_iters for fc, _ in points], jnp.int32),
+            "eps": jnp.asarray([fc.eps for fc, _ in points], jnp.float32),
+            "n_local": jnp.asarray(n_local),
             "p_up": jnp.asarray(plans["p_up"], jnp.float32),
             "p_dn": jnp.asarray(plans["p_dn"], jnp.float32),
         }
-        if self.proto in FLD_FAMILY:
-            px, py, n_train = _pad_seed_sets(seed_sets, C)
-            consts["seeds_x"] = jnp.asarray(px)
-            consts["seeds_y"] = jnp.asarray(py)
+        if proto in FLD_FAMILY:
+            sx, sy, n_train = _pad_seed_sets(seed_sets, C)
+            consts["seeds_x"] = jnp.asarray(sx)
+            consts["seeds_y"] = jnp.asarray(sy)
             consts["n_train"] = jnp.asarray(n_train)
             ck = jnp.asarray(np.stack(conv_keys, axis=1))  # (R, G, Kmax, 2)
         else:
-            consts["seeds_x"] = jnp.zeros((G, 1) + dev_x.shape[2:])
+            consts["seeds_x"] = jnp.zeros((G, 1) + feat)
             consts["seeds_y"] = jnp.zeros((G, 1), jnp.int32)
             consts["n_train"] = jnp.ones((G,), jnp.int32)
             ck = jnp.zeros((R, G, 1, 2), jnp.uint32)
@@ -192,35 +287,40 @@ class SweepRunner:
         # ---- device-axis placement: vmapped, or shard_mapped over the
         # "data" mesh exactly like the trainer's sharded path ----
         fns = {}
-        self.mesh = None
-        if fc0.shard_devices:
-            self.mesh = make_device_mesh(D, fc0.mesh_shards or None)
-            grid_lt = make_grid_local_train(self.model.apply, C,
-                                            fc0.local_iters, fc0.local_batch)
+        if mesh is not None:
+            grid_lt = make_grid_local_train(model.apply, C,
+                                            fc0.local_iters,
+                                            fc0.local_batch, per_config)
             gdev = P(None, "data")   # (G, D, ...): shard the device dim
-            ddev = P("data")         # (D, ...) shared data
+            ddev = gdev if per_config else P("data")  # per-config data
             rep = P()
             fns["local_train_fn"] = shard_map(
-                grid_lt, mesh=self.mesh,
-                in_specs=(gdev, ddev, ddev, gdev, gdev, rep, rep, rep),
+                grid_lt, mesh=mesh,
+                in_specs=(gdev, ddev, ddev, gdev, gdev, rep, rep, rep,
+                          rep),
                 out_specs=(gdev, gdev, gdev, gdev), check_rep=False)
             fns["weighted_avg_fn"] = shard_map(
-                jax.vmap(weighted_avg_psum), mesh=self.mesh,
+                jax.vmap(weighted_avg_psum), mesh=mesh,
                 in_specs=(gdev, gdev), out_specs=rep, check_rep=False)
             fns["gout_update_fn"] = shard_map(
-                jax.vmap(gout_update_psum), mesh=self.mesh,
+                jax.vmap(gout_update_psum), mesh=mesh,
                 in_specs=(gdev, gdev, gdev), out_specs=rep,
                 check_rep=False)
 
         round_step = make_grid_round_step(
-            self.model.apply, protocol=self.proto, num_devices=D,
+            model.apply, protocol=proto, num_devices=D,
             num_classes=C, local_iters=fc0.local_iters,
             local_batch=fc0.local_batch, server_batch=fc0.server_batch,
             t_max_slots=ch0.t_max_slots, tau_s=ch0.tau_s,
             dev_x=dev_x, dev_y=dev_y, test_x=jnp.asarray(test_x),
-            test_y=jnp.asarray(test_y), consts=consts, **fns)
-        self._program = jax.jit(
-            lambda state, xs: jax.lax.scan(round_step, state, xs))
+            test_y=jnp.asarray(test_y), consts=consts,
+            per_config_data=per_config, **fns)
+
+        def _sweep_program(state, xs):
+            engine_stats.traces += 1  # Python side effect: trace-counted
+            return jax.lax.scan(round_step, state, xs)
+
+        self._program = jax.jit(_sweep_program)
 
         self._state0 = {
             "dev_params": jax.tree.map(
@@ -230,24 +330,92 @@ class SweepRunner:
             "gout": jnp.full((G, C, C), 1.0 / C),
             "dev_gout": jnp.full((G, D, C, C), 1.0 / C),
             "prev": jnp.zeros(
-                (G, C * C if self.proto == "fd" else n_params)),
+                (G, C * C if proto == "fd" else n_params)),
             "converged": jnp.zeros((G,), jnp.int32),
         }
-        self.seed_sets = seed_sets if self.proto in FLD_FAMILY else None
+        self.seed_sets = seed_sets if proto in FLD_FAMILY else None
+
+    def run(self):
+        """Execute the compiled scan; returns (final state, per-round
+        outputs), outputs stacked (R, Gp)."""
+        state, out = self._program(self._state0, self._xs)
+        return state, jax.tree.map(np.asarray, jax.block_until_ready(out))
+
+
+class SweepRunner:
+    """Compiles one grid into at most one program per distinct protocol;
+    ``run()`` re-executes the same compiled scans (warm calls skip
+    tracing and compilation).  Heterogeneous grids (protocol and/or
+    partition axes) and classic single-protocol shared-partition grids
+    take the same entry point — for partitioned grids pass the *flat*
+    sample pool as ``dev_x``/``dev_y`` and each point's
+    :class:`PartitionSpec` splits it."""
+
+    def __init__(self, model, grid: SweepGrid, dev_x, dev_y, test_x,
+                 test_y):
+        fc0, ch0 = grid.points[0]
+        if ch0.num_devices != fc0.num_devices:
+            raise ValueError(
+                f"channel simulates {ch0.num_devices} links but the "
+                f"population has {fc0.num_devices} devices")
+        self.model = model
+        self.grid = grid
+        D, C = fc0.num_devices, fc0.num_classes
+
+        self.partitions = _resolve_partitions(grid, dev_x, dev_y, D, C)
+
+        self.mesh = (make_device_mesh(D, fc0.mesh_shards or None)
+                     if fc0.shard_devices else None)
+
+        memo = SeedPrepMemo()
+        self._programs = []          # (protocol, idxs, program)
+        for proto, idxs in grid.protocol_groups().items():
+            prog = _ProtocolProgram(
+                model, grid, proto, idxs,
+                [self.partitions[i] for i in idxs],
+                test_x, test_y, memo, self.mesh)
+            self._programs.append((proto, idxs, prog))
+        self.programs = len(self._programs)
+
+        self.seed_memo = memo
+        fld_pts = [g for g, (fc, _) in enumerate(grid.points)
+                   if fc.protocol in FLD_FAMILY]
+        self.seed_prep_stats = {
+            "groups": len({grid.seed_key(g) for g in fld_pts}),
+            "prep_runs": memo.misses,
+            "memo_hits": memo.hits,
+        }
+        if fld_pts:  # per-point seed sets in grid order (None at fl/fd
+            # points of a mixed grid; dense for classic all-FLD grids)
+            self.seed_sets = [None] * grid.size
+            for _, idxs, prog in self._programs:
+                if prog.seed_sets is not None:
+                    for i, s in zip(idxs, prog.seed_sets):
+                        self.seed_sets[i] = s
+        else:
+            self.seed_sets = None
 
     # ------------------------------------------------------------------
     def run(self) -> SweepResult:
+        G, R = self.grid.size, self.grid.points[0][0].max_rounds
+        acc = np.zeros((G, R), np.float32)
+        loss = np.zeros((G, R), np.float32)
+        latency = np.zeros((G, R), np.float64)
+        up_ok = np.zeros((G, R), np.int32)
+        converged = np.zeros((G,), np.int32)
         t0 = time.perf_counter()
-        state, out = self._program(self._state0, self._xs)
-        out = jax.tree.map(np.asarray, jax.block_until_ready(out))
+        for proto, idxs, prog in self._programs:
+            state, out = prog.run()
+            rows = np.asarray(idxs)
+            acc[rows] = out["acc"].T
+            loss[rows] = out["loss"].T
+            latency[rows] = out["latency_s"].T.astype(np.float64)
+            up_ok[rows] = out["up_ok"].T
+            converged[rows] = np.asarray(state["converged"])
         wall = time.perf_counter() - t0
         return SweepResult(
-            grid=self.grid,
-            acc=out["acc"].T, loss=out["loss"].T,          # (G, R)
-            latency_s=out["latency_s"].T.astype(np.float64),
-            up_ok=out["up_ok"].T,
-            converged=np.asarray(state["converged"]),
-            wall_s=wall)
+            grid=self.grid, acc=acc, loss=loss, latency_s=latency,
+            up_ok=up_ok, converged=converged, wall_s=wall)
 
 
 def run_sweep(model, grid: SweepGrid, dev_x, dev_y, test_x, test_y
@@ -259,7 +427,12 @@ def run_sweep(model, grid: SweepGrid, dev_x, dev_y, test_x, test_y
 def run_pointwise(model, grid: SweepGrid, dev_x, dev_y, test_x, test_y,
                   log=None) -> list[dict]:
     """The per-point loop the sweep replaces (and the equivalence oracle):
-    one ``FederatedTrainer.run`` per grid point, re-tracing each time."""
-    return [FederatedTrainer(model, fc, ch).run(dev_x, dev_y, test_x,
-                                                test_y, log=log)
-            for fc, ch in grid.points]
+    one ``FederatedTrainer.run`` per grid point, re-tracing each time.
+    Partitioned grids build each point's partition exactly like the
+    runner, so histories are comparable point-for-point."""
+    fc0 = grid.points[0][0]
+    parts = _resolve_partitions(grid, dev_x, dev_y, fc0.num_devices,
+                                fc0.num_classes)
+    return [FederatedTrainer(model, fc, ch).run(px, py, test_x, test_y,
+                                                log=log)
+            for (fc, ch), (px, py) in zip(grid.points, parts)]

@@ -73,9 +73,17 @@ class SweepResult:
         return rows
 
     def to_payload(self) -> dict:
-        """Whole-sweep JSON payload (grid axes + per-point frames)."""
+        """Whole-sweep JSON payload (grid axes + per-point frames).
+        ``protocols`` lists the distinct protocols of the grid (one entry
+        for classic homogeneous grids); ``protocol`` keeps the first
+        point's protocol for backward compatibility."""
+        protos = []
+        for fc, _ in self.grid.points:
+            if fc.protocol not in protos:
+                protos.append(fc.protocol)
         return {
-            "protocol": self.grid.points[0][0].protocol,
+            "protocol": protos[0],
+            "protocols": protos,
             "axes": {n: list(v) for n, v in self.grid.axes},
             "grid_shape": list(self.grid.shape),
             "wall_s": round(self.wall_s, 4),

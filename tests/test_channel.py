@@ -3,7 +3,6 @@ import math
 
 import jax
 import numpy as np
-import pytest
 
 from repro.channel import ChannelConfig, payload_bits, round_trip
 from repro.channel.model import simulate_link

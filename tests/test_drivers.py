@@ -1,9 +1,6 @@
 """End-to-end driver smoke tests (examples/launch entry points)."""
-import sys
-
 import jax
 import jax.numpy as jnp
-import pytest
 
 
 def test_serve_driver_generates(capsys):
@@ -15,7 +12,6 @@ def test_serve_driver_generates(capsys):
 
 
 def test_lm_train_driver_loss_decreases():
-    from repro.launch.train import main
     import repro.launch.train as T
 
     class Args:

@@ -1,11 +1,13 @@
 """Distribution-property tests for the vectorized IID / non-IID device
 partitioners (per-device class histograms, cross-device disjointness,
-recycling semantics)."""
+recycling semantics), the Dirichlet severity partitioner, and the
+PartitionSpec value objects the sweep engine's partition axes build."""
 import jax
 import numpy as np
 import pytest
 
-from repro.data import partition_iid, partition_noniid, synthetic_images
+from repro.data import (PartitionSpec, partition_dirichlet, partition_iid,
+                        partition_noniid, synthetic_images)
 
 
 @pytest.fixture(scope="module")
@@ -96,3 +98,75 @@ def test_noniid_determinism_and_seed_sensitivity(pool):
     c = partition_noniid(x, y, 5, seed=4)[1]
     assert (a == b).all()
     assert not (a == c).all()
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet severity partitioner + PartitionSpec value objects
+# ---------------------------------------------------------------------------
+
+def _mean_label_entropy(dev_y, num_classes=10):
+    ent = []
+    for dy in dev_y:
+        p = np.bincount(dy, minlength=num_classes) / dy.size
+        nz = p[p > 0]
+        ent.append(-(nz * np.log(nz)).sum())
+    return float(np.mean(ent))
+
+
+def test_dirichlet_alpha_dials_severity(pool):
+    """Small alpha concentrates devices on few labels (low per-device
+    label entropy), large alpha approaches the uniform IID histogram."""
+    x, y = pool
+    _, severe = partition_dirichlet(x, y, 8, 300, 10, alpha=0.05, seed=0)
+    _, mild = partition_dirichlet(x, y, 8, 300, 10, alpha=100.0, seed=0)
+    assert severe.shape == mild.shape == (8, 300)
+    assert _mean_label_entropy(severe) < _mean_label_entropy(mild)
+    assert _mean_label_entropy(mild) > 0.9 * np.log(10)  # near-uniform
+
+
+def test_dirichlet_determinism_and_validation(pool):
+    x, y = pool
+    a = partition_dirichlet(x, y, 4, 100, 10, alpha=0.5, seed=7)[1]
+    b = partition_dirichlet(x, y, 4, 100, 10, alpha=0.5, seed=7)[1]
+    c = partition_dirichlet(x, y, 4, 100, 10, alpha=0.5, seed=8)[1]
+    assert (a == b).all() and not (a == c).all()
+    with pytest.raises(ValueError, match="alpha"):
+        partition_dirichlet(x, y, 4, 100, 10, alpha=0.0)
+
+
+@pytest.mark.parametrize("scheme,n_local", [
+    ("iid", 200), ("noniid", 500), ("dirichlet", 120)])
+def test_partition_spec_builds_requested_geometry(pool, scheme, n_local):
+    x, y = pool
+    spec = PartitionSpec(scheme=scheme, n_local=n_local, alpha=0.5, seed=1)
+    dev_x, dev_y = spec.build(x, y, 4, 10)
+    assert dev_x.shape[:2] == (4, n_local)
+    assert dev_y.shape == (4, n_local)
+
+
+def test_partition_spec_noniid_scales_common_count(pool):
+    """noniid n_local != 500 rescales the common-label count (rare pair
+    keeps 2 x 2); off-recipe sizes fail loudly."""
+    x, y = pool
+    _, dev_y = PartitionSpec(scheme="noniid", n_local=60).build(x, y, 4, 10)
+    counts = np.bincount(dev_y[0], minlength=10)
+    assert sorted(counts)[:2] == [2, 2]
+    assert all(c == 7 for c in sorted(counts)[2:])
+    with pytest.raises(ValueError, match="noniid n_local"):
+        PartitionSpec(scheme="noniid", n_local=61).build(x, y, 4, 10)
+
+
+def test_partition_spec_validation(pool):
+    x, y = pool
+    with pytest.raises(ValueError, match="unknown partition scheme"):
+        PartitionSpec(scheme="sorted")
+    with pytest.raises(ValueError, match="n_local"):
+        PartitionSpec(n_local=0)
+    with pytest.raises(ValueError, match="alpha"):
+        PartitionSpec(alpha=-1.0)
+    dev_x, dev_y = PartitionSpec(n_local=100).build(x, y, 4, 10)
+    with pytest.raises(ValueError, match="flat sample pool"):
+        PartitionSpec(n_local=100).build(dev_x, dev_y, 4, 10)
+    # hashable value object: grids group points by spec identity
+    assert PartitionSpec(n_local=100) == PartitionSpec(n_local=100)
+    assert len({PartitionSpec(seed=0), PartitionSpec(seed=1)}) == 2

@@ -11,11 +11,12 @@ import numpy as np
 import pytest
 
 from repro.channel import ChannelConfig
-from repro.core.protocols import FederatedConfig
-from repro.data import partition_iid, synthetic_images
+from repro.core.protocols import PROTOCOLS, FederatedConfig
+from repro.data import PartitionSpec, partition_iid, synthetic_images
 from repro.models.cnn import CNN
-from repro.sweep import (CH_SWEEPABLE, FED_SWEEPABLE, SweepRunner,
-                         make_grid, run_pointwise, run_sweep)
+from repro.sweep import (CH_SWEEPABLE, FED_SWEEPABLE, PART_SWEEPABLE,
+                         SweepRunner, engine_stats, make_grid,
+                         run_pointwise, run_sweep)
 
 CH = ChannelConfig(num_devices=4, p_up_dbm=40.0)
 
@@ -26,6 +27,15 @@ def data():
     dev_x, dev_y = partition_iid(np.asarray(x[:1200]), np.asarray(y[:1200]),
                                  4, 300, 10, seed=0)
     return dev_x, dev_y, jnp.asarray(x[1200:]), jnp.asarray(y[1200:])
+
+
+@pytest.fixture(scope="module")
+def pool():
+    """Flat sample pool for partitioned grids (each point's PartitionSpec
+    splits it)."""
+    x, y = synthetic_images(jax.random.PRNGKey(42), 1400)
+    return (np.asarray(x[:1200]), np.asarray(y[:1200]),
+            jnp.asarray(x[1200:]), jnp.asarray(y[1200:]))
 
 
 def _base(**kw):
@@ -256,6 +266,131 @@ def test_runner_rejects_channel_population_mismatch(data):
     grid = make_grid(_base(), ChannelConfig(num_devices=7), eta=(0.01,))
     with pytest.raises(ValueError, match="devices"):
         SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous grids: protocol axis (stacked per-protocol programs) and
+# per-config partitions (partition/alpha/n_local axes)
+# ---------------------------------------------------------------------------
+
+def _het_base(**kw):
+    """Tiny budgets: the heterogeneous tests compare 10-point grids
+    against 10 per-point trainer runs, so every knob is minimal."""
+    cfg = dict(protocol="mix2fld", num_devices=4, local_iters=2,
+               local_batch=16, server_iters=2, server_batch=16,
+               max_rounds=2, n_seed=4, n_inverse=8, seed=0)
+    cfg.update(kw)
+    return FederatedConfig(**cfg)
+
+
+# noniid n_local must satisfy 2*2 + 8*common; 60 = 4 + 8*7
+HET_PART = PartitionSpec(scheme="iid", n_local=60, seed=0)
+
+
+def test_heterogeneous_grid_matches_loop_vmapped(pool):
+    """The acceptance grid: all five protocols x two partitions (IID +
+    non-IID) in ONE SweepRunner call must reproduce per-point
+    ``FederatedTrainer.run`` histories within 1e-6, compile exactly one
+    program per distinct protocol (trace-counted), and prep seeds once
+    per distinct (FLD protocol, partition) seed group."""
+    from repro.core.seed_prep import prep_stats
+    px, py, tx, ty = pool
+    grid = make_grid(_het_base(), CH, HET_PART, protocol=PROTOCOLS,
+                     partition=("iid", "noniid"))
+    assert grid.shape == (5, 2) and grid.partitioned
+    prep_stats.reset()
+    engine_stats.reset()
+    runner = SweepRunner(CNN(), grid, px, py, tx, ty)
+    # 3 FLD-family protocols x 2 partitions = 6 seed groups, each
+    # prepped exactly once (distinct partitions -> that many preps)
+    assert runner.seed_prep_stats == {
+        "groups": 6, "prep_runs": 6, "memo_hits": 0}
+    assert prep_stats.runs == 6
+    assert runner.programs == len(PROTOCOLS)
+    res = runner.run()
+    res2 = runner.run()  # warm: no re-trace
+    assert engine_stats.traces == len(PROTOCOLS)
+    np.testing.assert_array_equal(res.acc, res2.acc)
+    _assert_equivalent(res, run_pointwise(CNN(), grid, px, py, tx, ty))
+
+
+def test_heterogeneous_grid_matches_loop_sharded(pool):
+    """Same contract on the ``shard_devices`` round-loop path (device
+    axis on the "data" mesh inside each per-protocol program)."""
+    px, py, tx, ty = pool
+    grid = make_grid(_het_base(shard_devices=True), CH, HET_PART,
+                     protocol=PROTOCOLS, partition=("iid", "noniid"))
+    runner = SweepRunner(CNN(), grid, px, py, tx, ty)
+    assert runner.mesh is not None and runner.programs == len(PROTOCOLS)
+    res = runner.run()
+    _assert_equivalent(res, run_pointwise(CNN(), grid, px, py, tx, ty))
+
+
+def test_ragged_n_local_axis_pads_and_masks(pool):
+    """An n_local axis stacks ragged partitions (padded to the grid
+    maximum); the traced per-config batch-draw bound must keep every
+    point bitwise-equal to its per-point loop run."""
+    px, py, tx, ty = pool
+    grid = make_grid(_het_base(), CH, n_local=(60, 100))
+    assert grid.partitioned  # partition axes imply a default base spec
+    runner = SweepRunner(CNN(), grid, px, py, tx, ty)
+    # distinct n_local -> distinct partitions -> two preps
+    assert runner.seed_prep_stats["prep_runs"] == 2
+    res = runner.run()
+    _assert_equivalent(res, run_pointwise(CNN(), grid, px, py, tx, ty))
+
+
+def test_partition_axis_memoizes_seed_prep_per_partition(pool):
+    """(partition x eta) grid: eta replicas inside each partition's seed
+    group are memo hits; exactly #partitions preps run."""
+    from repro.core.seed_prep import prep_stats
+    px, py, tx, ty = pool
+    grid = make_grid(_het_base(), CH, HET_PART,
+                     partition=("iid", "noniid"), eta=(0.01, 0.02))
+    prep_stats.reset()
+    runner = SweepRunner(CNN(), grid, px, py, tx, ty)
+    assert prep_stats.runs == 2
+    assert runner.seed_prep_stats == {
+        "groups": 2, "prep_runs": 2, "memo_hits": 2}
+    # C-order: (iid, .01), (iid, .02), (noniid, .01), (noniid, .02)
+    assert runner.seed_sets[0] is runner.seed_sets[1]
+    assert runner.seed_sets[2] is runner.seed_sets[3]
+    assert runner.seed_sets[0] is not runner.seed_sets[2]
+
+
+def test_protocol_axis_validates_names():
+    with pytest.raises(ValueError, match="mix2lfd.*not a registered"):
+        make_grid(_het_base(), CH, protocol=("fl", "mix2lfd"))
+    with pytest.raises(ValueError, match="not a registered partition"):
+        make_grid(_het_base(), CH, partition=("iid", "pathological"))
+    # unknown axes fail with the full axis listing, not a KeyError
+    with pytest.raises(ValueError, match="unknown field.*partition"):
+        make_grid(_het_base(), CH, protocl=("fl",))
+    assert not (set(PART_SWEEPABLE)
+                & (set(FED_SWEEPABLE) | set(CH_SWEEPABLE)))
+
+
+def test_partitioned_grid_rejects_prepartitioned_data(pool, data):
+    px, py, tx, ty = pool
+    dev_x, dev_y, _, _ = data
+    grid = make_grid(_het_base(), CH, partition=("iid", "noniid"))
+    with pytest.raises(ValueError, match="flat sample pool"):
+        SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
+    plain = make_grid(_het_base(), CH, eta=(0.01,))
+    with pytest.raises(ValueError, match="pre-partitioned"):
+        SweepRunner(CNN(), plain, px, py, tx, ty)
+
+
+def test_heterogeneous_frames_carry_axis_labels(pool):
+    px, py, tx, ty = pool
+    grid = make_grid(_het_base(), CH, HET_PART,
+                     protocol=("fl", "mix2fld"), partition=("iid",))
+    res = run_sweep(CNN(), grid, px, py, tx, ty)
+    rows = res.frames()
+    assert [r["protocol"] for r in rows] == ["fl", "mix2fld"]
+    payload = res.to_payload()
+    assert payload["protocols"] == ["fl", "mix2fld"]
+    assert res.history(1)["protocol"] == "mix2fld"
 
 
 def test_result_frames_and_payload(data):
