@@ -13,7 +13,9 @@ from .common import save_result
 LAMBDAS = (0.001, 0.1, 0.2, 0.3, 0.4, 0.499)
 
 
-def run(n_samples: int = 100, seed: int = 0):
+def run(n_samples: int = 100, seed: int = 0, quick: bool = False):
+    if quick:
+        n_samples = min(n_samples, 40)
     from repro.data import synthetic_images
     key = jax.random.PRNGKey(seed)
     x, y = synthetic_images(key, 4000)
@@ -49,12 +51,14 @@ def run(n_samples: int = 100, seed: int = 0):
         p2 = sample_privacy(s2, raws2)
         tab3[lam] = float((jnp.mean(p1) + jnp.mean(p2)) / 2)
 
-    save_result("privacy_tables", {"mixup_tab2": tab2, "mix2up_tab3": tab3})
+    save_result("privacy_tables", {
+        "mixup_tab2": tab2, "mix2up_tab3": tab3,
+        "n_samples": n_samples, "quick": quick})
     return tab2, tab3
 
 
-def main():
-    tab2, tab3 = run()
+def main(quick=False):
+    tab2, tab3 = run(quick=quick)
     rows = []
     for lam in LAMBDAS:
         rows.append(f"tab2/mixup_lam{lam},0,privacy={tab2[lam]:.3f}")

@@ -18,7 +18,10 @@ Gate modes:
   wall-clock *ratio* so host speed largely cancels);
 * ``max_value`` — fresh <= absolute limit (numeric equivalence drift);
 * ``not_above_baseline`` — fresh <= baseline (counters that must never
-  grow, e.g. memoized prep runs).
+  grow, e.g. memoized prep runs);
+* ``min_delta`` — fresh >= baseline - tol (floors for metrics that can
+  be negative, e.g. log-scale privacy means, where a multiplicative
+  ``min_ratio`` floor would flip direction).
 
 Regime guard: gates only fire when the ``match`` keys (grid geometry,
 quick flag) agree between fresh and baseline — comparing a quick run
@@ -58,6 +61,16 @@ GATES = [
      "mode": "min_ratio", "ratio": 0.99, "match": ("grid_points", "axis")},
     {"file": "seed_prep", "metric": "memo_prep_runs",
      "mode": "not_above_baseline", "match": ("grid_points", "axis")},
+    # link pipeline: the paper's amortized 10-round uplink reduction is
+    # pure payload arithmetic — any drift is a codec accounting bug
+    {"file": "payload_latency", "metric": "uplink_reduction_amortized_10r",
+     "mode": "min_ratio", "ratio": 0.999, "match": ()},
+    # Tables II/III mean sample privacy must not drop (values are
+    # log-scale and can be negative, hence the additive floor)
+    {"file": "privacy_tables", "metric": "tab2_mean",
+     "mode": "min_delta", "tol": 0.05, "match": ("n_samples", "quick")},
+    {"file": "privacy_tables", "metric": "tab3_mean",
+     "mode": "min_delta", "tol": 0.05, "match": ("n_samples", "quick")},
 ]
 
 
@@ -90,6 +103,16 @@ def derive(payload: dict | None) -> dict | None:
             and "grid_points" in payload:
         payload = dict(payload)
         payload["hit_rate"] = payload["memo_hits"] / payload["grid_points"]
+    if "ratios" in payload:
+        payload = dict(payload)
+        payload["uplink_reduction_amortized_10r"] = \
+            payload["ratios"].get("fl_over_mix2fld_amortized_10r")
+    for tab, metric in (("mixup_tab2", "tab2_mean"),
+                        ("mix2up_tab3", "tab3_mean")):
+        if tab in payload and metric not in payload:
+            payload = dict(payload)
+            vals = list(payload[tab].values())
+            payload[metric] = sum(vals) / len(vals)
     return payload
 
 
@@ -110,6 +133,11 @@ def check_gate(gate: dict, fresh: dict, base: dict) -> tuple[bool, str]:
                              f"(floor {floor:g} = {gate['ratio']}x)")
     if mode == "not_above_baseline":
         return fv <= bv, f"{metric}={fv!r} vs baseline {bv!r}"
+    if mode == "min_delta":
+        floor = bv - gate["tol"]
+        return fv >= floor, (f"{metric}={fv:g} vs baseline {bv:g} "
+                             f"(floor {floor:g} = baseline - "
+                             f"{gate['tol']:g})")
     raise ValueError(f"unknown gate mode {mode!r}")
 
 

@@ -8,9 +8,13 @@ and seed_sweep also records the engine's sweep-vs-loop speedup
 (benchmarks/results/sweep_engine.json).
 
 Select a subset by name: ``python -m benchmarks.run seed_sweep kernels``.
+``--quick`` propagates to every module whose ``main`` accepts a
+``quick`` keyword (payload frontier, privacy tables) — the regime CI
+runs and the committed baselines are generated under.
 """
 from __future__ import annotations
 
+import inspect
 import sys
 import traceback
 
@@ -29,7 +33,9 @@ def main(argv=None) -> None:
         ("seed_sweep", bench_seed_sweep),  # (N_S, N_I) grid + engine speedup
         ("scalability", bench_scalability),  # Fig. 3 (quick)
     ]
-    wanted = set(sys.argv[1:] if argv is None else argv)
+    args = list(sys.argv[1:] if argv is None else argv)
+    quick = "--quick" in args
+    wanted = {a for a in args if a != "--quick"}
     if wanted:
         unknown = wanted - {n for n, _ in modules}
         if unknown:
@@ -41,7 +47,10 @@ def main(argv=None) -> None:
     failures = 0
     for name, mod in modules:
         try:
-            for row in mod.main():
+            kwargs = {}
+            if quick and "quick" in inspect.signature(mod.main).parameters:
+                kwargs["quick"] = True
+            for row in mod.main(**kwargs):
                 print(row)
         except Exception:  # noqa: BLE001
             failures += 1

@@ -1,5 +1,11 @@
 """Wireless channel model (Sec. II-C): Rayleigh block fading, SNR-threshold
-decoding, FDMA uplink / multicast downlink, latency and outage."""
+decoding, FDMA uplink / multicast downlink, latency and outage — plus the
+link pipeline (``encode -> channel -> decode``) every device<->server
+transfer routes through."""
 from .model import (ChannelConfig, link_outcomes, round_trip,  # noqa: F401
                     round_trip_traced, simulate_link, slots_needed)
-from .payload import payload_bits, round_slot_plan  # noqa: F401
+from .payload import (CODECS, CodecSpec, RoundPayload,  # noqa: F401
+                      parse_codec, payload_bits, round_payload_bits,
+                      round_slot_plan)
+from .pipeline import (LinkPlan, channel_stage, downlink_gout,  # noqa: F401
+                       downlink_params, make_uplink_stage, uplink_stage)

@@ -1,58 +1,285 @@
-"""Per-protocol payload accounting (Sec. II-C / III-A).
+"""Payload codecs + per-protocol payload accounting (Sec. II-C / III-A).
+
+Uncoded payloads:
 
 FL : B_up = B_dn = b_mod * N_mod
 FD : B_up = B_dn = b_out * N_L^2
 FLD-family: B_up = b_out * N_L^2 (+ b_s * N_s on the first round),
             B_dn = b_mod * N_mod
+
+**Codecs** transform what the uplink actually carries — the link
+pipeline (``channel.pipeline``) runs every device->server transfer
+through ``encode -> channel -> decode``, and this module is the codec
+registry both the traced transforms and the bit accounting read from:
+
+========================  =================================================
+``identity``              the raw payload (no-op transform, bitwise
+                          transparent — the pre-pipeline behaviour)
+``quantize{bits}``        stochastic rounding to ``2^bits - 1`` levels
+                          (Sattler et al., *Communication-Efficient
+                          Federated Distillation*): uplink element width
+                          drops from 32 to ``bits``
+``delta``                 soft-label tables delta-coded against the
+                          receiver-tracked previous global average (the
+                          Sattler delta stage; bit-transparent alone, the
+                          substrate quantized/sparse coding plugs into)
+``dp_gaussian{sigma}``    clip + Gaussian noise from ``core.privacy``
+                          (Hu et al.): a per-round (epsilon, delta) DP
+                          release, accounted by ``GaussianAccountant``
+========================  =================================================
+
+Codecs apply to the *recurring* uplink payload (soft-label tables for
+the FD/FLD family, model parameters for FL); the first-round seed-sample
+bits of the FLD family and the downlink model broadcast stay uncoded.
+``payload_bits``/``round_slot_plan`` take the codec, so decode-slot
+requirements — and therefore simulated channel latency — respond to
+compression.
+
+Protocol names are validated through ``repro.registry`` — the single
+source of truth shared with ``core.protocols`` and ``sweep.axes``, so
+every registered spelling (``"mix2fd"`` included) works here and unknown
+names raise the one shared ValueError.
 """
 from __future__ import annotations
+
+import dataclasses
+import re
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..registry import FLD_FAMILY, canonical_protocol
 
 B_MOD = 32  # bits per weight
 B_OUT = 32  # bits per output element
 
+#: Registered codec family names (the structural axis: programs group by
+#: (protocol, codec) in the sweep engine; numeric parameters batch).
+CODECS = ("identity", "quantize", "delta", "dp_gaussian")
+
+_CODEC_RE = re.compile(r"^(?P<name>[a-z_]+?)(?P<param>\d+(?:\.\d+)?)?$")
+
+
+@dataclasses.dataclass(frozen=True)
+class CodecSpec:
+    """One resolved link codec: family name + numeric parameters.
+
+    Built from a config via :func:`parse_codec` — a parameterized spec
+    string (``"quantize8"``, ``"dp_gaussian0.5"``) overrides the
+    corresponding field default.
+    """
+    name: str = "identity"
+    quant_bits: int = 8
+    dp_sigma: float = 1.0
+    dp_clip: float = 1.0
+    dp_delta: float = 1e-5
+
+    def __post_init__(self):
+        if self.name not in CODECS:
+            raise ValueError(
+                f"unknown codec {self.name!r}; one of {CODECS} "
+                f"(parameterized: 'quantize8', 'dp_gaussian0.5')")
+        if self.name == "quantize" and not 1 <= self.quant_bits <= 32:
+            raise ValueError(
+                f"quantize bits must be in [1, 32], got {self.quant_bits}")
+        if self.name == "dp_gaussian":
+            # validates sigma > 0 and delta in (0, 1) with one message
+            from ..core.privacy import gaussian_epsilon
+            gaussian_epsilon(self.dp_sigma, self.dp_delta, 1)
+
+    @property
+    def levels(self) -> float:
+        """Quantization grid resolution (``2^bits - 1`` steps on [0, 1])."""
+        return float(2 ** self.quant_bits - 1)
+
+    @property
+    def stochastic(self) -> bool:
+        """True iff encoding consumes PRNG randomness (the pipeline only
+        folds a codec key into the round stream for these, keeping
+        identity/delta runs on the pre-pipeline PRNG schedule)."""
+        return self.name in ("quantize", "dp_gaussian")
+
+    def element_bits(self, base_bits: int) -> int:
+        """Bit width of one encoded payload element (``base_bits`` is
+        the uncoded width: B_OUT for output tables, B_MOD for weights)."""
+        return self.quant_bits if self.name == "quantize" else base_bits
+
+
+def parse_codec(spec, *, quant_bits: int = 8, dp_sigma: float = 1.0,
+                dp_clip: float = 1.0, dp_delta: float = 1e-5) -> CodecSpec:
+    """Resolve a codec spec — a :class:`CodecSpec` (passed through), a
+    family name (``"quantize"``), or a parameterized string
+    (``"quantize8"``, ``"dp_gaussian0.5"``) whose suffix overrides the
+    keyword default for that family."""
+    if isinstance(spec, CodecSpec):
+        return spec
+    m = _CODEC_RE.match(str(spec))
+    name = m.group("name") if m else str(spec)
+    param = m.group("param") if m else None
+    if name not in CODECS:
+        # surface the shared message (includes the parameterized forms)
+        return CodecSpec(name=str(spec))
+    if param is not None:
+        if name == "quantize":
+            quant_bits = int(param)
+        elif name == "dp_gaussian":
+            dp_sigma = float(param)
+        else:
+            raise ValueError(
+                f"codec {name!r} takes no numeric parameter "
+                f"(got {spec!r})")
+    return CodecSpec(name=name, quant_bits=quant_bits, dp_sigma=dp_sigma,
+                     dp_clip=dp_clip, dp_delta=dp_delta)
+
+
+# ---------------------------------------------------------------------------
+# Traced codec transforms (the encode/decode halves the pipeline stages
+# compose; numeric parameters may be traced per-config scalars)
+# ---------------------------------------------------------------------------
+
+def stochastic_round(x, key, levels):
+    """Unbiased stochastic rounding of ``x`` in [0, 1] onto a uniform
+    grid of ``levels + 1`` points: E[round(x)] = x, |round(x) - x| <=
+    1/levels.  ``levels`` may be a traced scalar (a swept bit width)."""
+    u = jax.random.uniform(key, x.shape, x.dtype)
+    return jnp.clip(jnp.floor(x * levels + u) / levels, 0.0, 1.0)
+
+
+def quantize_affine(x, key, levels):
+    """Stochastic rounding of an arbitrary-range array: affine-rescale to
+    [0, 1] by the array's own (min, max) — the two scale floats ride
+    along uncoded, a negligible per-leaf overhead — then round."""
+    lo, hi = jnp.min(x), jnp.max(x)
+    scale = jnp.maximum(hi - lo, 1e-12)
+    return lo + stochastic_round((x - lo) / scale, key, levels) * scale
+
+
+def encode_table(spec_name: str, table, key, ref, levels, dp_sigma,
+                 dp_clip):
+    """Encode one device's soft-label table (C, C) for the uplink.
+    ``ref`` is that device's receiver-tracked previous global average
+    (its ``dev_gout`` copy — the server knows it, having observed which
+    downlinks decoded).  Identity returns the input unchanged."""
+    if spec_name == "identity":
+        return table
+    if spec_name == "quantize":
+        return stochastic_round(table, key, levels)  # tables live in [0,1]
+    if spec_name == "delta":
+        return table - ref
+    if spec_name == "dp_gaussian":
+        from ..core.privacy import gaussian_mechanism
+        return gaussian_mechanism(table, key, dp_sigma, dp_clip)
+    raise ValueError(f"unknown codec {spec_name!r}; one of {CODECS}")
+
+
+def decode_table(spec_name: str, coded, ref):
+    """Receiver half for soft-label tables (delta adds the tracked
+    reference back; the lossy codecs decode as-is)."""
+    return coded + ref if spec_name == "delta" else coded
+
+
+def encode_params(spec_name: str, params, key, ref, levels, dp_sigma,
+                  dp_clip):
+    """Encode one device's model parameters (FL uplink).  ``ref`` is the
+    round's starting global model (both ends hold it); per-leaf keys are
+    folded from ``key``."""
+    if spec_name == "identity":
+        return params
+    leaves, treedef = jax.tree.flatten(params)
+    if spec_name == "quantize":
+        out = [quantize_affine(x, jax.random.fold_in(key, i), levels)
+               for i, x in enumerate(leaves)]
+        return jax.tree.unflatten(treedef, out)
+    if spec_name == "delta":
+        return jax.tree.map(jnp.subtract, params, ref)
+    if spec_name == "dp_gaussian":
+        from ..core.privacy import gaussian_mechanism_tree
+        return gaussian_mechanism_tree(params, key, dp_sigma, dp_clip)
+    raise ValueError(f"unknown codec {spec_name!r}; one of {CODECS}")
+
+
+def decode_params(spec_name: str, coded, ref):
+    if spec_name == "delta":
+        return jax.tree.map(jnp.add, coded, ref)
+    return coded
+
+
+# ---------------------------------------------------------------------------
+# Codec-aware bit accounting
+# ---------------------------------------------------------------------------
+
+class RoundPayload(NamedTuple):
+    """Per-device payload bits of one protocol point, with the
+    first-round vs steady-state uplink split explicit (the FLD family's
+    round-1 seed upload is the whole asymmetry — callers that need both
+    must not silently share kwargs between two ``payload_bits`` calls)."""
+    up_first: float
+    up_steady: float
+    dn: float
+
+
+def round_payload_bits(protocol: str, *, n_mod: int, n_labels: int,
+                       sample_bits: int = 0, n_seed: int = 0,
+                       codec="identity") -> RoundPayload:
+    """Per-device (first-round uplink, steady-state uplink, downlink)
+    bits for one (protocol, codec) point."""
+    proto = canonical_protocol(protocol)
+    spec = parse_codec(codec)
+    out_bits = spec.element_bits(B_OUT) * n_labels * n_labels
+    mod_bits = B_MOD * n_mod
+    if proto == "fl":
+        up = spec.element_bits(B_MOD) * n_mod
+        return RoundPayload(up, up, mod_bits)
+    if proto == "fd":
+        # uplink-only codec: the downlink broadcast of G_out stays raw
+        return RoundPayload(out_bits, out_bits,
+                            B_OUT * n_labels * n_labels)
+    assert proto in FLD_FAMILY
+    # round-1 seed samples ride along raw (they are the Mixup-privatized
+    # samples; the codec covers the recurring soft-label stream)
+    return RoundPayload(out_bits + sample_bits * n_seed, out_bits,
+                        mod_bits)
+
 
 def payload_bits(protocol: str, *, n_mod: int, n_labels: int,
                  sample_bits: int = 0, n_seed: int = 0,
-                 first_round: bool = False) -> tuple[float, float]:
+                 first_round: bool = False,
+                 codec="identity") -> tuple[float, float]:
     """Returns (uplink_bits, downlink_bits) per device for one round."""
-    out_bits = B_OUT * n_labels * n_labels
-    mod_bits = B_MOD * n_mod
-    if protocol == "fl":
-        return mod_bits, mod_bits
-    if protocol == "fd":
-        return out_bits, out_bits
-    if protocol in ("fld", "mixfld", "mix2fld"):
-        up = out_bits + (sample_bits * n_seed if first_round else 0)
-        return up, mod_bits
-    raise ValueError(protocol)
+    p = round_payload_bits(protocol, n_mod=n_mod, n_labels=n_labels,
+                           sample_bits=sample_bits, n_seed=n_seed,
+                           codec=codec)
+    return (p.up_first if first_round else p.up_steady), p.dn
 
 
 def round_slot_plan(protocol: str, cfg, *, n_mod: int, n_labels: int,
-                    sample_bits: int = 0, n_seed: int = 0) -> dict:
-    """Host-side per-round link plan for one (protocol, channel) point.
+                    sample_bits: int = 0, n_seed: int = 0,
+                    codec="identity") -> dict:
+    """Host-side per-round link plan for one (protocol, codec, channel)
+    point.
 
     Returns the per-slot success probabilities and the decode-slot
     requirements the traced channel draw (``model.round_trip_traced``)
-    consumes: ``up_slots_first`` covers the seed-carrying first round of
-    the FLD family, ``up_slots`` every later round (identical for FL/FD).
-    The sweep engine stacks these over its config grid so batched
-    SNR/outage draws stay bitwise-equal to the per-point loop.
+    consumes — ``up_slots_first`` covers the seed-carrying first round of
+    the FLD family, ``up_slots`` every later round (identical for FL/FD)
+    — plus the payload bits they were derived from (``up_bits_first`` /
+    ``up_bits`` / ``dn_bits``, for result frames and the bits-vs-accuracy
+    frontier).  The sweep engine stacks these over its config grid so
+    batched SNR/outage draws stay bitwise-equal to the per-point loop;
+    a codec that shrinks the payload shrinks the slot counts, so channel
+    latency responds to compression on both paths.
     """
     from .model import slots_needed
 
     p_up, bits_up = cfg.link_budget(True)
     p_dn, bits_dn = cfg.link_budget(False)
-    up1, dn1 = payload_bits(protocol, n_mod=n_mod, n_labels=n_labels,
-                            sample_bits=sample_bits, n_seed=n_seed,
-                            first_round=True)
-    up, dn = payload_bits(protocol, n_mod=n_mod, n_labels=n_labels,
-                          sample_bits=sample_bits, n_seed=n_seed,
-                          first_round=False)
-    if dn1 != dn:  # the plan carries ONE dn_slots; a round-dependent
-        # downlink payload would silently desync sweeps from the loop path
-        raise ValueError(f"round-dependent downlink payload for "
-                         f"{protocol!r}: {dn1} vs {dn} bits")
+    pay = round_payload_bits(protocol, n_mod=n_mod, n_labels=n_labels,
+                             sample_bits=sample_bits, n_seed=n_seed,
+                             codec=codec)
     return {"p_up": p_up, "p_dn": p_dn,
-            "up_slots_first": slots_needed(up1, bits_up),
-            "up_slots": slots_needed(up, bits_up),
-            "dn_slots": slots_needed(dn, bits_dn)}
+            "up_slots_first": slots_needed(pay.up_first, bits_up),
+            "up_slots": slots_needed(pay.up_steady, bits_up),
+            "dn_slots": slots_needed(pay.dn, bits_dn),
+            "up_bits_first": pay.up_first, "up_bits": pay.up_steady,
+            "dn_bits": pay.dn}

@@ -1,0 +1,189 @@
+"""The link pipeline: every device<->server transfer as one seam.
+
+Historically the transfer logic was spread over four places — the round
+bodies in ``core.protocols`` (loop path) and the grid round step (sweep
+path) each hand-rolled their channel draws and downlink masking, payload
+accounting lived in ``channel.payload``, and the fading model in
+``channel.model``.  This module collapses them into explicit stages that
+BOTH round-loop paths call:
+
+``encode -> channel -> decode``
+
+* :func:`uplink_stage` — encode the per-device uplink payload with the
+  config's codec (``channel.payload`` registry: identity / quantize /
+  delta / dp_gaussian) and decode it server-side.  The payload is the
+  soft-label table for the FD/FLD family and the model parameters for
+  FL; ``identity`` is bitwise transparent and consumes no PRNG, so
+  identity-codec runs reproduce the pre-pipeline histories exactly.
+* :func:`LinkPlan` / :data:`channel_stage` — the host-side link plan
+  (per-slot success probabilities + codec-aware decode-slot counts) and
+  the traced SNR/outage draw it feeds.  Both paths consume the PRNG
+  identically, which the sweep-vs-loop equivalence tests lock down.
+* :func:`downlink_gout` / :func:`downlink_params` — the decode half of
+  the downlink broadcast: per-device success gating, layout-agnostic
+  over a ``(D, ...)`` loop round or a ``(G, D, ...)`` grid round.
+
+Codec numeric parameters (quantization levels, DP sigma/clip) may be
+traced per-config scalars — the sweep engine vmaps the stage over a
+config grid, so ``quant_bits``/``dp_sigma`` sweep inside one compiled
+program while the codec *family* stays a structural (per-program) axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..registry import canonical_protocol
+from .model import round_trip_traced
+from .payload import (CodecSpec, decode_params, decode_table,
+                      encode_params, encode_table, parse_codec,
+                      round_slot_plan)
+
+#: The traced channel draw both paths share (the sweep engine vmaps it
+#: over per-config link budgets) — re-exported here so round bodies
+#: depend on the pipeline, not on ``channel.model`` internals.
+channel_stage = round_trip_traced
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkPlan:
+    """Host-side link plan of one (protocol, codec, channel) point: the
+    per-slot success probabilities, the codec-aware decode-slot
+    requirements, and the payload bits they came from.  ``draw`` runs
+    the channel stage for one round on the loop path; the sweep engine
+    stacks the same fields over its config grid and vmaps
+    :data:`channel_stage` instead."""
+    p_up: float
+    p_dn: float
+    up_slots_first: int
+    up_slots: int
+    dn_slots: int
+    up_bits_first: float
+    up_bits: float
+    dn_bits: float
+    n_links: int
+    t_max_slots: int
+    tau_s: float
+
+    @classmethod
+    def build(cls, protocol: str, ch, *, n_mod: int, n_labels: int,
+              sample_bits: int = 0, n_seed: int = 0,
+              codec="identity") -> "LinkPlan":
+        plan = round_slot_plan(protocol, ch, n_mod=n_mod,
+                               n_labels=n_labels, sample_bits=sample_bits,
+                               n_seed=n_seed, codec=codec)
+        return cls(p_up=plan["p_up"], p_dn=plan["p_dn"],
+                   up_slots_first=plan["up_slots_first"],
+                   up_slots=plan["up_slots"], dn_slots=plan["dn_slots"],
+                   up_bits_first=plan["up_bits_first"],
+                   up_bits=plan["up_bits"], dn_bits=plan["dn_bits"],
+                   n_links=ch.num_devices, t_max_slots=ch.t_max_slots,
+                   tau_s=ch.tau_s)
+
+    def uplink_bits(self, first_round: bool) -> float:
+        return self.up_bits_first if first_round else self.up_bits
+
+    def draw(self, key, first_round: bool) -> dict:
+        """One round's channel outcome (loop path): per-device success
+        masks + the round latency as a host float."""
+        out = channel_stage(
+            key, self.p_up,
+            self.up_slots_first if first_round else self.up_slots,
+            self.p_dn, self.dn_slots, self.n_links, self.t_max_slots,
+            self.tau_s)
+        return {"up_ok": np.asarray(out["up_ok"]),
+                "dn_ok": np.asarray(out["dn_ok"]),
+                "t_up": out["t_up"], "t_dn": out["t_dn"],
+                "latency_s": float(out["latency_s"])}
+
+
+# ---------------------------------------------------------------------------
+# Uplink: encode -> (channel gates the result) -> decode
+# ---------------------------------------------------------------------------
+
+def uplink_stage(spec: CodecSpec, protocol: str, dev_params, favg, key,
+                 dev_gout, g_params, levels=None, dp_sigma=None,
+                 dp_clip=None):
+    """Run one round's uplink payload through the codec for one config.
+
+    ``dev_params``/``favg``/``dev_gout`` are device-axis-leading
+    ``(D, ...)`` values; the sweep engine vmaps this whole function over
+    its grid axis.  Returns ``(dev_params_rx, favg_rx)`` — what the
+    server decodes; the protocol's non-payload half passes through
+    untouched (devices always keep their own exact state — only the
+    transmitted copy is coded).
+
+    References come from receiver-tracked state both ends know: each
+    device's ``dev_gout`` copy for soft-label delta coding, the round's
+    starting global model for FL.  ``levels``/``dp_sigma``/``dp_clip``
+    default to the spec's own (Python-float) parameters; the sweep
+    engine passes traced per-config scalars instead.
+
+    ``identity`` short-circuits before any PRNG use and returns its
+    inputs unchanged — bitwise equal to the pre-pipeline round bodies.
+    """
+    proto = canonical_protocol(protocol)
+    name = spec.name
+    if name == "identity":
+        return dev_params, favg
+    levels = spec.levels if levels is None else levels
+    dp_sigma = spec.dp_sigma if dp_sigma is None else dp_sigma
+    dp_clip = spec.dp_clip if dp_clip is None else dp_clip
+    if proto == "fl":
+        num_dev = jax.tree.leaves(dev_params)[0].shape[0]
+        dkeys = jax.random.split(key, num_dev)
+        coded = jax.vmap(
+            lambda p, k: encode_params(name, p, k, g_params, levels,
+                                       dp_sigma, dp_clip))(dev_params,
+                                                           dkeys)
+        rx = jax.vmap(lambda p: decode_params(name, p, g_params))(coded)
+        return rx, favg
+    dkeys = jax.random.split(key, favg.shape[0])
+    coded = jax.vmap(
+        lambda f, k, r: encode_table(name, f, k, r, levels, dp_sigma,
+                                     dp_clip))(favg, dkeys, dev_gout)
+    rx = jax.vmap(lambda c, r: decode_table(name, c, r))(coded, dev_gout)
+    return dev_params, rx
+
+
+def make_uplink_stage(codec, protocol: str):
+    """Close the static halves (codec family, protocol) over
+    :func:`uplink_stage` — the shape both round bodies build once and
+    call per round."""
+    spec = parse_codec(codec)
+
+    def stage(dev_params, favg, key, dev_gout, g_params, levels=None,
+              dp_sigma=None, dp_clip=None):
+        return uplink_stage(spec, protocol, dev_params, favg, key,
+                            dev_gout, g_params, levels, dp_sigma, dp_clip)
+
+    return stage
+
+
+# ---------------------------------------------------------------------------
+# Downlink: broadcast decode, gated per device by dn_ok
+# ---------------------------------------------------------------------------
+
+def downlink_gout(dev_gout, gout, dn_ok):
+    """Deliver the new G_out table to the devices whose downlink decoded;
+    the rest keep their previous copy.  Layout-agnostic: ``dev_gout``
+    ``(..., D, C, C)``, ``gout`` ``(..., C, C)``, ``dn_ok`` ``(..., D)``
+    — the loop path passes ``(D, ...)``, the grid path ``(G, D, ...)``."""
+    return jnp.where(dn_ok[..., None, None], jnp.expand_dims(gout, -3),
+                     dev_gout)
+
+
+def downlink_params(dev_params, g_params, dn_ok):
+    """Deliver the global model to the devices whose downlink decoded
+    (FL / FLD-family downlink).  ``dev_params`` leaves ``(..., D, *p)``,
+    ``g_params`` leaves ``(..., *p)``, ``dn_ok`` ``(..., D)``."""
+    batch_ndim = dn_ok.ndim  # leading dims incl. the device axis
+
+    def leaf(dp, gp):
+        mask = dn_ok.reshape(dn_ok.shape + (1,) * (dp.ndim - batch_ndim))
+        return jnp.where(mask, jnp.expand_dims(gp, batch_ndim - 1), dp)
+
+    return jax.tree.map(leaf, dev_params, g_params)

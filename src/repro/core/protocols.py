@@ -43,18 +43,23 @@ try:  # jax >= 0.6 graduated shard_map out of experimental
 except ImportError:
     from jax.experimental.shard_map import shard_map
 
-from ..channel import ChannelConfig, payload_bits, round_trip, round_trip_traced
+from ..channel import ChannelConfig
+from ..channel.payload import CodecSpec, parse_codec
+from ..channel.pipeline import (LinkPlan, channel_stage, downlink_gout,
+                                downlink_params, make_uplink_stage,
+                                uplink_stage)
 from ..launch.mesh import make_device_mesh
 from ..launch.sharding import federated_pspecs
+# the protocol registry is the single source of truth for names; the
+# historical PROTOCOLS / FLD_FAMILY module attributes stay as re-exports
+from ..registry import (FLD_FAMILY, PROTOCOLS,  # noqa: F401
+                        canonical_protocol)
 from .conversion import output_to_model, output_to_model_steps
 from .losses import fd_loss
 from .outputs import label_averaged_outputs
+from .privacy import GaussianAccountant
 from .seed_prep import (collect_seeds, prepare_seeds,  # noqa: F401
                         summarize_seeds)
-
-PROTOCOLS = ("fl", "fd", "fld", "mixfld", "mix2fld")
-# protocols that upload (mixed) seed samples and convert outputs to a model
-FLD_FAMILY = ("fld", "mixfld", "mix2fld")
 
 
 @dataclasses.dataclass
@@ -82,13 +87,19 @@ class FederatedConfig:
     #                                arrays on history["seed_arrays"]
     #                                (histories otherwise carry only the
     #                                summarize_seeds metadata)
+    codec: str = "identity"        # link codec: family name or spec string
+    #                                ("quantize8", "dp_gaussian0.5") from
+    #                                the channel.payload registry
+    quant_bits: int = 8            # quantize codec: bits per element
+    dp_sigma: float = 1.0          # dp_gaussian codec: noise multiplier
+    dp_clip: float = 1.0           # dp_gaussian codec: L2 sensitivity clip
+    dp_delta: float = 1e-5         # dp_gaussian codec: DP delta
 
     def __post_init__(self):
         # data-dependent bounds (n_seed vs the per-device sample count)
         # are checked where the data is first seen: seed_prep.collect_seeds
-        if self.protocol not in PROTOCOLS:
-            raise ValueError(f"unknown protocol {self.protocol!r}; "
-                             f"one of {PROTOCOLS}")
+        self.protocol = canonical_protocol(self.protocol)
+        self.codec_spec()  # codec fields fail at config time, not round 1
         if self.n_seed < 1:
             raise ValueError(f"n_seed must be >= 1, got {self.n_seed}")
         if self.n_inverse < 1:
@@ -96,6 +107,14 @@ class FederatedConfig:
         if not 0.0 <= self.lam <= 1.0:
             raise ValueError(f"lam is a mixing ratio in [0, 1], "
                              f"got {self.lam}")
+
+    def codec_spec(self) -> CodecSpec:
+        """The resolved link codec (``codec`` spec string + the numeric
+        parameter fields; a parameterized spec like ``"quantize4"``
+        overrides the matching field)."""
+        return parse_codec(self.codec, quant_bits=self.quant_bits,
+                           dp_sigma=self.dp_sigma, dp_clip=self.dp_clip,
+                           dp_delta=self.dp_delta)
 
 
 # ---------------------------------------------------------------------------
@@ -240,6 +259,11 @@ class FederatedTrainer:
 
         self._accuracy = jax.jit(accuracy)
 
+        # link-pipeline uplink codec stage (identity: bitwise pass-through
+        # that consumes no PRNG — the pre-pipeline behaviour)
+        self._codec = fc.codec_spec()
+        self._uplink_stage = make_uplink_stage(self._codec, fc.protocol)
+
         self.mesh = None
         if not fc.shard_devices:
             self._local_train = jax.jit(vmapped)
@@ -292,10 +316,24 @@ class FederatedTrainer:
         gout_prev = None
         g_prev = None
 
+        # ---- link pipeline plan: codec-aware payload bits -> slot counts
+        spec = self._codec
+        plan = LinkPlan.build(proto, ch, n_mod=n_mod, n_labels=C,
+                              sample_bits=fc.sample_bits,
+                              n_seed=fc.n_seed, codec=spec)
+        acct = (GaussianAccountant(spec.dp_sigma, spec.dp_delta)
+                if spec.name == "dp_gaussian" else None)
+
         seeds = None
         history = {"acc": [], "round_latency_s": [], "compute_s": [],
                    "cum_time_s": [], "loss": [], "uplink_ok": [],
-                   "converged_round": None, "protocol": proto}
+                   "converged_round": None, "protocol": proto,
+                   "codec": spec.name,
+                   "uplink_bits_first": plan.up_bits_first,
+                   "uplink_bits": plan.up_bits,
+                   "downlink_bits": plan.dn_bits}
+        if acct is not None:
+            history["dp_epsilon"] = []
         cum_time = 0.0
 
         dev_x = jnp.asarray(dev_x)
@@ -318,26 +356,30 @@ class FederatedTrainer:
                 seeds = self.collect_seeds(dev_x, dev_y,
                                            jax.random.fold_in(kr, 2))
 
-            # ---- channel ----
-            first = p == 1
-            up_bits, dn_bits = payload_bits(
-                proto, n_mod=n_mod, n_labels=C, sample_bits=fc.sample_bits,
-                n_seed=fc.n_seed, first_round=first)
-            link = round_trip(jax.random.fold_in(kr, 3), ch, up_bits, dn_bits)
-            up_ok = np.asarray(link["up_ok"])
-            dn_ok = np.asarray(link["dn_ok"])
+            # ---- link pipeline: encode -> channel -> decode ----
+            link = plan.draw(jax.random.fold_in(kr, 3), first_round=p == 1)
+            up_ok = link["up_ok"]
+            dn_ok = link["dn_ok"]
             w = up_ok.astype(np.float32) * dev_x.shape[1]  # |S_d| weights
+            # uplink codec: what the server receives (identity passes the
+            # arrays through untouched; stochastic codecs draw from the
+            # dedicated fold_in(kr, 5) stream, leaving every pre-existing
+            # PRNG consumer bit-identical)
+            dev_params_rx, favg_rx = self._uplink_stage(
+                dev_params, favg, jax.random.fold_in(kr, 5), dev_gout,
+                g_params)
 
             # ---- aggregation + (FLD) conversion ----
             if proto == "fl":
                 if up_ok.any():
-                    g_params = self._weighted_avg(dev_params, jnp.asarray(w))
+                    g_params = self._weighted_avg(dev_params_rx,
+                                                  jnp.asarray(w))
             else:
                 if up_ok.any():
                     # eq. 2 averaged over the successful device set (psum
                     # collective on the sharded path)
                     gout = self._gout_update(
-                        favg, cnt, jnp.asarray(up_ok, jnp.float32))
+                        favg_rx, cnt, jnp.asarray(up_ok, jnp.float32))
                 if proto != "fd":
                     g_params, _ = output_to_model(
                         self.model.apply, g_params, seeds["train_x"],
@@ -345,18 +387,17 @@ class FederatedTrainer:
                         fc.server_batch, fc.eta, fc.beta,
                         jax.random.fold_in(kr, 4))
 
-            # ---- downlink (gated per device by dn_ok) ----
+            # ---- downlink stage (gated per device by dn_ok) ----
             mask = jnp.asarray(dn_ok)
-            dev_gout = jnp.where(mask[:, None, None], gout[None], dev_gout)
+            dev_gout = downlink_gout(dev_gout, gout, mask)
             if proto != "fd":
-                dev_params = jax.tree.map(
-                    lambda dp, gp: jnp.where(
-                        mask.reshape((D,) + (1,) * (dp.ndim - 1)),
-                        jnp.broadcast_to(gp, dp.shape), dp),
-                    dev_params, g_params)
+                dev_params = downlink_params(dev_params, g_params, mask)
 
             compute_s = time.perf_counter() - t0
             cum_time += compute_s + link["latency_s"]
+            if acct is not None:
+                acct.step()
+                history["dp_epsilon"].append(acct.epsilon())
 
             # ---- evaluation of the reference device (device 0) ----
             ref = jax.tree.map(lambda dp: dp[0], dev_params)
@@ -394,6 +435,8 @@ class FederatedTrainer:
         # serialized results stay small; opt back into the raw arrays
         # with FederatedConfig.keep_seed_arrays
         history["seeds"] = summarize_seeds(seeds)
+        if acct is not None:
+            history["dp"] = acct.ledger()
         if fc.keep_seed_arrays:
             history["seed_arrays"] = seeds
         history["final_acc"] = history["acc"][-1]
@@ -413,7 +456,8 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
                          per_config_data: bool = False,
                          local_train_fn: Optional[Callable] = None,
                          weighted_avg_fn: Optional[Callable] = None,
-                         gout_update_fn: Optional[Callable] = None):
+                         gout_update_fn: Optional[Callable] = None,
+                         codec: str = "identity"):
     """Pure per-round protocol step batched over a leading config-grid
     axis — ``FederatedTrainer.run``'s round body with every host decision
     (success gating, convergence bookkeeping) expressed as masked lax ops,
@@ -457,9 +501,18 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
     the vmapped single-chip forms; the sweep engine substitutes
     shard_mapped variants (device axis on the "data" mesh) for
     ``shard_devices`` grids.
+
+    ``codec`` is the link codec *family* of this program (a structural
+    axis: the sweep engine compiles one program per (protocol, codec)
+    group).  Non-identity codecs read their numeric parameters from
+    ``consts`` — ``q_levels``/``dp_sigma``/``dp_clip``, each (G,) — so
+    quantization bit widths and DP noise sweep inside one program; the
+    identity codec touches neither consts nor PRNG, keeping the compiled
+    graph exactly the pre-pipeline one.
     """
-    proto = protocol
+    proto = canonical_protocol(protocol)
     D, C = num_devices, num_classes
+    codec_spec = parse_codec(codec)
 
     if local_train_fn is None:
         local_train_fn = make_grid_local_train(model_apply, C, local_iters,
@@ -489,8 +542,11 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
             [x.reshape(x.shape[0], -1) for x in jax.tree.leaves(tree)],
             axis=1)
 
-    channel_fn = jax.vmap(round_trip_traced,
+    channel_fn = jax.vmap(channel_stage,
                           in_axes=(0, 0, 0, 0, 0, None, None, None))
+    codec_fn = jax.vmap(
+        lambda dp, fa, k, dg, gp, lv, sg, cl: uplink_stage(
+            codec_spec, proto, dp, fa, k, dg, gp, lv, sg, cl))
 
     def round_step(state, xs):
         p = xs["p"]
@@ -516,16 +572,29 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
             consts["n_local"].astype(jnp.float32)[:, None]
         any_up = jnp.any(up_ok, axis=1)              # (G,)
 
+        # ---- uplink codec stage (same stage function as the loop path,
+        # vmapped over the grid; identity skips it entirely so identity
+        # programs stay graph-identical to the pre-pipeline step) ----
+        if codec_spec.name == "identity":
+            dev_params_rx, favg_rx = dev_params, favg
+        else:
+            kc = jax.vmap(lambda k: jax.random.fold_in(k, 5))(kr)
+            dev_params_rx, favg_rx = codec_fn(
+                dev_params, favg, kc, state["dev_gout"],
+                state["g_params"], consts["q_levels"],
+                consts["dp_sigma"], consts["dp_clip"])
+
         # ---- aggregation + (FLD) conversion, success-gated by where ----
         g_params, gout = state["g_params"], state["gout"]
         if proto == "fl":
-            new_g = weighted_avg_fn(dev_params, w)
+            new_g = weighted_avg_fn(dev_params_rx, w)
             g_params = jax.tree.map(
                 lambda n_, o: jnp.where(
                     any_up.reshape((-1,) + (1,) * (o.ndim - 1)), n_, o),
                 new_g, g_params)
         else:
-            new_gout = gout_update_fn(favg, cnt, up_ok.astype(jnp.float32))
+            new_gout = gout_update_fn(favg_rx, cnt,
+                                      up_ok.astype(jnp.float32))
             gout = jnp.where(any_up[:, None, None], new_gout, gout)
             if proto != "fd":
                 g_params, _ = conv_fn(
@@ -533,15 +602,10 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
                     xs["conv_keys"], consts["s_iters"], consts["n_train"],
                     consts["eta"], consts["beta"])
 
-        # ---- downlink (gated per device by dn_ok) ----
-        dev_gout = jnp.where(dn_ok[:, :, None, None], gout[:, None],
-                             state["dev_gout"])
+        # ---- downlink stage (gated per device by dn_ok) ----
+        dev_gout = downlink_gout(state["dev_gout"], gout, dn_ok)
         if proto != "fd":
-            dev_params = jax.tree.map(
-                lambda dp, gp: jnp.where(
-                    dn_ok.reshape(dn_ok.shape + (1,) * (dp.ndim - 2)),
-                    jnp.expand_dims(gp, 1), dp),
-                dev_params, g_params)
+            dev_params = downlink_params(dev_params, g_params, dn_ok)
 
         # ---- evaluation of the reference device (device 0) ----
         ref = jax.tree.map(lambda dp: dp[:, 0], dev_params)

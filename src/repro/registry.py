@@ -1,0 +1,44 @@
+"""The protocol registry: ONE source of truth for protocol names.
+
+Every layer that dispatches on a protocol name — the payload accounting
+in ``channel.payload``, the round bodies in ``core.protocols``, the
+sweep-axis validation in ``sweep.axes`` — imports this module, so the
+set of valid names (and the ValueError an invalid name raises) cannot
+drift between layers.  Historically it did: ``payload_bits`` accepted
+``"mixfld"`` while docs and the ROADMAP spelled the same protocol
+``"mix2fd"`` (uplink Mixup, FD-style upload, no inverse-Mixup), and an
+unknown name raised a bare ``ValueError(protocol)`` in one layer and a
+descriptive one in another.
+
+``canonical_protocol`` resolves aliases and is the single gate: all
+registered spellings work everywhere, all unknown names fail everywhere
+with the same message listing the valid set.
+"""
+from __future__ import annotations
+
+#: Canonical protocol names, in the paper's presentation order.
+PROTOCOLS = ("fl", "fd", "fld", "mixfld", "mix2fld")
+
+#: Alternate spellings -> canonical name.  "mix2fd" is the ROADMAP's
+#: spelling of the one-way-Mixup FLD variant ("mixfld" in the paper's
+#: tables): Mixup'd samples cross the uplink FD-style, but no two-way
+#: inverse-Mixup happens server-side.
+PROTOCOL_ALIASES = {"mix2fd": "mixfld"}
+
+#: Protocols that upload (mixed) seed samples on the first round and run
+#: the eq. (5) output-to-model conversion server-side.
+FLD_FAMILY = ("fld", "mixfld", "mix2fld")
+
+
+def canonical_protocol(name: str) -> str:
+    """Resolve ``name`` (canonical or alias) to its canonical protocol
+    name; unknown names raise the one shared ValueError listing the
+    registered set."""
+    if name in PROTOCOLS:
+        return name
+    alias = PROTOCOL_ALIASES.get(name)
+    if alias is not None:
+        return alias
+    raise ValueError(
+        f"unknown protocol {name!r}; one of {PROTOCOLS} "
+        f"(aliases: {PROTOCOL_ALIASES})")

@@ -9,9 +9,14 @@ kinds of axis exist:
   :data:`CH_SWEEPABLE`) — fields whose variation the compiled sweep
   expresses as a per-config scalar or absorbs host-side (seed budgets,
   step sizes, SNR fields);
-* **the protocol axis** (``protocol``) — protocols differ *structurally*
-  (their round bodies branch), so the engine groups points by protocol
-  and compiles one vmapped ``lax.scan`` program per distinct protocol;
+* **structural axes** (:data:`GROUP_SWEEPABLE`: ``protocol``,
+  ``codec``) — protocols differ *structurally* (their round bodies
+  branch) and so do link-codec families (identity skips the codec stage
+  entirely; quantize/delta/dp_gaussian insert different transforms), so
+  the engine groups points by (protocol, codec family) and compiles one
+  vmapped ``lax.scan`` program per distinct group.  A codec's *numeric*
+  parameters (``quant_bits``, ``dp_sigma``, ``dp_clip``) are ordinary
+  traced per-config scalars and batch inside a program;
 * **partition axes** (:data:`PART_SWEEPABLE`: ``partition``, ``alpha``,
   ``n_local``) — which device partition a point trains on.  Each grid
   point carries a :class:`PartitionSpec`; the runner builds each
@@ -30,14 +35,19 @@ import itertools
 from typing import Optional
 
 from ..channel import ChannelConfig
-from ..core.protocols import PROTOCOLS, FederatedConfig
+from ..channel.payload import CODECS, parse_codec
+from ..core.protocols import FederatedConfig
 from ..core.seed_prep import seed_fields_key
 from ..data.partition import PARTITION_SCHEMES, PartitionSpec
+# protocol names come from the one shared registry (the same module
+# channel.payload and core.protocols validate against)
+from ..registry import PROTOCOLS, canonical_protocol
 
 # Traced per-config scalars, or host-absorbed before compilation.
 FED_SWEEPABLE = frozenset({
     "eta", "beta", "eps", "lam", "n_seed", "n_inverse", "server_iters",
-    "sample_bits", "seed",
+    "sample_bits", "seed", "quant_bits", "dp_sigma", "dp_clip",
+    "dp_delta",
 })
 # Channel fields only enter via the host-computed link budget
 # (per-slot success probability + decode-slot counts), so any of them
@@ -50,8 +60,9 @@ CH_SWEEPABLE = frozenset({
 # point trains on (stacked per-config, ragged n_local padded + masked).
 PART_SWEEPABLE = frozenset({"partition", "alpha", "n_local"})
 _PART_FIELD = {"partition": "scheme", "alpha": "alpha", "n_local": "n_local"}
-# The protocol axis groups points into stacked per-protocol programs.
-GROUP_SWEEPABLE = frozenset({"protocol"})
+# Structural axes group points into stacked per-(protocol, codec-family)
+# programs; both are FederatedConfig fields, so they route like FED axes.
+GROUP_SWEEPABLE = frozenset({"protocol", "codec"})
 
 ALL_SWEEPABLE = FED_SWEEPABLE | CH_SWEEPABLE | PART_SWEEPABLE | \
     GROUP_SWEEPABLE
@@ -119,6 +130,18 @@ class SweepGrid:
             groups.setdefault(fc.protocol, []).append(g)
         return groups
 
+    def program_groups(self) -> dict:
+        """{(protocol, codec family): [point indices]} in point order —
+        the engine's compilation unit.  The codec *family* is structural
+        (it changes which transforms the round body contains); its
+        numeric parameters stay traced, so e.g. a ``quant_bits`` axis
+        batches inside one quantize program."""
+        groups: dict = {}
+        for g, (fc, _) in enumerate(self.points):
+            groups.setdefault((fc.protocol, fc.codec_spec().name),
+                              []).append(g)
+        return groups
+
 
 def _validate_axis(name: str, values: tuple):
     if name not in ALL_SWEEPABLE:
@@ -136,10 +159,21 @@ def _validate_axis(name: str, values: tuple):
         raise ValueError(f"axis {name!r} has no values")
     if name == "protocol":
         for v in values:
-            if v not in PROTOCOLS:
+            try:
+                canonical_protocol(v)
+            except ValueError as e:
+                # the one shared registry message, prefixed with the axis
                 raise ValueError(
                     f"protocol axis value {v!r} is not a registered "
-                    f"protocol; one of {PROTOCOLS}")
+                    f"protocol: {e}") from None
+    if name == "codec":
+        for v in values:
+            try:
+                parse_codec(v)
+            except ValueError as e:
+                raise ValueError(
+                    f"codec axis value {v!r} is not a registered codec: "
+                    f"{e} (families: {CODECS})") from None
     if name == "partition":
         for v in values:
             if v not in PARTITION_SCHEMES:
@@ -182,7 +216,7 @@ def make_grid(base_fc: FederatedConfig,
                 ch_kw[name] = value
             elif name in PART_SWEEPABLE:
                 pt_kw[_PART_FIELD[name]] = value
-            else:  # FED_SWEEPABLE | {"protocol"}: FederatedConfig fields
+            else:  # FED_SWEEPABLE | GROUP_SWEEPABLE: FederatedConfig fields
                 fc_kw[name] = value
         points.append((dataclasses.replace(base_fc, **fc_kw),
                        dataclasses.replace(base_ch, **ch_kw)))

@@ -62,6 +62,7 @@ except ImportError:
     from jax.experimental.shard_map import shard_map
 
 from ..channel import round_slot_plan
+from ..core.privacy import gaussian_epsilon
 from ..core.protocols import (FLD_FAMILY, FederatedTrainer,
                               gout_update_psum, make_grid_local_train,
                               make_grid_round_step, weighted_avg_psum)
@@ -204,10 +205,12 @@ class _ProtocolProgram:
     partitions."""
 
     def __init__(self, model, grid: SweepGrid, proto: str, idxs, parts,
-                 test_x, test_y, memo: SeedPrepMemo, mesh):
+                 test_x, test_y, memo: SeedPrepMemo, mesh,
+                 codec: str = "identity"):
         engine_stats.programs += 1
         fc0, ch0 = grid.points[idxs[0]]
         self.idxs = idxs
+        self.codec = codec
         points = [grid.points[i] for i in idxs]
         G, D, C, R = len(idxs), fc0.num_devices, fc0.num_classes, \
             fc0.max_rounds
@@ -220,9 +223,11 @@ class _ProtocolProgram:
         # a seed key — and, across partitions, distinct points sharing
         # one partition's content — share one result object ----
         run_keys, inits, conv_keys, seed_sets = [], [], [], []
-        plans = {"p_up": [], "p_dn": [], "up1": [], "up": [], "dn": []}
+        plans = {"p_up": [], "p_dn": [], "up1": [], "up": [], "dn": [],
+                 "up_bits1": [], "up_bits": []}
+        specs = [fc.codec_spec() for fc, _ in points]
         k_max = max(fc.server_iters for fc, _ in points)
-        for (fc, ch), (px, py) in zip(points, parts):
+        for (fc, ch), spec, (px, py) in zip(points, specs, parts):
             kinit, key = jax.random.split(jax.random.PRNGKey(fc.seed))
             run_keys.append(np.asarray(key))
             params = model.init(kinit)
@@ -240,12 +245,14 @@ class _ProtocolProgram:
                 conv_keys.append(ck)
             plan = round_slot_plan(
                 proto, ch, n_mod=n_mod, n_labels=C,
-                sample_bits=fc.sample_bits, n_seed=fc.n_seed)
+                sample_bits=fc.sample_bits, n_seed=fc.n_seed, codec=spec)
             plans["p_up"].append(plan["p_up"])
             plans["p_dn"].append(plan["p_dn"])
             plans["up1"].append(plan["up_slots_first"])
             plans["up"].append(plan["up_slots"])
             plans["dn"].append(plan["dn_slots"])
+            plans["up_bits1"].append(plan["up_bits_first"])
+            plans["up_bits"].append(plan["up_bits"])
 
         g_params = jax.tree.map(lambda *ls: jnp.stack(ls), *inits)
         n_params = sum(p[0].size for p in jax.tree.leaves(g_params))
@@ -262,6 +269,23 @@ class _ProtocolProgram:
             "p_up": jnp.asarray(plans["p_up"], jnp.float32),
             "p_dn": jnp.asarray(plans["p_dn"], jnp.float32),
         }
+        if codec != "identity":
+            # codec numeric parameters batch as traced per-config scalars
+            # (the codec *family* is this program's structural identity)
+            consts["q_levels"] = jnp.asarray(
+                [s.levels for s in specs], jnp.float32)
+            consts["dp_sigma"] = jnp.asarray(
+                [s.dp_sigma for s in specs], jnp.float32)
+            consts["dp_clip"] = jnp.asarray(
+                [s.dp_clip for s in specs], jnp.float32)
+
+        # per-point link accounting for result frames (host floats; the
+        # bits -> slots mapping already shaped the compiled plans above)
+        self.up_bits_first = np.asarray(plans["up_bits1"], np.float64)
+        self.up_bits_steady = np.asarray(plans["up_bits"], np.float64)
+        self.dp_epsilon = np.asarray(
+            [gaussian_epsilon(s.dp_sigma, s.dp_delta, R)
+             if s.name == "dp_gaussian" else np.nan for s in specs])
         if proto in FLD_FAMILY:
             sx, sy, n_train = _pad_seed_sets(seed_sets, C)
             consts["seeds_x"] = jnp.asarray(sx)
@@ -314,7 +338,7 @@ class _ProtocolProgram:
             t_max_slots=ch0.t_max_slots, tau_s=ch0.tau_s,
             dev_x=dev_x, dev_y=dev_y, test_x=jnp.asarray(test_x),
             test_y=jnp.asarray(test_y), consts=consts,
-            per_config_data=per_config, **fns)
+            per_config_data=per_config, codec=codec, **fns)
 
         def _sweep_program(state, xs):
             engine_stats.traces += 1  # Python side effect: trace-counted
@@ -369,11 +393,11 @@ class SweepRunner:
 
         memo = SeedPrepMemo()
         self._programs = []          # (protocol, idxs, program)
-        for proto, idxs in grid.protocol_groups().items():
+        for (proto, codec), idxs in grid.program_groups().items():
             prog = _ProtocolProgram(
                 model, grid, proto, idxs,
                 [self.partitions[i] for i in idxs],
-                test_x, test_y, memo, self.mesh)
+                test_x, test_y, memo, self.mesh, codec=codec)
             self._programs.append((proto, idxs, prog))
         self.programs = len(self._programs)
 
@@ -403,6 +427,9 @@ class SweepRunner:
         latency = np.zeros((G, R), np.float64)
         up_ok = np.zeros((G, R), np.int32)
         converged = np.zeros((G,), np.int32)
+        up_bits_first = np.zeros((G,), np.float64)
+        up_bits = np.zeros((G,), np.float64)
+        dp_epsilon = np.full((G,), np.nan)
         t0 = time.perf_counter()
         for proto, idxs, prog in self._programs:
             state, out = prog.run()
@@ -412,10 +439,15 @@ class SweepRunner:
             latency[rows] = out["latency_s"].T.astype(np.float64)
             up_ok[rows] = out["up_ok"].T
             converged[rows] = np.asarray(state["converged"])
+            up_bits_first[rows] = prog.up_bits_first
+            up_bits[rows] = prog.up_bits_steady
+            dp_epsilon[rows] = prog.dp_epsilon
         wall = time.perf_counter() - t0
         return SweepResult(
             grid=self.grid, acc=acc, loss=loss, latency_s=latency,
-            up_ok=up_ok, converged=converged, wall_s=wall)
+            up_ok=up_ok, converged=converged, wall_s=wall,
+            up_bits_first=up_bits_first, up_bits=up_bits,
+            dp_epsilon=dp_epsilon)
 
 
 def run_sweep(model, grid: SweepGrid, dev_x, dev_y, test_x, test_y

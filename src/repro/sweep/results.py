@@ -30,6 +30,12 @@ class SweepResult:
     up_ok: np.ndarray            # (G, R) int
     converged: np.ndarray        # (G,) int32, 0 = never
     wall_s: float
+    # per-point link accounting (codec-aware; None on results built by
+    # older callers): uplink payload bits first/steady rounds, and the
+    # cumulative DP epsilon after R rounds (NaN at non-DP points)
+    up_bits_first: np.ndarray | None = None   # (G,)
+    up_bits: np.ndarray | None = None         # (G,)
+    dp_epsilon: np.ndarray | None = None      # (G,)
 
     @property
     def rounds(self) -> int:
@@ -56,12 +62,20 @@ class SweepResult:
             "protocol": self.grid.points[g][0].protocol,
         }
 
+    def uplink_bits_total(self, g: int) -> float | None:
+        """Per-device uplink bits over the whole run: one first round +
+        (R - 1) steady-state rounds of point ``g``."""
+        if self.up_bits is None:
+            return None
+        return float(self.up_bits_first[g] +
+                     (self.rounds - 1) * self.up_bits[g])
+
     def frames(self) -> list[dict]:
         """One JSON-ready row per grid point: axis values + summary."""
         rows = []
         for g, label in enumerate(self.grid.labels()):
             h = self.history(g)
-            rows.append({
+            row = {
                 "point": self.grid.point_name(g, label),
                 **label,
                 "final_acc": h["final_acc"],
@@ -69,7 +83,15 @@ class SweepResult:
                 "round1_latency_s": h["round_latency_s"][0],
                 "converged_round": h["converged_round"],
                 "acc": h["acc"],
-            })
+            }
+            if self.up_bits is not None:
+                row["uplink_bits"] = float(self.up_bits[g])
+                row["uplink_bits_total"] = self.uplink_bits_total(g)
+                eps = float(self.dp_epsilon[g])
+                # NaN -> None: non-DP points have no finite epsilon, and
+                # the result payload stays strict-JSON serializable
+                row["dp_epsilon"] = None if np.isnan(eps) else eps
+            rows.append(row)
         return rows
 
     def to_payload(self) -> dict:

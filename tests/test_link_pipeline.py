@@ -1,0 +1,259 @@
+"""Link pipeline seam: codec registry, codec-aware payload accounting,
+encode/decode round trips, the DP accountant, and the shared protocol
+registry (tests/test_protocols.py's goldens lock the identity codec to
+the pre-pipeline histories on all five protocols; tests/test_sweep.py
+locks the two round-loop paths together)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.channel import ChannelConfig
+from repro.channel.payload import (B_MOD, B_OUT, CODECS, CodecSpec,
+                                   parse_codec, payload_bits,
+                                   round_payload_bits, round_slot_plan)
+from repro.channel.pipeline import (LinkPlan, downlink_gout,
+                                    downlink_params, uplink_stage)
+from repro.core.privacy import (GaussianAccountant, gaussian_epsilon,
+                                gaussian_mechanism)
+from repro.core.protocols import FederatedConfig
+from repro.registry import (FLD_FAMILY, PROTOCOLS, canonical_protocol)
+
+# paper geometry: MNIST MLP weights, 10 classes, 8-bit 28x28 seed samples
+N_MOD, N_L, B_S, N_S = 12544, 10, 6272, 10
+
+
+# ---------------------------------------------------------------------------
+# Satellite: one protocol registry, shared by every layer
+# ---------------------------------------------------------------------------
+
+def test_registry_aliases_resolve_everywhere():
+    assert canonical_protocol("mix2fd") == "mixfld"
+    for p in PROTOCOLS:
+        assert canonical_protocol(p) == p
+    # payload accounting accepts the alias spelling...
+    assert payload_bits("mix2fd", n_mod=N_MOD, n_labels=N_L) == \
+        payload_bits("mixfld", n_mod=N_MOD, n_labels=N_L)
+    # ...and so does the trainer config (canonicalized on construction)
+    assert FederatedConfig(protocol="mix2fd").protocol == "mixfld"
+
+
+def test_registry_unknown_name_same_error_everywhere():
+    for raiser in (
+            lambda: canonical_protocol("mix2lfd"),
+            lambda: payload_bits("mix2lfd", n_mod=1, n_labels=1),
+            lambda: FederatedConfig(protocol="mix2lfd")):
+        with pytest.raises(ValueError, match="unknown protocol") as e:
+            raiser()
+        for p in PROTOCOLS:  # the error lists the valid set
+            assert p in str(e.value)
+
+
+# ---------------------------------------------------------------------------
+# Codec registry
+# ---------------------------------------------------------------------------
+
+def test_parse_codec_families_and_params():
+    assert parse_codec("identity") == CodecSpec()
+    assert parse_codec("quantize4").quant_bits == 4
+    assert parse_codec("quantize4").levels == 15.0
+    assert parse_codec("dp_gaussian0.5").dp_sigma == 0.5
+    assert parse_codec("delta").name == "delta"
+    # spec strings override the keyword defaults; bare names keep them
+    assert parse_codec("quantize", quant_bits=16).quant_bits == 16
+    spec = parse_codec("quantize8", quant_bits=16)
+    assert spec.quant_bits == 8
+    assert parse_codec(spec) is spec  # CodecSpec passes through
+
+
+def test_parse_codec_rejects_bad_specs():
+    with pytest.raises(ValueError, match="unknown codec"):
+        parse_codec("zstd")
+    with pytest.raises(ValueError, match="no numeric parameter"):
+        parse_codec("identity5")
+    with pytest.raises(ValueError, match="bits must be in"):
+        parse_codec("quantize0")
+    with pytest.raises(ValueError, match="sigma > 0"):
+        parse_codec("dp_gaussian", dp_sigma=0.0)
+    for fam in CODECS:  # the error lists registered families
+        assert fam in str(pytest.raises(
+            ValueError, parse_codec, "zstd").value)
+
+
+def test_federated_config_validates_codec():
+    with pytest.raises(ValueError, match="unknown codec"):
+        FederatedConfig(codec="zstd")
+    fc = FederatedConfig(codec="quantize4", dp_sigma=2.0)
+    assert fc.codec_spec().quant_bits == 4
+    assert fc.codec_spec().dp_sigma == 2.0
+
+
+# ---------------------------------------------------------------------------
+# Codec-aware payload accounting: bits and slots respond to compression
+# ---------------------------------------------------------------------------
+
+def test_round_payload_bits_explicit_first_steady_pair():
+    pay = round_payload_bits("mix2fld", n_mod=N_MOD, n_labels=N_L,
+                             sample_bits=B_S, n_seed=N_S)
+    assert pay.up_first == B_OUT * N_L * N_L + B_S * N_S
+    assert pay.up_steady == B_OUT * N_L * N_L
+    assert pay.dn == B_MOD * N_MOD
+    # the two payload_bits views agree with the pair
+    up1, _ = payload_bits("mix2fld", n_mod=N_MOD, n_labels=N_L,
+                          sample_bits=B_S, n_seed=N_S, first_round=True)
+    up, dn = payload_bits("mix2fld", n_mod=N_MOD, n_labels=N_L,
+                          sample_bits=B_S, n_seed=N_S)
+    assert (up1, up, dn) == (pay.up_first, pay.up_steady, pay.dn)
+
+
+def test_paper_uplink_reduction_ratio():
+    """Sec. V: Mix2FLD's amortized uplink traffic over R=10 rounds is
+    42.4x smaller than FL's (seed samples ride along only once)."""
+    R = 10
+    fl = round_payload_bits("fl", n_mod=N_MOD, n_labels=N_L)
+    mx = round_payload_bits("mix2fld", n_mod=N_MOD, n_labels=N_L,
+                            sample_bits=B_S, n_seed=N_S)
+    ratio = (R * fl.up_steady) / (mx.up_first + (R - 1) * mx.up_steady)
+    assert abs(ratio - 42.4) < 0.1
+
+
+@pytest.mark.parametrize("proto", PROTOCOLS)
+def test_quantize_codec_shrinks_uplink_only(proto):
+    raw = round_payload_bits(proto, n_mod=N_MOD, n_labels=N_L,
+                             sample_bits=B_S, n_seed=N_S)
+    q = round_payload_bits(proto, n_mod=N_MOD, n_labels=N_L,
+                           sample_bits=B_S, n_seed=N_S, codec="quantize8")
+    assert q.up_steady == raw.up_steady // 4   # 32 -> 8 bits/element
+    assert q.dn == raw.dn                      # downlink stays raw
+    if proto in FLD_FAMILY:   # first-round seed samples stay raw
+        assert q.up_first - q.up_steady == B_S * N_S
+
+
+def test_round_slot_plan_latency_responds_to_compression():
+    ch = ChannelConfig(num_devices=4, p_up_dbm=40.0)
+    raw = round_slot_plan("fd", ch, n_mod=N_MOD, n_labels=N_L)
+    q4 = round_slot_plan("fd", ch, n_mod=N_MOD, n_labels=N_L,
+                         codec="quantize4")
+    assert q4["up_bits"] == raw["up_bits"] / 8
+    assert q4["up_slots"] <= raw["up_slots"]
+    assert q4["dn_slots"] == raw["dn_slots"]
+    # LinkPlan carries the same accounting into the round loop
+    plan = LinkPlan.build("fd", ch, n_mod=N_MOD, n_labels=N_L,
+                          codec="quantize4")
+    assert plan.up_slots == q4["up_slots"]
+    assert plan.uplink_bits(False) == q4["up_bits"]
+
+
+# ---------------------------------------------------------------------------
+# Codec round trips (property tests over bits in {4, 8, 16})
+# ---------------------------------------------------------------------------
+
+def _table(key, d=4, c=10):
+    t = jax.random.uniform(key, (d, c, c))
+    return t / jnp.sum(t, axis=-1, keepdims=True)  # rows are soft labels
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_quantize_round_trip_within_grid_step(bits, seed):
+    spec = parse_codec("quantize", quant_bits=bits)
+    key = jax.random.PRNGKey(seed)
+    favg = _table(jax.random.fold_in(key, 0))
+    ref = _table(jax.random.fold_in(key, 1))
+    _, rx = uplink_stage(spec, "fd", None, favg, key, ref, None)
+    # stochastic rounding moves a [0,1] value at most one grid step
+    assert float(jnp.max(jnp.abs(rx - favg))) <= 1.0 / spec.levels + 1e-7
+    assert float(jnp.min(rx)) >= 0.0 and float(jnp.max(rx)) <= 1.0
+
+
+@pytest.mark.parametrize("bits", [4, 8, 16])
+def test_quantize_is_unbiased(bits):
+    spec = parse_codec("quantize", quant_bits=bits)
+    favg = _table(jax.random.PRNGKey(3))
+    outs = [uplink_stage(spec, "fd", None, favg,
+                         jax.random.PRNGKey(100 + i), favg, None)[1]
+            for i in range(64)]
+    err = float(jnp.max(jnp.abs(jnp.mean(jnp.stack(outs), 0) - favg)))
+    # E[round(x)] = x: the mean over keys converges well inside a step
+    assert err < 1.0 / spec.levels
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_delta_codec_round_trips_exactly(seed):
+    spec = parse_codec("delta")
+    key = jax.random.PRNGKey(seed)
+    favg = _table(jax.random.fold_in(key, 0))
+    ref = _table(jax.random.fold_in(key, 1))
+    _, rx = uplink_stage(spec, "fd", None, favg, key, ref, None)
+    np.testing.assert_allclose(np.asarray(rx), np.asarray(favg),
+                               atol=1e-6)
+
+
+def test_identity_stage_is_a_bitwise_passthrough():
+    spec = parse_codec("identity")
+    favg = _table(jax.random.PRNGKey(0))
+    params = {"w": jnp.ones((4, 3, 2))}
+    dp, rx = uplink_stage(spec, "mix2fld", params, favg,
+                          jax.random.PRNGKey(1), favg, None)
+    assert rx is favg and dp is params  # the very same arrays, no ops
+
+
+def test_dp_gaussian_clips_to_sensitivity():
+    key = jax.random.PRNGKey(0)
+    x = 100.0 * jax.random.normal(key, (32,))
+    out = gaussian_mechanism(x, key, sigma=1e-6, clip=1.0)
+    assert float(jnp.linalg.norm(out)) <= 1.0 + 1e-3  # clip + tiny noise
+
+
+# ---------------------------------------------------------------------------
+# DP accountant: monotone in rounds, closed-form epsilon
+# ---------------------------------------------------------------------------
+
+def test_accountant_epsilon_monotone_and_closed_form():
+    import math
+    sigma, delta = 1.2, 1e-5
+    acct = GaussianAccountant(sigma, delta)
+    eps0 = math.sqrt(2.0 * math.log(1.25 / delta)) / sigma
+    prev = 0.0
+    for t in range(1, 8):
+        acct.step()
+        eps = acct.epsilon()
+        assert eps > prev                       # strictly monotone
+        assert abs(eps - t * eps0) < 1e-12      # closed-form composition
+        assert abs(eps - gaussian_epsilon(sigma, delta, t)) < 1e-12
+        prev = eps
+    led = acct.ledger()
+    assert led["rounds"] == 7 and abs(led["epsilon"] - prev) < 1e-12
+
+
+def test_accountant_rejects_bad_parameters():
+    with pytest.raises(ValueError, match="sigma > 0"):
+        GaussianAccountant(0.0)
+    with pytest.raises(ValueError, match="delta"):
+        GaussianAccountant(1.0, delta=2.0)
+
+
+# ---------------------------------------------------------------------------
+# Downlink stages: one function, both layouts
+# ---------------------------------------------------------------------------
+
+def test_downlink_stages_match_on_loop_and_grid_layouts():
+    key = jax.random.PRNGKey(7)
+    G, D, C = 3, 4, 5
+    dev_gout = jax.random.uniform(jax.random.fold_in(key, 0), (G, D, C, C))
+    gout = jax.random.uniform(jax.random.fold_in(key, 1), (G, C, C))
+    dn_ok = jax.random.bernoulli(jax.random.fold_in(key, 2), 0.5, (G, D))
+    grid = downlink_gout(dev_gout, gout, dn_ok)
+    for g in range(G):
+        loop = downlink_gout(dev_gout[g], gout[g], dn_ok[g])
+        np.testing.assert_array_equal(np.asarray(grid[g]),
+                                      np.asarray(loop))
+    dev_p = {"w": jax.random.uniform(jax.random.fold_in(key, 3),
+                                     (G, D, 2, 3))}
+    g_p = {"w": jax.random.uniform(jax.random.fold_in(key, 4), (G, 2, 3))}
+    gridp = downlink_params(dev_p, g_p, dn_ok)
+    for g in range(G):
+        loopp = downlink_params({"w": dev_p["w"][g]}, {"w": g_p["w"][g]},
+                                dn_ok[g])
+        np.testing.assert_array_equal(np.asarray(gridp["w"][g]),
+                                      np.asarray(loopp["w"]))

@@ -243,6 +243,10 @@ GOLDEN = {
         acc=[0.12, 0.12, 0.13],
         loss=[2.324292, 2.32959, 2.335337],
         latency_s=[0.027, 0.021, 0.022]),
+    "mixfld": dict(
+        acc=[0.105, 0.095, 0.095],
+        loss=[2.324292, 2.37006, 2.356361],
+        latency_s=[0.027, 0.021, 0.022]),
     "mix2fld": dict(
         acc=[0.09, 0.215, 0.14],
         loss=[2.324292, 2.38605, 2.403923],

@@ -358,9 +358,60 @@ def test_partition_axis_memoizes_seed_prep_per_partition(pool):
     assert runner.seed_sets[0] is not runner.seed_sets[2]
 
 
+def test_codec_axis_matches_loop_both_structural_groups(data):
+    """A codec axis is structural: one program per (protocol, codec
+    family), numeric codec params traced inside.  Every point — the
+    identity ones (the pre-pipeline round body) and the stochastic
+    codecs (shared stage functions + mirrored key schedules) — must
+    reproduce its per-point loop history within 1e-6."""
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_het_base(), CH, protocol=("fd", "mix2fld"),
+                     codec=("identity", "quantize"), quant_bits=(4, 8))
+    assert grid.shape == (2, 2, 2)
+    assert len(grid.program_groups()) == 4       # 2 protocols x 2 codecs
+    assert len(grid.protocol_groups()) == 2
+    engine_stats.reset()
+    runner = SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
+    assert runner.programs == 4
+    res = runner.run()
+    assert engine_stats.traces == 4
+    _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y,
+                                          tx, ty))
+    # frames carry the frontier fields: uplink bits shrink with the bit
+    # width, epsilon stays None off the dp_gaussian family
+    for row in res.frames():
+        assert row["dp_epsilon"] is None
+        want = 100 * (row["quant_bits"] if row["codec"] == "quantize"
+                      else 32)
+        assert row["uplink_bits"] == want
+
+
+def test_dp_codec_grid_accounts_epsilon(data):
+    """dp_gaussian grid points carry the closed-form cumulative epsilon
+    (monotone in sigma^-1) in their result frames, and still match the
+    loop path despite the traced per-config noise scale."""
+    from repro.core.privacy import gaussian_epsilon
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_het_base(), CH, codec=("dp_gaussian",),
+                     dp_sigma=(0.5, 2.0))
+    runner = SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
+    assert runner.programs == 1                  # sigma sweeps traced
+    res = runner.run()
+    _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y,
+                                          tx, ty))
+    rows = res.frames()
+    R = grid.points[0][0].max_rounds
+    for row, sigma in zip(rows, (0.5, 2.0)):
+        assert row["dp_epsilon"] == pytest.approx(
+            gaussian_epsilon(sigma, 1e-5, R))
+    assert rows[0]["dp_epsilon"] > rows[1]["dp_epsilon"]
+
+
 def test_protocol_axis_validates_names():
     with pytest.raises(ValueError, match="mix2lfd.*not a registered"):
         make_grid(_het_base(), CH, protocol=("fl", "mix2lfd"))
+    with pytest.raises(ValueError, match="zstd.*not a registered codec"):
+        make_grid(_het_base(), CH, codec=("identity", "zstd"))
     with pytest.raises(ValueError, match="not a registered partition"):
         make_grid(_het_base(), CH, partition=("iid", "pathological"))
     # unknown axes fail with the full axis listing, not a KeyError
