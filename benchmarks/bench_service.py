@@ -1,0 +1,147 @@
+"""Continuous-serving driver benchmark: round throughput with per-round
+checkpointing on vs off, restore cost, and the resume-correctness
+headline (restore the halfway checkpoint, re-run the tail, max per-round
+record deviation vs the uninterrupted run).
+
+The throughput gate is a *ratio* (checkpoint-on over checkpoint-off
+rounds/s on the same host, same warmed jit caches), so machine speed
+largely cancels — what it actually bounds is the relative cost of the
+crash-safe save path (stage + fsync-free rename + retention GC) per
+round.  ``restore_tail_max_dev`` is the benchmark-side twin of the
+tests/test_service.py acceptance property and is gated at 1e-6
+absolutely.  Numbers land in benchmarks/results/service.json.
+"""
+from __future__ import annotations
+
+import shutil
+import sys
+import tempfile
+import time
+
+from repro.channel import ChannelConfig
+from repro.core.protocols import FederatedConfig
+from repro.launch.service import ChurnConfig, FederatedService
+from repro.models.cnn import CNN
+
+from .common import protocol_dataset, save_result
+
+#: record fields the resume deviation is measured over (uplink_ok /
+#: n_active are integers and must match exactly — folded in as 1.0 devs;
+#: compute_s / cum_time_s are host wall-clock *measurements*, not
+#: simulated quantities, so they are excluded like in test_service.py)
+_DEV_KEYS = ("acc", "loss", "round_latency_s")
+_EXACT_KEYS = ("round", "uplink_ok", "n_straggle", "n_active")
+
+
+def _make(fc, ch, churn, data, ckpt_dir=None):
+    svc = FederatedService(CNN(), fc, ch, churn=churn,
+                           ckpt_dir=ckpt_dir, ckpt_every=1)
+    return svc.bind_data(*data)
+
+
+def _tail_dev(ref, got):
+    dev = 0.0
+    for a, b in zip(ref, got):
+        for k in _EXACT_KEYS:
+            if a[k] != b[k]:
+                dev = max(dev, 1.0)
+        for k in _DEV_KEYS:
+            dev = max(dev, abs(float(a[k]) - float(b[k])))
+    return dev
+
+
+def run(quick=False, rounds=None):
+    rounds = rounds or (4 if quick else 8)
+    data = protocol_dataset(num_devices=4, per_device=150, n_test=500)
+    fc = FederatedConfig(protocol="mix2fld", num_devices=4, local_iters=4,
+                         local_batch=16, server_iters=4, server_batch=16,
+                         max_rounds=rounds, n_seed=6, n_inverse=12,
+                         seed=0)
+    # churn + straggler regime: the service's whole feature surface is on
+    ch = ChannelConfig(num_devices=4, p_up_dbm=40.0,
+                       compute_mean_s=0.05, deadline_s=0.15)
+    churn = ChurnConfig(p_active=0.75, min_active=2, seed=1)
+    ckpt_dir = tempfile.mkdtemp(prefix="bench_fedsvc_")
+    try:
+        # one throwaway pass traces every cohort size the seeded churn
+        # will draw (cohorts are a pure function of the round number),
+        # so BOTH timed passes below run against warm jit caches —
+        # without it the first pass absorbs the retraces and the ratio
+        # measures compilation, not the checkpoint path
+        _make(fc, ch, churn, data).run_rounds(rounds)
+
+        # -- checkpoint-off throughput --
+        off = _make(fc, ch, churn, data)
+        t0 = time.perf_counter()
+        off.run_rounds(rounds)
+        off_s = time.perf_counter() - t0
+
+        # -- checkpoint-on throughput (same rounds, per-round saves) --
+        on = _make(fc, ch, churn, data, ckpt_dir=ckpt_dir)
+        t0 = time.perf_counter()
+        on.run_rounds(rounds)
+        on_s = time.perf_counter() - t0
+        total = rounds
+
+        # -- serve one padded batch against the live model --
+        t0 = time.perf_counter()
+        preds = on.serve(data[2][: on.endpoint.batch_size - 3])
+        serve_s = time.perf_counter() - t0
+
+        # -- restore the halfway checkpoint, re-run the tail --
+        mid = total // 2
+        resumed = _make(fc, ch, churn, data, ckpt_dir=ckpt_dir)
+        t0 = time.perf_counter()
+        got = resumed.restore(step=mid)
+        restore_s = time.perf_counter() - t0
+        assert got == mid, (got, mid)
+        tail = resumed.run_rounds(total - mid)
+        tail_dev = _tail_dev(on.history[mid:], tail)
+
+        out = {
+            "rounds": rounds,
+            "num_devices": 4,
+            "quick": bool(quick),
+            "p_active": churn.p_active,
+            "nockpt_rounds_per_s": round(rounds / off_s, 3),
+            "ckpt_rounds_per_s": round(rounds / on_s, 3),
+            # host speed cancels in the ratio: it bounds the relative
+            # per-round cost of the crash-safe checkpoint path
+            "ckpt_on_off_ratio": round(off_s / on_s, 4),
+            "restore_s": round(restore_s, 4),
+            "serve_batch_us": round(serve_s * 1e6, 1),
+            "served": int(preds.shape[0]),
+            "tail_rounds": total - mid,
+            "restore_tail_max_dev": tail_dev,
+            # per-round accuracy under churn + straggler timeouts (the
+            # EXPERIMENTS.md continuous-serving table)
+            "rounds_detail": [
+                {"round": r["round"], "acc": round(float(r["acc"]), 4),
+                 "n_active": r["n_active"],
+                 "n_straggle": r["n_straggle"],
+                 "uplink_ok": r["uplink_ok"]}
+                for r in on.history],
+        }
+        save_result("service", out)
+        print(f"service: {rounds} rounds ckpt-off={off_s:.2f}s "
+              f"ckpt-on={on_s:.2f}s (ratio {out['ckpt_on_off_ratio']:.2f}) "
+              f"restore={restore_s*1e3:.0f}ms "
+              f"tail dev={tail_dev:.2e} over {total - mid} rounds")
+        return out
+    finally:
+        shutil.rmtree(ckpt_dir, ignore_errors=True)
+
+
+def main(quick=True):
+    out = run(quick=quick)
+    return [
+        f"service/ckpt_on_{out['rounds']}r,"
+        f"{1e6 / max(out['ckpt_rounds_per_s'], 1e-9):.0f},"
+        f"on_off_ratio={out['ckpt_on_off_ratio']:.2f}",
+        f"service/restore,{out['restore_s']*1e6:.0f},"
+        f"tail_max_dev={out['restore_tail_max_dev']:.1e}",
+    ]
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv[1:])

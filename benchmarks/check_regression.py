@@ -65,6 +65,15 @@ GATES = [
     # pure payload arithmetic — any drift is a codec accounting bug
     {"file": "payload_latency", "metric": "uplink_reduction_amortized_10r",
      "mode": "min_ratio", "ratio": 0.999, "match": ()},
+    # continuous-serving driver: a resumed run's tail must reproduce the
+    # uninterrupted run's records (the service acceptance property) ...
+    {"file": "service", "metric": "restore_tail_max_dev",
+     "mode": "max_value", "limit": 1e-6, "match": ()},
+    # ... and the crash-safe checkpoint path must stay cheap relative to
+    # a round — the on/off rounds-per-s ratio cancels host speed
+    {"file": "service", "metric": "ckpt_on_off_ratio",
+     "mode": "min_ratio", "ratio": 0.7,
+     "match": ("rounds", "num_devices", "quick")},
     # Tables II/III mean sample privacy must not drop (values are
     # log-scale and can be negative, hence the additive floor)
     {"file": "privacy_tables", "metric": "tab2_mean",

@@ -2,8 +2,9 @@
 decoding, FDMA uplink / multicast downlink, latency and outage — plus the
 link pipeline (``encode -> channel -> decode``) every device<->server
 transfer routes through."""
-from .model import (ChannelConfig, link_outcomes, round_trip,  # noqa: F401
-                    round_trip_traced, simulate_link, slots_needed)
+from .model import (ChannelConfig, compute_outcomes,  # noqa: F401
+                    link_outcomes, round_trip, round_trip_traced,
+                    simulate_link, slots_needed, slowest_ok_time)
 from .payload import (CODECS, CodecSpec, RoundPayload,  # noqa: F401
                       parse_codec, payload_bits, round_payload_bits,
                       round_slot_plan)

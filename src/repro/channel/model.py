@@ -37,6 +37,12 @@ class ChannelConfig:
     theta: float = 3.0             # target SNR (linear)
     tau_s: float = 1e-3            # slot / coherence time
     t_max_slots: int = 100
+    # Straggler model: per-device local compute time ~ Exp(compute_mean_s)
+    # drawn each round; a device past deadline_s is dropped from the
+    # aggregation set exactly like an uplink outage.  The defaults
+    # disable the stage entirely (no draw, no latency term).
+    compute_mean_s: float = 0.0
+    deadline_s: float = float("inf")
 
     def link_budget(self, up: bool) -> tuple[float, float]:
         """Returns (success probability per slot, bits per good slot)."""
@@ -77,6 +83,27 @@ def slowest_ok_slots(t, ok, t_max_slots: int):
     """Slots spent waiting on the slowest *successful* link; the full
     window only when every link outages (they contribute nothing)."""
     return jnp.where(jnp.any(ok), jnp.max(jnp.where(ok, t, 0)), t_max_slots)
+
+
+def compute_outcomes(key, mean_s, deadline_s, n_links: int):
+    """Traced per-device compute-time draw for the straggler stage:
+    t ~ Exp(mean_s) IID, a device "finishes" iff t <= deadline_s.
+
+    Returns (compute_s (n,), finished (n,) bool).  ``mean_s`` and
+    ``deadline_s`` may be traced scalars; ``n_links`` is static.  The
+    stage keys off its own fold of the round key, so enabling it never
+    perturbs the channel draw stream.
+    """
+    t = mean_s * jax.random.exponential(key, (n_links,))
+    return t, t <= deadline_s
+
+
+def slowest_ok_time(t, ok, deadline_s):
+    """Seconds spent waiting on the slowest device that *finished*; the
+    full deadline only when every device straggles (the server cannot
+    know nobody will report until the deadline passes)."""
+    return jnp.where(jnp.any(ok), jnp.max(jnp.where(ok, t, 0.0)),
+                     deadline_s)
 
 
 def simulate_link(key, cfg: ChannelConfig, payload_bits: float, up: bool,

@@ -37,7 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..registry import canonical_protocol
-from .model import round_trip_traced
+from .model import compute_outcomes, round_trip_traced, slowest_ok_time
 from .payload import (CodecSpec, decode_params, decode_table,
                       encode_params, encode_table, parse_codec,
                       round_slot_plan)
@@ -67,11 +67,16 @@ class LinkPlan:
     n_links: int
     t_max_slots: int
     tau_s: float
+    # Straggler stage (disabled at the defaults): per-device compute
+    # times ~ Exp(compute_mean_s), devices past deadline_s dropped from
+    # the aggregation set exactly like uplink outages.
+    compute_mean_s: float = 0.0
+    deadline_s: float = float("inf")
 
     @classmethod
     def build(cls, protocol: str, ch, *, n_mod: int, n_labels: int,
               sample_bits: int = 0, n_seed: int = 0,
-              codec="identity") -> "LinkPlan":
+              codec="identity", n_links: int | None = None) -> "LinkPlan":
         plan = round_slot_plan(protocol, ch, n_mod=n_mod,
                                n_labels=n_labels, sample_bits=sample_bits,
                                n_seed=n_seed, codec=codec)
@@ -80,24 +85,51 @@ class LinkPlan:
                    up_slots=plan["up_slots"], dn_slots=plan["dn_slots"],
                    up_bits_first=plan["up_bits_first"],
                    up_bits=plan["up_bits"], dn_bits=plan["dn_bits"],
-                   n_links=ch.num_devices, t_max_slots=ch.t_max_slots,
-                   tau_s=ch.tau_s)
+                   n_links=ch.num_devices if n_links is None else n_links,
+                   t_max_slots=ch.t_max_slots, tau_s=ch.tau_s,
+                   compute_mean_s=getattr(ch, "compute_mean_s", 0.0),
+                   deadline_s=getattr(ch, "deadline_s", float("inf")))
 
     def uplink_bits(self, first_round: bool) -> float:
         return self.up_bits_first if first_round else self.up_bits
 
     def draw(self, key, first_round: bool) -> dict:
         """One round's channel outcome (loop path): per-device success
-        masks + the round latency as a host float."""
+        masks + the round latency as a host float.
+
+        With the straggler stage enabled (``compute_mean_s > 0``), each
+        device first draws a local compute time; devices past the
+        deadline are AND-masked out of ``up_ok`` (the server treats a
+        late report exactly like an undecodable one) and the round
+        latency extends by the slowest *finishing* device's compute
+        time.  The stage keys off ``fold_in(key, 7)``, so the channel
+        draw below consumes the PRNG identically whether or not
+        stragglers are simulated — disabled configs reproduce the
+        pre-straggler histories bit-for-bit.
+        """
         out = channel_stage(
             key, self.p_up,
             self.up_slots_first if first_round else self.up_slots,
             self.p_dn, self.dn_slots, self.n_links, self.t_max_slots,
             self.tau_s)
-        return {"up_ok": np.asarray(out["up_ok"]),
-                "dn_ok": np.asarray(out["dn_ok"]),
-                "t_up": out["t_up"], "t_dn": out["t_dn"],
-                "latency_s": float(out["latency_s"])}
+        up_ok = np.asarray(out["up_ok"])
+        latency_s = float(out["latency_s"])
+        result = {"up_ok": up_ok, "dn_ok": np.asarray(out["dn_ok"]),
+                  "t_up": out["t_up"], "t_dn": out["t_dn"]}
+        if self.compute_mean_s > 0.0:
+            t_comp, comp_ok = compute_outcomes(
+                jax.random.fold_in(key, 7), self.compute_mean_s,
+                self.deadline_s, self.n_links)
+            comp_ok = np.asarray(comp_ok)
+            result["up_ok"] = up_ok & comp_ok
+            result["comp_ok"] = comp_ok
+            result["t_comp_s"] = np.asarray(t_comp)
+            result["n_straggle"] = int((~comp_ok).sum())
+            latency_s += float(slowest_ok_time(jnp.asarray(t_comp),
+                                               jnp.asarray(comp_ok),
+                                               self.deadline_s))
+        result["latency_s"] = latency_s
+        return result
 
 
 # ---------------------------------------------------------------------------

@@ -263,6 +263,7 @@ class FederatedTrainer:
         # that consumes no PRNG — the pre-pipeline behaviour)
         self._codec = fc.codec_spec()
         self._uplink_stage = make_uplink_stage(self._codec, fc.protocol)
+        self._plan_cache = {}  # LinkPlan per cohort size (see link_plan)
 
         self.mesh = None
         if not fc.shard_devices:
@@ -295,152 +296,226 @@ class FederatedTrainer:
         return collect_seeds(self.fc, dev_x, dev_y, key)
 
     # ------------------------------------------------------------------
-    def run(self, dev_x, dev_y, test_x, test_y, log=None):
-        """Full protocol run. Returns history dict (per-round accuracy,
-        losses, latency, cumulative wall-clock convergence time)."""
-        fc, ch = self.fc, self.ch
-        D, C = fc.num_devices, fc.num_classes
-        proto = fc.protocol
+    def init_state(self, num_devices: Optional[int] = None) -> dict:
+        """Fresh resumable round-loop state (see :meth:`round_once`).
+
+        ``num_devices`` sizes the device-axis state for a churned cohort
+        pool larger (or smaller) than ``fc.num_devices``; the default
+        reproduces ``run``'s population exactly, including its PRNG
+        stream: ``key`` is the second ``split(PRNGKey(seed))`` output,
+        so round p always folds to the same round key regardless of how
+        many times the loop was stopped and resumed.
+        """
+        fc = self.fc
+        D = fc.num_devices if num_devices is None else num_devices
+        C = fc.num_classes
         key = jax.random.PRNGKey(fc.seed)
         kinit, key = jax.random.split(key)
-
         # all devices start from a common init (paper: same architecture)
         g_params = self.model.init(kinit)
-        n_mod = sum(p.size for p in jax.tree.leaves(g_params))
         dev_params = jax.tree.map(
             lambda p: jnp.broadcast_to(p, (D,) + p.shape).copy(), g_params)
         gout = jnp.full((C, C), 1.0 / C)
-        # per-device view of gout: a device only refreshes its copy when its
-        # downlink succeeds (failed links keep the previous table)
+        # per-device view of gout: a device only refreshes its copy when
+        # its downlink succeeds (failed links keep the previous table)
         dev_gout = jnp.broadcast_to(gout, (D, C, C))
-        gout_prev = None
-        g_prev = None
+        return {"round": 0, "key": key, "g_params": g_params,
+                "dev_params": dev_params, "gout": gout,
+                "dev_gout": dev_gout, "prev": None,
+                "converged_round": None, "seeds": None, "cum_time_s": 0.0}
 
-        # ---- link pipeline plan: codec-aware payload bits -> slot counts
+    def link_plan(self, g_params, n_links: Optional[int] = None) -> LinkPlan:
+        """The codec-aware link plan for an ``n_links``-device cohort,
+        cached per cohort size (payload bits depend only on the model
+        and config, both fixed for a trainer's lifetime)."""
+        fc = self.fc
+        n_links = fc.num_devices if n_links is None else n_links
+        plan = self._plan_cache.get(n_links)
+        if plan is None:
+            n_mod = sum(p.size for p in jax.tree.leaves(g_params))
+            plan = LinkPlan.build(fc.protocol, self.ch, n_mod=n_mod,
+                                  n_labels=fc.num_classes,
+                                  sample_bits=fc.sample_bits,
+                                  n_seed=fc.n_seed, codec=self._codec,
+                                  n_links=n_links)
+            self._plan_cache[n_links] = plan
+        return plan
+
+    def round_once(self, state, dev_x, dev_y, test_x, test_y, *,
+                   plan: Optional[LinkPlan] = None, log=None):
+        """One federated round — ``run``'s round body as a resumable
+        step.  Returns ``(new_state, record)``.
+
+        ``state`` is :meth:`init_state`'s dict (or the previous round's
+        output); the round number and every PRNG draw derive from it, so
+        a state rebuilt from a checkpoint continues the exact stream an
+        uninterrupted loop would have produced.  ``dev_x``/``dev_y`` are
+        the *active cohort*'s shards ``(D_active, n_local, ...)`` — the
+        device-axis state in ``state`` must match, which is how the
+        serving driver runs churned cohorts through the same step.
+        """
+        fc = self.fc
+        proto = fc.protocol
+        dev_x = jnp.asarray(dev_x)
+        dev_y = jnp.asarray(dev_y)
+        D = dev_x.shape[0]
+        p = state["round"] + 1
+        if plan is None:
+            plan = self.link_plan(state["g_params"], n_links=D)
+
+        t0 = time.perf_counter()
+        kr = jax.random.fold_in(state["key"], p)
+        use_kd = proto != "fl" and p > 1  # KD once G_out exists
+        dev_params, g_params = state["dev_params"], state["g_params"]
+        gout, dev_gout = state["gout"], state["dev_gout"]
+        seeds = state["seeds"]
+
+        # ---- local updates (eq. 1 / 3) ----
+        dkeys = jax.random.split(jax.random.fold_in(kr, 1), D)
+        dev_params, favg, cnt, mloss = self._local_train(
+            dev_params, dev_x, dev_y, dkeys, dev_gout,
+            jnp.asarray(use_kd))
+        jax.block_until_ready(favg)
+
+        # ---- seed collection (first round, FLD family) ----
+        if p == 1 and proto in FLD_FAMILY:
+            seeds = self.collect_seeds(dev_x, dev_y,
+                                       jax.random.fold_in(kr, 2))
+
+        # ---- link pipeline: encode -> channel -> decode ----
+        link = plan.draw(jax.random.fold_in(kr, 3), first_round=p == 1)
+        up_ok = link["up_ok"]
+        dn_ok = link["dn_ok"]
+        w = up_ok.astype(np.float32) * dev_x.shape[1]  # |S_d| weights
+        # uplink codec: what the server receives (identity passes the
+        # arrays through untouched; stochastic codecs draw from the
+        # dedicated fold_in(kr, 5) stream, leaving every pre-existing
+        # PRNG consumer bit-identical)
+        dev_params_rx, favg_rx = self._uplink_stage(
+            dev_params, favg, jax.random.fold_in(kr, 5), dev_gout,
+            g_params)
+
+        # ---- aggregation + (FLD) conversion ----
+        if proto == "fl":
+            if up_ok.any():
+                g_params = self._weighted_avg(dev_params_rx,
+                                              jnp.asarray(w))
+        else:
+            if up_ok.any():
+                # eq. 2 averaged over the successful device set (psum
+                # collective on the sharded path)
+                gout = self._gout_update(
+                    favg_rx, cnt, jnp.asarray(up_ok, jnp.float32))
+            if proto != "fd":
+                g_params, _ = output_to_model(
+                    self.model.apply, g_params, seeds["train_x"],
+                    seeds["train_y"], gout, fc.server_iters,
+                    fc.server_batch, fc.eta, fc.beta,
+                    jax.random.fold_in(kr, 4))
+
+        # ---- downlink stage (gated per device by dn_ok) ----
+        mask = jnp.asarray(dn_ok)
+        dev_gout = downlink_gout(dev_gout, gout, mask)
+        if proto != "fd":
+            dev_params = downlink_params(dev_params, g_params, mask)
+
+        compute_s = time.perf_counter() - t0
+        cum_time = state["cum_time_s"] + compute_s + link["latency_s"]
+
+        # ---- evaluation of the reference device (device 0) ----
+        ref = jax.tree.map(lambda dp: dp[0], dev_params)
+        acc = float(self._accuracy(ref, test_x, test_y))
+        if log:
+            log(f"[{proto}] round {p}: acc={acc:.3f} "
+                f"loss={float(mloss.mean()):.3f} up_ok={up_ok.sum()}/{D} "
+                f"lat={link['latency_s']*1e3:.0f}ms")
+
+        # ---- convergence (relative change < eps) ----
+        # one reference for every protocol: the global soft-label table
+        # for FD, the flattened global model otherwise (a Frobenius norm
+        # equals the 2-norm of the ravel, so the FD numbers are the ones
+        # the pre-factoring loop produced)
+        if proto == "fd":
+            flat = gout.ravel()
+        else:
+            flat = jnp.concatenate([jnp.ravel(x) for x in
+                                    jax.tree.leaves(g_params)])
+        converged_round = state["converged_round"]
+        if state["prev"] is not None:
+            rel = float(jnp.linalg.norm(flat - state["prev"]) /
+                        jnp.maximum(jnp.linalg.norm(state["prev"]), 1e-12))
+            # a total-outage round leaves the global state untouched, so
+            # rel == 0 means "nothing arrived", not convergence: the
+            # check only counts when at least one uplink decoded (the
+            # grid path's hit mask applies the same gate)
+            if rel < fc.eps and converged_round is None and \
+                    bool(up_ok.any()):
+                converged_round = p
+
+        new_state = {"round": p, "key": state["key"], "g_params": g_params,
+                     "dev_params": dev_params, "gout": gout,
+                     "dev_gout": dev_gout, "prev": flat,
+                     "converged_round": converged_round, "seeds": seeds,
+                     "cum_time_s": cum_time}
+        record = {"round": p, "acc": acc, "loss": float(mloss.mean()),
+                  "round_latency_s": link["latency_s"],
+                  "compute_s": compute_s, "cum_time_s": cum_time,
+                  "uplink_ok": int(up_ok.sum()),
+                  "n_straggle": int(link.get("n_straggle", 0)),
+                  "link": link}
+        return new_state, record
+
+    # ------------------------------------------------------------------
+    def run(self, dev_x, dev_y, test_x, test_y, log=None):
+        """Full protocol run. Returns history dict (per-round accuracy,
+        losses, latency, cumulative wall-clock convergence time).
+
+        A thin driver over :meth:`init_state` + :meth:`round_once` —
+        the serving loop (``launch.service``) drives the same step with
+        churned cohorts and checkpoints between rounds.
+        """
+        fc = self.fc
         spec = self._codec
-        plan = LinkPlan.build(proto, ch, n_mod=n_mod, n_labels=C,
-                              sample_bits=fc.sample_bits,
-                              n_seed=fc.n_seed, codec=spec)
+        state = self.init_state()
+        # ---- link pipeline plan: codec-aware payload bits -> slot counts
+        plan = self.link_plan(state["g_params"])
         acct = (GaussianAccountant(spec.dp_sigma, spec.dp_delta)
                 if spec.name == "dp_gaussian" else None)
 
-        seeds = None
         history = {"acc": [], "round_latency_s": [], "compute_s": [],
                    "cum_time_s": [], "loss": [], "uplink_ok": [],
-                   "converged_round": None, "protocol": proto,
+                   "converged_round": None, "protocol": fc.protocol,
                    "codec": spec.name,
                    "uplink_bits_first": plan.up_bits_first,
                    "uplink_bits": plan.up_bits,
                    "downlink_bits": plan.dn_bits}
         if acct is not None:
             history["dp_epsilon"] = []
-        cum_time = 0.0
 
         dev_x = jnp.asarray(dev_x)
         dev_y = jnp.asarray(dev_y)
-
-        for p in range(1, fc.max_rounds + 1):
-            t0 = time.perf_counter()
-            kr = jax.random.fold_in(key, p)
-            use_kd = proto != "fl" and p > 1  # KD once G_out exists
-
-            # ---- local updates (eq. 1 / 3) ----
-            dkeys = jax.random.split(jax.random.fold_in(kr, 1), D)
-            dev_params, favg, cnt, mloss = self._local_train(
-                dev_params, dev_x, dev_y, dkeys, dev_gout,
-                jnp.asarray(use_kd))
-            jax.block_until_ready(favg)
-
-            # ---- seed collection (first round, FLD family) ----
-            if p == 1 and proto in FLD_FAMILY:
-                seeds = self.collect_seeds(dev_x, dev_y,
-                                           jax.random.fold_in(kr, 2))
-
-            # ---- link pipeline: encode -> channel -> decode ----
-            link = plan.draw(jax.random.fold_in(kr, 3), first_round=p == 1)
-            up_ok = link["up_ok"]
-            dn_ok = link["dn_ok"]
-            w = up_ok.astype(np.float32) * dev_x.shape[1]  # |S_d| weights
-            # uplink codec: what the server receives (identity passes the
-            # arrays through untouched; stochastic codecs draw from the
-            # dedicated fold_in(kr, 5) stream, leaving every pre-existing
-            # PRNG consumer bit-identical)
-            dev_params_rx, favg_rx = self._uplink_stage(
-                dev_params, favg, jax.random.fold_in(kr, 5), dev_gout,
-                g_params)
-
-            # ---- aggregation + (FLD) conversion ----
-            if proto == "fl":
-                if up_ok.any():
-                    g_params = self._weighted_avg(dev_params_rx,
-                                                  jnp.asarray(w))
-            else:
-                if up_ok.any():
-                    # eq. 2 averaged over the successful device set (psum
-                    # collective on the sharded path)
-                    gout = self._gout_update(
-                        favg_rx, cnt, jnp.asarray(up_ok, jnp.float32))
-                if proto != "fd":
-                    g_params, _ = output_to_model(
-                        self.model.apply, g_params, seeds["train_x"],
-                        seeds["train_y"], gout, fc.server_iters,
-                        fc.server_batch, fc.eta, fc.beta,
-                        jax.random.fold_in(kr, 4))
-
-            # ---- downlink stage (gated per device by dn_ok) ----
-            mask = jnp.asarray(dn_ok)
-            dev_gout = downlink_gout(dev_gout, gout, mask)
-            if proto != "fd":
-                dev_params = downlink_params(dev_params, g_params, mask)
-
-            compute_s = time.perf_counter() - t0
-            cum_time += compute_s + link["latency_s"]
+        for _ in range(fc.max_rounds):
+            state, rec = self.round_once(state, dev_x, dev_y, test_x,
+                                         test_y, plan=plan, log=log)
             if acct is not None:
                 acct.step()
                 history["dp_epsilon"].append(acct.epsilon())
-
-            # ---- evaluation of the reference device (device 0) ----
-            ref = jax.tree.map(lambda dp: dp[0], dev_params)
-            acc = float(self._accuracy(ref, test_x, test_y))
-            history["acc"].append(acc)
-            history["loss"].append(float(mloss.mean()))
-            history["round_latency_s"].append(link["latency_s"])
-            history["compute_s"].append(compute_s)
-            history["cum_time_s"].append(cum_time)
-            history["uplink_ok"].append(int(up_ok.sum()))
-            if log:
-                log(f"[{proto}] round {p}: acc={acc:.3f} "
-                    f"loss={history['loss'][-1]:.3f} up_ok={up_ok.sum()}/{D} "
-                    f"lat={link['latency_s']*1e3:.0f}ms")
-
-            # ---- convergence (relative change < eps) ----
-            if proto == "fl" or proto in FLD_FAMILY:
-                flat = jnp.concatenate([jnp.ravel(x) for x in
-                                        jax.tree.leaves(g_params)])
-                if g_prev is not None:
-                    rel = float(jnp.linalg.norm(flat - g_prev) /
-                                jnp.maximum(jnp.linalg.norm(g_prev), 1e-12))
-                    if rel < fc.eps and history["converged_round"] is None:
-                        history["converged_round"] = p
-                g_prev = flat
-            else:
-                if gout_prev is not None:
-                    rel = float(jnp.linalg.norm(gout - gout_prev) /
-                                jnp.maximum(jnp.linalg.norm(gout_prev), 1e-12))
-                    if rel < fc.eps and history["converged_round"] is None:
-                        history["converged_round"] = p
-                gout_prev = gout
+            for k in ("acc", "loss", "round_latency_s", "compute_s",
+                      "cum_time_s", "uplink_ok"):
+                history[k].append(rec[k])
+        history["converged_round"] = state["converged_round"]
 
         # histories carry lightweight seed metadata, not device arrays —
         # serialized results stay small; opt back into the raw arrays
         # with FederatedConfig.keep_seed_arrays
-        history["seeds"] = summarize_seeds(seeds)
+        history["seeds"] = summarize_seeds(state["seeds"])
         if acct is not None:
             history["dp"] = acct.ledger()
         if fc.keep_seed_arrays:
-            history["seed_arrays"] = seeds
+            history["seed_arrays"] = state["seeds"]
         history["final_acc"] = history["acc"][-1]
-        self.last_dev_gout = dev_gout  # per-device KD tables (tests inspect)
+        # per-device KD tables (tests inspect)
+        self.last_dev_gout = state["dev_gout"]
         return history
 
 
@@ -619,7 +694,11 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
         rel = jax.vmap(
             lambda a, b: jnp.linalg.norm(a - b) /
             jnp.maximum(jnp.linalg.norm(b), 1e-12))(flat, state["prev"])
-        hit = (p >= 2) & (rel < consts["eps"]) & (state["converged"] == 0)
+        # any_up mirrors the loop path's total-outage gate: an untouched
+        # global state (rel == 0) on a round where nothing decoded is
+        # not convergence
+        hit = (p >= 2) & (rel < consts["eps"]) & any_up & \
+            (state["converged"] == 0)
         converged = jnp.where(hit, p, state["converged"])
 
         out = {"acc": acc, "loss": jnp.mean(mloss, axis=1),

@@ -180,8 +180,13 @@ def collect_seeds(fc: "FederatedConfig", dev_x, dev_y, key):
     reference oracle), and cycle augmentation beyond the pair set uses
     the batched ``inverse_mixup_cycles`` contraction over segment/sort
     label cycles.  Returns dict with uploaded samples, labels (hard or
-    soft), metadata, and the server-side training set."""
-    D = fc.num_devices
+    soft), metadata, and the server-side training set.
+
+    ``D`` comes from the data, not the config: churned service cohorts
+    hand in an active subset of the device population, and the seed
+    exchange covers whoever is present in round 1 (identical to
+    ``fc.num_devices`` for the full-population scripts)."""
+    D = jnp.asarray(dev_x).shape[0]
     C = fc.num_classes
     proto = fc.protocol
     if proto in ("fl", "fd"):

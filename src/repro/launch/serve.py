@@ -2,6 +2,11 @@
 the KV cache (greedy), on any assigned architecture (smoke preset on CPU;
 the full configs serve via the same code path on the production mesh).
 
+The fixed-batch compile-once prefill shape here is also the template for
+the federated service's inference endpoint (``launch.service.
+InferenceEndpoint``): the CNN is single-shot, so its endpoint is "prefill
+only" — one jitted step at a fixed batch size, requests padded to it.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
       --batch 4 --prompt-len 64 --gen 32

@@ -1,0 +1,406 @@
+"""Continuous-serving federated round driver: train forever, survive
+SIGKILL, answer inference traffic between rounds.
+
+``FederatedTrainer.run`` is a terminate-and-exit script; this module
+drives the same factored round step (:meth:`FederatedTrainer.round_once`)
+as a long-running service:
+
+* **Churn** — devices arrive and depart between rounds.  The active
+  cohort of round ``p`` is drawn by a *stateless* seeded host process
+  (``np.random.default_rng([fc.seed, churn.seed, p])``), so the cohort
+  sequence is a pure function of the round number: a resumed run draws
+  the exact cohorts the uninterrupted run would have, with no RNG state
+  to checkpoint.
+* **Straggler timeouts** — enabled through the channel config
+  (``compute_mean_s``/``deadline_s``): the :class:`LinkPlan` draw masks
+  devices past the round deadline out of the aggregation set exactly
+  like uplink outages (see ``channel.pipeline``).
+* **Checkpoint/restore** — every ``ckpt_every`` rounds the full
+  resumable state (round PRNG key, global + per-device params,
+  ``gout``/``dev_gout``, the convergence reference, the round-1 seed
+  set) goes through the crash-safe ``checkpoint`` package, with the
+  host-side scalars (round counter, cumulative time, converged round,
+  DP accountant position, per-round history) in the manifest ``meta``.
+  A SIGKILLed run restores from the latest complete step directory and
+  continues the *bit-identical* PRNG stream: every per-round draw
+  derives from ``fold_in(key, p)``, and both ``key`` and ``p`` are in
+  the checkpoint.
+* **Batched inference** — :class:`InferenceEndpoint` serves the current
+  global model between rounds with a fixed-batch jitted apply (the CNN
+  single-shot analogue of ``launch.serve``'s prefill step: one compiled
+  shape, requests padded to it, so serving never retraces).
+
+With churn and stragglers disabled the per-round records equal
+``FederatedTrainer.run``'s history bit-for-bit — locked down in
+tests/test_service.py.
+
+CLI smoke (checkpoint + kill + resume + one served batch)::
+
+    PYTHONPATH=src python -m repro.launch.service --rounds 4 \
+        --ckpt-dir /tmp/fedsvc --verify-resume
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import tempfile
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.channel import ChannelConfig
+from repro.core.privacy import GaussianAccountant
+from repro.core.protocols import (FederatedConfig, FederatedTrainer,
+                                  summarize_seeds)
+
+#: Keys of one round's JSON-ready history record (the ``link`` arrays
+#: stay out of the checkpoint meta).
+_RECORD_KEYS = ("round", "acc", "loss", "round_latency_s", "compute_s",
+                "cum_time_s", "uplink_ok", "n_straggle")
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnConfig:
+    """Seeded device churn: each round, every device of the pool is
+    independently active with probability ``p_active``; if fewer than
+    ``min_active`` come up, the draw tops the cohort back up (still
+    deterministically).  ``p_active = 1`` disables churn."""
+    p_active: float = 1.0
+    min_active: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.p_active <= 1.0:
+            raise ValueError(f"p_active must be in (0, 1], "
+                             f"got {self.p_active}")
+        if self.min_active < 1:
+            raise ValueError("min_active must be >= 1: a round needs at "
+                             "least one training device")
+
+    def active_devices(self, fed_seed: int, round_: int,
+                       pool_size: int) -> np.ndarray:
+        """Sorted active-device indices of round ``round_`` — a pure
+        function of (seeds, round), so resumed runs re-draw identical
+        cohorts without checkpointing any RNG state."""
+        if self.p_active >= 1.0:
+            return np.arange(pool_size)
+        rng = np.random.default_rng([fed_seed, self.seed, round_])
+        mask = rng.random(pool_size) < self.p_active
+        idx = np.flatnonzero(mask)
+        want = min(self.min_active, pool_size)
+        if len(idx) < want:
+            inactive = np.flatnonzero(~mask)
+            extra = rng.choice(inactive, size=want - len(idx),
+                               replace=False)
+            idx = np.concatenate([idx, extra])
+        return np.sort(idx)
+
+
+class InferenceEndpoint:
+    """Fixed-batch jitted inference over the current global model.
+
+    The serving shape mirrors ``launch.serve``: one compiled step at a
+    fixed batch size (the prefill analogue — the CNN is single-shot, so
+    there is no decode loop), with incoming requests queued and padded
+    to that shape.  ``submit`` enqueues feature arrays; ``flush`` runs
+    as many padded batches as the queue holds and returns per-request
+    predicted labels in submission order.
+    """
+
+    def __init__(self, apply_fn, batch_size: int = 16):
+        self.batch_size = batch_size
+        self._queue: list = []
+        self.served = 0
+        self.batches = 0
+
+        def predict(params, x):
+            return jnp.argmax(apply_fn(params, x), axis=-1)
+
+        self._predict = jax.jit(predict)
+
+    def submit(self, x) -> int:
+        """Queue a request batch ``(n, ...)``; returns n."""
+        x = np.asarray(x)
+        self._queue.extend(x)
+        return x.shape[0]
+
+    @property
+    def pending(self) -> int:
+        return len(self._queue)
+
+    def flush(self, g_params) -> np.ndarray:
+        """Serve every pending request against ``g_params``.  Requests
+        are padded to the fixed batch shape (pad rows are discarded), so
+        the jitted step never retraces."""
+        if not self._queue:
+            return np.zeros((0,), np.int32)
+        out = []
+        B = self.batch_size
+        queue, self._queue = self._queue, []
+        for i in range(0, len(queue), B):
+            chunk = np.stack(queue[i:i + B])
+            n = chunk.shape[0]
+            if n < B:
+                pad = np.zeros((B - n,) + chunk.shape[1:], chunk.dtype)
+                chunk = np.concatenate([chunk, pad])
+            preds = np.asarray(self._predict(g_params,
+                                             jnp.asarray(chunk)))[:n]
+            out.append(preds)
+            self.batches += 1
+        preds = np.concatenate(out)
+        self.served += preds.shape[0]
+        return preds
+
+
+class FederatedService:
+    """Crash-safe continuous round driver over a device pool.
+
+    ``pool_x``/``pool_y`` are the *full* population's shards
+    ``(P, n_local, ...)``; each round trains the churned active cohort
+    through :meth:`FederatedTrainer.round_once` and scatters the
+    cohort's updated device state back into the pool.  ``step()`` runs
+    one round; :meth:`run_rounds` drives N of them with periodic
+    checkpoints; :meth:`restore` resumes from the newest complete
+    checkpoint in ``ckpt_dir``.
+    """
+
+    def __init__(self, model, fc: FederatedConfig,
+                 ch: Optional[ChannelConfig] = None, *,
+                 churn: Optional[ChurnConfig] = None,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 1,
+                 keep: Optional[int] = None, serve_batch: int = 16):
+        self.trainer = FederatedTrainer(model, fc, ch)
+        self.fc = self.trainer.fc
+        self.churn = churn or ChurnConfig()
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.keep = keep
+        self.endpoint = InferenceEndpoint(model.apply, serve_batch)
+        spec = self.fc.codec_spec()
+        self._acct = (GaussianAccountant(spec.dp_sigma, spec.dp_delta)
+                      if spec.name == "dp_gaussian" else None)
+        self.state = self.trainer.init_state()
+        self.history: list[dict] = []
+        self._data = None
+        self._seed_meta = None  # summarize_seeds of the round-1 set
+
+    # -- data binding --------------------------------------------------
+    def bind_data(self, pool_x, pool_y, test_x, test_y):
+        """Attach the device pool and eval set (kept out of checkpoints:
+        data re-binds on process start, state restores from disk)."""
+        pool_x, pool_y = jnp.asarray(pool_x), jnp.asarray(pool_y)
+        if pool_x.shape[0] != self.fc.num_devices:
+            raise ValueError(
+                f"pool has {pool_x.shape[0]} devices but the config "
+                f"says num_devices={self.fc.num_devices}")
+        self._data = (pool_x, pool_y, jnp.asarray(test_x),
+                      jnp.asarray(test_y))
+        return self
+
+    # -- one round -----------------------------------------------------
+    def step(self, log=None) -> dict:
+        """One federated round over the churned active cohort; returns
+        the round record (plus cohort bookkeeping)."""
+        if self._data is None:
+            raise RuntimeError("call bind_data(...) before step()")
+        pool_x, pool_y, test_x, test_y = self._data
+        state = self.state
+        p = state["round"] + 1
+        idx = self.churn.active_devices(self.fc.seed, p,
+                                        self.fc.num_devices)
+        jdx = jnp.asarray(idx)
+        cohort = dict(state)
+        cohort["dev_params"] = jax.tree.map(lambda a: a[jdx],
+                                            state["dev_params"])
+        cohort["dev_gout"] = state["dev_gout"][jdx]
+        plan = self.trainer.link_plan(state["g_params"],
+                                      n_links=len(idx))
+        cohort, rec = self.trainer.round_once(
+            cohort, pool_x[jdx], pool_y[jdx], test_x, test_y,
+            plan=plan, log=log)
+        # scatter the cohort's device state back into the pool; shared
+        # (global) fields carry over wholesale
+        new_state = dict(cohort)
+        new_state["dev_params"] = jax.tree.map(
+            lambda pool, coh: pool.at[jdx].set(coh),
+            state["dev_params"], cohort["dev_params"])
+        new_state["dev_gout"] = state["dev_gout"].at[jdx].set(
+            cohort["dev_gout"])
+        self.state = new_state
+        if self._acct is not None:
+            self._acct.step()
+            rec["dp_epsilon"] = self._acct.epsilon()
+        rec["n_active"] = len(idx)
+        rec["active"] = idx
+        self.history.append(rec)
+        if self.ckpt_dir and p % self.ckpt_every == 0:
+            self.save_checkpoint()
+        return rec
+
+    def run_rounds(self, n: int, log=None) -> list[dict]:
+        """Drive ``n`` rounds (the CLI's --rounds; a real deployment
+        loops step() forever)."""
+        return [self.step(log=log) for _ in range(n)]
+
+    # -- serving -------------------------------------------------------
+    def serve(self, x) -> np.ndarray:
+        """Answer one inference request batch against the current
+        global model (between rounds, training state untouched)."""
+        self.endpoint.submit(x)
+        return self.endpoint.flush(self.state["g_params"])
+
+    # -- checkpoint / restore -----------------------------------------
+    def _history_meta(self) -> list[dict]:
+        return [{k: r.get(k) for k in _RECORD_KEYS + ("n_active",
+                                                      "dp_epsilon")
+                 if k in r} for r in self.history]
+
+    def save_checkpoint(self) -> str:
+        """Write the full resumable state.  Array state goes in the
+        (atomically renamed) step dir; host scalars ride in the manifest
+        meta.  ``prev`` is absent only before the first round."""
+        if not self.ckpt_dir:
+            raise RuntimeError("service has no ckpt_dir")
+        state = self.state
+        tree = {"key": np.asarray(state["key"]),
+                "g_params": state["g_params"],
+                "dev_params": state["dev_params"],
+                "gout": state["gout"],
+                "dev_gout": state["dev_gout"]}
+        if state["prev"] is not None:
+            tree["prev"] = state["prev"]
+        if state["seeds"] is not None:
+            tree["seeds"] = {"train_x": state["seeds"]["train_x"],
+                             "train_y": state["seeds"]["train_y"]}
+        if self._seed_meta is None and state["seeds"] is not None \
+                and "uploaded" in state["seeds"]:
+            # the full round-1 dict is only in memory on the run that
+            # collected it; its summary rides along in every checkpoint
+            self._seed_meta = summarize_seeds(state["seeds"])
+        meta = {"round": state["round"],
+                "cum_time_s": state["cum_time_s"],
+                "converged_round": state["converged_round"],
+                "protocol": self.fc.protocol,
+                "dp_rounds": (self._acct.rounds
+                              if self._acct is not None else 0),
+                "seed_meta": self._seed_meta,
+                "history": self._history_meta()}
+        return checkpoint.save(self.ckpt_dir, state["round"], tree,
+                               meta=meta, keep=self.keep)
+
+    def restore(self, step: Optional[int] = None) -> int:
+        """Rebuild the resumable state from the newest (or ``step``-th)
+        checkpoint; returns the restored round number.  Bit-identical
+        continuation: the round key and counter come straight off disk,
+        and every in-round draw is derived from them."""
+        if not self.ckpt_dir:
+            raise RuntimeError("service has no ckpt_dir")
+        tree, meta = checkpoint.restore_tree(self.ckpt_dir, step)
+        seeds = None
+        if "seeds" in tree:
+            seeds = {"train_x": jnp.asarray(tree["seeds"]["train_x"]),
+                     "train_y": jnp.asarray(tree["seeds"]["train_y"])}
+        self.state = {
+            "round": meta["round"],
+            "key": jnp.asarray(tree["key"]),
+            "g_params": jax.tree.map(jnp.asarray, tree["g_params"]),
+            "dev_params": jax.tree.map(jnp.asarray, tree["dev_params"]),
+            "gout": jnp.asarray(tree["gout"]),
+            "dev_gout": jnp.asarray(tree["dev_gout"]),
+            "prev": (jnp.asarray(tree["prev"]) if "prev" in tree
+                     else None),
+            "converged_round": meta["converged_round"],
+            "seeds": seeds,
+            "cum_time_s": meta["cum_time_s"],
+        }
+        self.history = list(meta.get("history", []))
+        self._seed_meta = meta.get("seed_meta")
+        if self._acct is not None:
+            self._acct.rounds = meta.get("dp_rounds", 0)
+        return meta["round"]
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke: N rounds with checkpoints, one served batch, optional
+# kill-free resume verification (restore an earlier step, re-run the
+# tail, compare records) — the CI sweeps job runs this.
+# ---------------------------------------------------------------------------
+
+def _smoke_setup(args):
+    from repro.data import partition_iid, synthetic_images
+    from repro.models.cnn import CNN
+
+    x, y = synthetic_images(jax.random.PRNGKey(42), 1400)
+    dev_x, dev_y = partition_iid(np.asarray(x[:1200]),
+                                 np.asarray(y[:1200]), 4, 300, 10, seed=0)
+    fc = FederatedConfig(protocol=args.protocol, num_devices=4,
+                         local_iters=8, local_batch=16, server_iters=8,
+                         server_batch=16, max_rounds=args.rounds,
+                         n_seed=6, n_inverse=12, seed=0)
+    ch = ChannelConfig(num_devices=4, p_up_dbm=40.0,
+                       compute_mean_s=args.compute_mean_s,
+                       deadline_s=args.deadline_s)
+    churn = ChurnConfig(p_active=args.p_active, min_active=2)
+    svc = FederatedService(CNN(), fc, ch, churn=churn,
+                           ckpt_dir=args.ckpt_dir, ckpt_every=1)
+    svc.bind_data(dev_x, dev_y, x[1200:], y[1200:])
+    return svc, (x, y)
+
+
+def _tail(records):
+    return [{k: r[k] for k in ("round", "acc", "loss", "round_latency_s",
+                               "uplink_ok")} for r in records]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="continuous federated service smoke")
+    ap.add_argument("--rounds", type=int, default=4)
+    ap.add_argument("--protocol", default="mix2fld")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--p-active", type=float, default=0.75)
+    ap.add_argument("--compute-mean-s", type=float, default=0.05,
+                    dest="compute_mean_s")
+    ap.add_argument("--deadline-s", type=float, default=0.15,
+                    dest="deadline_s")
+    ap.add_argument("--verify-resume", action="store_true",
+                    help="restore the halfway checkpoint into a fresh "
+                         "service, re-run the tail, and require "
+                         "identical per-round records")
+    args = ap.parse_args(argv)
+    if args.ckpt_dir is None:
+        args.ckpt_dir = tempfile.mkdtemp(prefix="fedsvc_")
+
+    svc, _ = _smoke_setup(args)
+    recs = svc.run_rounds(args.rounds, log=print)
+    n_straggled = sum(r["n_straggle"] for r in recs)
+    print(f"trained {args.rounds} rounds: final acc={recs[-1]['acc']:.3f}"
+          f" cohort sizes={[r['n_active'] for r in recs]}"
+          f" stragglers dropped={n_straggled}")
+
+    # one served batch against the live global model
+    pool_x = np.asarray(svc._data[0])
+    preds = svc.serve(pool_x[0][: svc.endpoint.batch_size])
+    print(f"served {preds.shape[0]} predictions "
+          f"(endpoint batches={svc.endpoint.batches})")
+
+    if args.verify_resume:
+        mid = max(1, args.rounds // 2)
+        svc2, _ = _smoke_setup(args)
+        got = svc2.restore(step=mid)
+        assert got == mid, (got, mid)
+        tail = svc2.run_rounds(args.rounds - mid)
+        want, have = _tail(recs[mid:]), _tail(tail)
+        if want != have:
+            print(f"RESUME MISMATCH:\n  want {want}\n  have {have}")
+            return 1
+        print(f"resume verified: rounds {mid + 1}..{args.rounds} "
+              f"bit-identical after restore from step {mid}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

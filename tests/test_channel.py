@@ -122,6 +122,86 @@ def test_round_trip_all_outage_falls_back_to_t_max():
                         rel_tol=1e-9)
 
 
+def test_compute_outcomes_statistics_and_deadline():
+    from repro.channel import compute_outcomes
+
+    t, ok = compute_outcomes(jax.random.PRNGKey(0), 2.0, 3.0, 4000)
+    t, ok = np.asarray(t), np.asarray(ok)
+    assert t.shape == ok.shape == (4000,)
+    assert abs(float(t.mean()) - 2.0) < 0.15
+    # P(finish) = 1 - exp(-deadline/mean) for Exp(mean)
+    want = 1 - math.exp(-3.0 / 2.0)
+    assert abs(float(ok.mean()) - want) < 0.02
+    np.testing.assert_array_equal(ok, t <= 3.0)
+
+
+def test_slowest_ok_time_ignores_stragglers():
+    import jax.numpy as jnp
+
+    from repro.channel import slowest_ok_time
+
+    t = jnp.array([0.5, 9.0, 1.5])
+    ok = jnp.array([True, False, True])
+    assert math.isclose(float(slowest_ok_time(t, ok, 4.0)), 1.5)
+    # all straggle: the server waits out the whole deadline
+    none = jnp.array([False, False, False])
+    assert math.isclose(float(slowest_ok_time(t, none, 4.0)), 4.0)
+
+
+def test_linkplan_straggler_stage_masks_and_extends_latency():
+    from repro.channel import LinkPlan
+
+    base = ChannelConfig(num_devices=64, p_up_dbm=40.0)
+    strag = ChannelConfig(num_devices=64, p_up_dbm=40.0,
+                          compute_mean_s=1.0, deadline_s=1.0)
+    kw = dict(n_mod=64, n_labels=10)
+    plan0 = LinkPlan.build("fd", base, **kw)
+    plan1 = LinkPlan.build("fd", strag, **kw)
+    key = jax.random.PRNGKey(7)
+    out0 = plan0.draw(key, first_round=False)
+    out1 = plan1.draw(key, first_round=False)
+    # the channel draw itself is untouched (straggler keys off its own
+    # fold of the round key) — link outcomes stay bitwise identical
+    np.testing.assert_array_equal(
+        np.asarray(out0["t_up"]), np.asarray(out1["t_up"]))
+    np.testing.assert_array_equal(out0["dn_ok"], out1["dn_ok"])
+    # stragglers are dropped from the aggregation mask like outages
+    np.testing.assert_array_equal(out1["up_ok"],
+                                  out0["up_ok"] & out1["comp_ok"])
+    assert out1["n_straggle"] == int((~out1["comp_ok"]).sum())
+    assert 0 < out1["n_straggle"] < 64  # deadline = mean: ~37% straggle
+    # latency extends by the slowest finishing device's compute time
+    t_comp, comp_ok = out1["t_comp_s"], out1["comp_ok"]
+    want = out0["latency_s"] + float(t_comp[comp_ok].max())
+    assert math.isclose(out1["latency_s"], want, rel_tol=1e-6)
+
+
+def test_linkplan_straggler_disabled_is_noop():
+    from repro.channel import LinkPlan
+
+    cfg = ChannelConfig(num_devices=8)
+    plan = LinkPlan.build("fd", cfg, n_mod=64, n_labels=10)
+    assert plan.compute_mean_s == 0.0
+    out = plan.draw(jax.random.PRNGKey(3), first_round=True)
+    assert "comp_ok" not in out and "n_straggle" not in out
+
+
+def test_linkplan_all_straggle_waits_full_deadline():
+    from repro.channel import LinkPlan
+
+    cfg = ChannelConfig(num_devices=6, p_up_dbm=40.0,
+                        compute_mean_s=1.0, deadline_s=1e-9)
+    plan = LinkPlan.build("fd", cfg, n_mod=64, n_labels=10)
+    out = plan.draw(jax.random.PRNGKey(0), first_round=False)
+    assert not out["up_ok"].any()
+    assert out["n_straggle"] == 6
+    base = LinkPlan.build("fd", ChannelConfig(num_devices=6, p_up_dbm=40.0),
+                          n_mod=64, n_labels=10)
+    ref = base.draw(jax.random.PRNGKey(0), first_round=False)
+    assert math.isclose(out["latency_s"], ref["latency_s"] + 1e-9,
+                        rel_tol=1e-6)
+
+
 def test_downlink_faster_than_uplink_under_asymmetry():
     """P_dn = 40 dBm + full bandwidth: downlink latency for the model
     payload is far below the uplink's for the same payload."""

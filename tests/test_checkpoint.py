@@ -1,4 +1,6 @@
-"""Checkpoint save/restore round-trips."""
+"""Checkpoint save/restore round-trips and crash-safety hardening."""
+import os
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -43,3 +45,159 @@ def test_shape_mismatch_raises(tmp_path):
 def test_missing_checkpoint_raises(tmp_path):
     with pytest.raises(FileNotFoundError):
         ckpt.restore(str(tmp_path / "nope"), {"a": jnp.ones(1)})
+
+
+# ---- LATEST pointer hardening -------------------------------------------
+
+
+def _corrupt_latest(d, content):
+    with open(os.path.join(d, "LATEST"), "w") as f:
+        f.write(content)
+
+
+@pytest.mark.parametrize("content", ["", "garbage", "step_", "step_00x1"])
+def test_corrupt_latest_falls_back_to_scan(tmp_path, content):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(3.0)}
+    ckpt.save(d, 1, tree)
+    ckpt.save(d, 4, {"a": jnp.arange(3.0) * 4})
+    _corrupt_latest(d, content)
+    assert ckpt.latest_step(d) == 4
+    out = ckpt.restore(d, {"a": jnp.zeros(3)})
+    np.testing.assert_array_equal(np.asarray(out["a"]),
+                                  np.arange(3.0) * 4)
+
+
+def test_stale_latest_pointing_at_missing_dir_falls_back(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 2, {"a": jnp.ones(2)})
+    _corrupt_latest(d, "step_00000099")
+    assert ckpt.latest_step(d) == 2
+
+
+def test_missing_latest_falls_back_to_scan(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 7, {"a": jnp.ones(2)})
+    os.remove(os.path.join(d, "LATEST"))
+    assert ckpt.latest_step(d) == 7
+
+
+def test_latest_step_missing_dir_returns_none(tmp_path):
+    assert ckpt.latest_step(str(tmp_path / "nope")) is None
+
+
+# ---- crashed-save GC + atomicity ----------------------------------------
+
+
+def test_orphaned_tmp_dirs_are_collected_on_next_save(tmp_path):
+    d = str(tmp_path / "ck")
+    os.makedirs(d)
+    os.makedirs(os.path.join(d, "tmpdeadbeef"))
+    with open(os.path.join(d, "tmpdeadbeef", "arrays.npz"), "wb") as f:
+        f.write(b"partial")
+    with open(os.path.join(d, "tmporphanfile"), "w") as f:
+        f.write("x")
+    ckpt.save(d, 1, {"a": jnp.ones(2)})
+    names = os.listdir(d)
+    assert not any(n.startswith("tmp") for n in names)
+    assert ckpt.latest_step(d) == 1
+
+
+def test_crash_mid_save_leaves_previous_checkpoint_usable(tmp_path,
+                                                          monkeypatch):
+    d = str(tmp_path / "ck")
+    tree = {"a": jnp.arange(4.0)}
+    ckpt.save(d, 1, tree)
+
+    def boom(*a, **k):
+        raise RuntimeError("disk died")
+
+    monkeypatch.setattr(ckpt.np, "savez", boom)
+    with pytest.raises(RuntimeError):
+        ckpt.save(d, 2, {"a": jnp.arange(4.0) * 2})
+    monkeypatch.undo()
+    # the failed save must not have advanced the pointer or left litter
+    # that breaks a subsequent restore
+    assert ckpt.latest_step(d) == 1
+    out = ckpt.restore(d, {"a": jnp.zeros(4)})
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.arange(4.0))
+    ckpt.save(d, 2, {"a": jnp.arange(4.0) * 2})
+    assert not any(n.startswith("tmp") for n in os.listdir(d))
+    assert ckpt.latest_step(d) == 2
+
+
+# ---- retention ----------------------------------------------------------
+
+
+def test_retention_keeps_last_k(tmp_path):
+    d = str(tmp_path / "ck")
+    for step in range(1, 6):
+        ckpt.save(d, step, {"a": jnp.full((2,), float(step))}, keep=2)
+    assert ckpt.steps(d) == [4, 5]
+    assert ckpt.latest_step(d) == 5
+    out = ckpt.restore(d, {"a": jnp.zeros(2)}, step=4)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.full(2, 4.0))
+
+
+def test_retention_rejects_nonpositive_keep(tmp_path):
+    with pytest.raises(ValueError):
+        ckpt.save(str(tmp_path / "ck"), 1, {"a": jnp.ones(1)}, keep=0)
+
+
+# ---- structural validation ----------------------------------------------
+
+
+def test_path_mismatch_same_shapes_raises_with_diff(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"w1": jnp.ones((3,)), "w2": jnp.zeros((3,))})
+    with pytest.raises(ValueError, match="w3"):
+        # equal leaf count, identical shapes — pre-hardening this
+        # silently loaded w2's data into w3
+        ckpt.restore(d, {"w1": jnp.ones((3,)), "w3": jnp.zeros((3,))})
+
+
+def test_nested_path_mismatch_lists_both_sides(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"m": {"a": jnp.ones(2)}, "b": jnp.zeros(2)})
+    with pytest.raises(ValueError) as ei:
+        ckpt.restore(d, {"m": {"z": jnp.ones(2)}, "b": jnp.zeros(2)})
+    assert "m/a" in str(ei.value) and "m/z" in str(ei.value)
+
+
+def test_shape_mismatch_names_the_leaf(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, {"a": jnp.ones((3,)), "b": jnp.ones((2, 2))})
+    with pytest.raises(ValueError, match="'b'"):
+        ckpt.restore(d, {"a": jnp.ones((3,)), "b": jnp.ones((2, 3))})
+
+
+# ---- meta + template-free restore ---------------------------------------
+
+
+def test_meta_roundtrip(tmp_path):
+    d = str(tmp_path / "ck")
+    meta = {"round": 12, "dp_rounds": 7, "converged_round": None}
+    ckpt.save(d, 12, {"a": jnp.ones(2)}, meta=meta)
+    assert ckpt.load_meta(d) == meta
+    assert ckpt.load_meta(d, step=12) == meta
+
+
+def test_restore_tree_rebuilds_nested_dicts(tmp_path):
+    d = str(tmp_path / "ck")
+    tree = {"g": {"w": np.arange(6.0).reshape(2, 3),
+                  "b": np.zeros(3)},
+            "round_key": np.array([1, 2], np.uint32)}
+    ckpt.save(d, 5, tree, meta={"round": 5})
+    out, meta = ckpt.restore_tree(d)
+    assert meta == {"round": 5}
+    np.testing.assert_array_equal(out["g"]["w"], tree["g"]["w"])
+    np.testing.assert_array_equal(out["g"]["b"], tree["g"]["b"])
+    np.testing.assert_array_equal(out["round_key"], tree["round_key"])
+    assert out["round_key"].dtype == np.uint32
+
+
+def test_restore_tree_bare_array(tmp_path):
+    d = str(tmp_path / "ck")
+    ckpt.save(d, 1, np.arange(5.0))
+    out, _ = ckpt.restore_tree(d)
+    np.testing.assert_array_equal(out, np.arange(5.0))

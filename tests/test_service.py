@@ -1,0 +1,248 @@
+"""Continuous-serving driver: crash-safe resume, churn, stragglers,
+outage-convergence gating, and the batched inference endpoint.
+
+Golden-sized configs (D=4, 8 local iters) keep the file in the fast
+tier; the acceptance property — a killed fixed-seed service resumes from
+the latest checkpoint and reproduces the uninterrupted run's tail
+bit-identically — is locked down here.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.channel import ChannelConfig
+from repro.core.protocols import FederatedConfig, FederatedTrainer
+from repro.data import partition_iid, synthetic_images
+from repro.launch.service import (ChurnConfig, FederatedService,
+                                  InferenceEndpoint)
+from repro.models.cnn import CNN
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y = synthetic_images(jax.random.PRNGKey(42), 1400)
+    dev_x, dev_y = partition_iid(np.asarray(x[:1200]), np.asarray(y[:1200]),
+                                 4, 300, 10, seed=0)
+    return dev_x, dev_y, jnp.asarray(x[1200:]), jnp.asarray(y[1200:])
+
+
+def _cfg(protocol="fd", **kw):
+    base = dict(protocol=protocol, num_devices=4, local_iters=8,
+                local_batch=16, server_iters=8, server_batch=16,
+                max_rounds=3, n_seed=6, n_inverse=12, seed=0)
+    base.update(kw)
+    return FederatedConfig(**base)
+
+
+CH = ChannelConfig(num_devices=4, p_up_dbm=40.0)
+# churn + straggler regime for the robustness tests
+CH_STRAG = ChannelConfig(num_devices=4, p_up_dbm=40.0,
+                         compute_mean_s=0.05, deadline_s=0.08)
+CHURN = ChurnConfig(p_active=0.6, min_active=2, seed=3)
+
+
+def _svc(data, protocol="fd", ch=CH, churn=None, tmp=None, **kw):
+    dev_x, dev_y, tx, ty = data
+    svc = FederatedService(CNN(), _cfg(protocol), ch, churn=churn,
+                           ckpt_dir=str(tmp) if tmp else None, **kw)
+    return svc.bind_data(dev_x, dev_y, tx, ty)
+
+
+def _tail(records):
+    keys = ("round", "acc", "loss", "round_latency_s", "uplink_ok",
+            "n_active")
+    return [{k: r[k] for k in keys} for r in records]
+
+
+# ---- equivalence with the terminate-and-exit loop ------------------------
+
+
+def test_service_without_churn_matches_trainer_run(data):
+    """Churn/stragglers off: the service's records are run()'s history
+    bit-for-bit (same PRNG stream through the factored step)."""
+    dev_x, dev_y, tx, ty = data
+    h = FederatedTrainer(CNN(), _cfg("fd"), CH).run(dev_x, dev_y, tx, ty)
+    svc = _svc(data, "fd")
+    recs = svc.run_rounds(3)
+    assert [r["acc"] for r in recs] == h["acc"]
+    assert [r["loss"] for r in recs] == h["loss"]
+    assert [r["round_latency_s"] for r in recs] == h["round_latency_s"]
+    assert [r["uplink_ok"] for r in recs] == h["uplink_ok"]
+    assert all(r["n_active"] == 4 for r in recs)
+    assert svc.state["converged_round"] == h["converged_round"]
+
+
+# ---- the acceptance property: kill mid-training, resume, identical tail --
+
+
+@pytest.mark.parametrize("protocol", ["fd", "mix2fld"])
+def test_killed_service_resumes_bit_identically(protocol, data, tmp_path):
+    """Fixed-seed service under churn + straggler timeouts, checkpointing
+    every round: a fresh process restoring the round-2 checkpoint must
+    reproduce the uninterrupted run's remaining rounds exactly —
+    including the PRNG key bits — with the mix2fld case also exercising
+    the round-1 seed set through the checkpoint."""
+    svc = _svc(data, protocol, ch=CH_STRAG, churn=CHURN,
+               tmp=tmp_path / "ck", ckpt_every=1)
+    recs = svc.run_rounds(4)
+    assert len({r["n_active"] for r in recs}) > 1  # churn really resized
+
+    svc2 = _svc(data, protocol, ch=CH_STRAG, churn=CHURN,
+                tmp=tmp_path / "ck")
+    assert svc2.restore(step=2) == 2
+    np.testing.assert_array_equal(np.asarray(svc2.state["key"]),
+                                  np.asarray(svc.state["key"]))
+    tail = svc2.run_rounds(2)
+    assert _tail(tail) == _tail(recs[2:])
+    for a, b in zip(jax.tree.leaves(svc.state["g_params"]),
+                    jax.tree.leaves(svc2.state["g_params"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   atol=1e-6)
+    assert svc2.state["converged_round"] == svc.state["converged_round"]
+    # the resumed history is the full run's (prefix from the manifest
+    # meta, tail recomputed)
+    assert _tail(svc2.history) == _tail(svc.history)
+
+
+def test_crash_mid_save_resumes_from_last_good_checkpoint(data, tmp_path,
+                                                          monkeypatch):
+    """Exception injection mid-save (the SIGKILL stand-in): the torn
+    round-2 checkpoint must not exist, and a fresh service restores
+    round 1 and reproduces rounds 2..3 of an uninterrupted run."""
+    d = tmp_path / "ck"
+    ref = _svc(data, "fd", ch=CH_STRAG, churn=CHURN, tmp=tmp_path / "ref",
+               ckpt_every=1)
+    ref_recs = ref.run_rounds(3)
+
+    svc = _svc(data, "fd", ch=CH_STRAG, churn=CHURN, tmp=d, ckpt_every=1)
+    svc.run_rounds(1)
+    real_savez = np.savez
+
+    def boom(*a, **k):
+        raise RuntimeError("killed mid-save")
+
+    monkeypatch.setattr(np, "savez", boom)
+    with pytest.raises(RuntimeError, match="killed mid-save"):
+        svc.run_rounds(1)  # round 2 trains, then dies checkpointing
+    monkeypatch.setattr(np, "savez", real_savez)
+
+    assert ckpt.latest_step(str(d)) == 1
+    svc2 = _svc(data, "fd", ch=CH_STRAG, churn=CHURN, tmp=d, ckpt_every=1)
+    assert svc2.restore() == 1
+    tail = svc2.run_rounds(2)
+    assert _tail(tail) == _tail(ref_recs[1:])
+
+
+# ---- outage / churn / straggler semantics --------------------------------
+
+
+def test_service_total_outage_round_records_no_convergence(data):
+    svc = _svc(data, "fd", ch=ChannelConfig(num_devices=4, theta=1e9))
+    svc.trainer.fc.eps = 10.0  # any rel passes — only the gate protects
+    recs = svc.run_rounds(3)
+    assert [r["uplink_ok"] for r in recs] == [0, 0, 0]
+    assert svc.state["converged_round"] is None
+
+
+def test_straggler_timeouts_shrink_aggregation_set(data):
+    """An aggressive deadline drops devices from up_ok and charges the
+    waiting time; the record reports how many straggled."""
+    svc = _svc(data, "fd",
+               ch=ChannelConfig(num_devices=4, p_up_dbm=40.0,
+                                compute_mean_s=1.0, deadline_s=0.7))
+    recs = svc.run_rounds(3)
+    assert sum(r["n_straggle"] for r in recs) > 0
+    for r in recs:
+        assert r["uplink_ok"] <= 4 - r["n_straggle"]
+
+
+def test_churn_draw_is_stateless_and_respects_min_active():
+    churn = ChurnConfig(p_active=0.3, min_active=2, seed=5)
+    for p in range(1, 30):
+        a = churn.active_devices(0, p, 6)
+        b = churn.active_devices(0, p, 6)
+        np.testing.assert_array_equal(a, b)  # pure function of (seed, p)
+        assert len(a) >= 2
+        assert len(np.unique(a)) == len(a)
+        assert a.min() >= 0 and a.max() < 6
+    # different rounds actually draw different cohorts
+    draws = {tuple(churn.active_devices(0, p, 6)) for p in range(1, 30)}
+    assert len(draws) > 1
+
+
+def test_churn_config_validation():
+    with pytest.raises(ValueError, match="p_active"):
+        ChurnConfig(p_active=0.0)
+    with pytest.raises(ValueError, match="min_active"):
+        ChurnConfig(min_active=0)
+
+
+def test_churned_cohort_state_scatters_back_to_pool(data):
+    """Only active devices' pool state changes in a churned round."""
+    svc = _svc(data, "fd", churn=ChurnConfig(p_active=0.5, min_active=2,
+                                             seed=1))
+    before = np.asarray(svc.state["dev_gout"]).copy()
+    rec = svc.run_rounds(2)[-1]  # round 2: gout has left the prior
+    after = np.asarray(svc.state["dev_gout"])
+    active = set(rec["active"].tolist())
+    assert 0 < len(active) < 4
+    # previously-active devices may already differ from init; compare
+    # against the state snapshot, which run_rounds(2) evolved twice
+    changed = {d for d in range(4)
+               if not np.array_equal(before[d], after[d])}
+    assert changed  # somebody trained
+    assert changed <= active | set(
+        svc.history[0]["active"].tolist())
+
+
+# ---- inference endpoint --------------------------------------------------
+
+
+def test_endpoint_pads_to_fixed_batch_and_matches_direct_apply(data):
+    dev_x, dev_y, tx, ty = data
+    svc = _svc(data, "fd", serve_batch=8)
+    svc.run_rounds(1)
+    x = np.asarray(tx[:13])  # not a multiple of the batch size
+    preds = svc.serve(x)
+    assert preds.shape == (13,)
+    want = np.argmax(np.asarray(CNN().apply(svc.state["g_params"],
+                                            jnp.asarray(x))), axis=-1)
+    np.testing.assert_array_equal(preds, want)
+    assert svc.endpoint.served == 13
+    assert svc.endpoint.batches == 2  # 8 + padded 5
+    assert svc.endpoint.pending == 0
+
+
+def test_endpoint_flush_empty_queue_is_noop(data):
+    svc = _svc(data, "fd")
+    out = svc.endpoint.flush(svc.state["g_params"])
+    assert out.shape == (0,)
+
+
+def test_endpoint_is_separate_from_training_state(data):
+    """Serving between rounds must not perturb training: records with
+    and without interleaved serving are identical."""
+    dev_x, dev_y, tx, ty = data
+    a = _svc(data, "fd")
+    recs_a = []
+    for _ in range(2):
+        recs_a.append(a.step())
+        a.serve(np.asarray(tx[:4]))
+    b = _svc(data, "fd")
+    recs_b = b.run_rounds(2)
+    assert _tail(recs_a) == _tail(recs_b)
+
+
+def test_service_requires_bound_data(data):
+    svc = FederatedService(CNN(), _cfg("fd"), CH)
+    with pytest.raises(RuntimeError, match="bind_data"):
+        svc.step()
+
+
+def test_bind_data_validates_pool_size(data):
+    dev_x, dev_y, tx, ty = data
+    svc = FederatedService(CNN(), _cfg("fd", num_devices=7), CH)
+    with pytest.raises(ValueError, match="num_devices=7"):
+        svc.bind_data(dev_x, dev_y, tx, ty)

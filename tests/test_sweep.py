@@ -129,6 +129,24 @@ def test_sweep_matches_loop_fd(data):
     _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y, tx, ty))
 
 
+def test_sweep_total_outage_never_converges_and_matches_loop(data):
+    """Regression for the spurious-convergence bug on the grid path: a
+    theta axis spanning a workable SNR target and an unreachable one
+    (every link outages every round) must (a) stay loop-equivalent and
+    (b) record no converged_round at the outage point even with an eps
+    that any rel passes — the frozen global state is not convergence."""
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(protocol="fd", eps=10.0), CH,
+                     theta=(3.0, 1e9))
+    res = run_sweep(CNN(), grid, dev_x, dev_y, tx, ty)
+    _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y, tx, ty))
+    h_ok, h_out = res.history(0), res.history(1)
+    assert all(n > 0 for n in h_ok["uplink_ok"])
+    assert h_ok["converged_round"] == 2
+    assert h_out["uplink_ok"] == [0, 0, 0]
+    assert h_out["converged_round"] is None
+
+
 @pytest.mark.parametrize("protocol,axes", [
     ("fld", dict(n_seed=(4, 6))),
     ("mixfld", dict(lam=(0.1, 0.3))),
