@@ -1,0 +1,137 @@
+"""Client-sampling throughput on the compiled grid path: rounds/s vs
+``sample_ratio`` at a fixed device pool.
+
+The tentpole claim of the sampling layer is that per-round cost scales
+with the *cohort*, not the pool — a ``sample_ratio=0.25`` point trains
+a quarter of the devices per round and the compiled scan's device axis
+shrinks to match.  This benchmark measures warm rounds/s of a
+single-point sweep at each ratio over one fixed pool (the quick regime
+CI runs: D=256; full: D=4096) and records
+
+* ``rounds_per_s`` per ratio and the ``speedup_*`` ratios against the
+  full-participation run (wall-clock ratios, so host speed cancels —
+  gated by check_regression.py against the committed baseline);
+* ``ratio1_max_dev`` — max |acc deviation| of a ``sample_ratio=1.0``
+  (non-default ``sample_seed``) run against the unsampled config: the
+  full-ratio path must be the SAME compiled program, so this is gated
+  at bitwise zero.
+
+The model is a ~500-parameter linear probe: at pool scale the stacked
+per-device parameters, not the FLOPs, are what the cohort gather must
+keep off the round body, and a tiny model keeps the full pool tractable
+on the CI host.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.channel import ChannelConfig
+from repro.core.protocols import FederatedConfig
+from repro.data import partition_iid, synthetic_images
+from repro.sweep import SweepRunner, make_grid
+
+from .common import save_result
+
+RATIOS = (1.0, 0.5, 0.25)
+
+
+class TinyNet:
+    """Linear probe over 4x4-average-pooled images (49 features)."""
+
+    def init(self, key):
+        k, _ = jax.random.split(key)
+        return {"w": jax.random.normal(k, (49, 10)) * 0.1,
+                "b": jnp.zeros((10,))}
+
+    def apply(self, params, x):
+        b = x.shape[0]
+        pooled = x[..., 0].reshape(b, 7, 4, 7, 4).mean(axis=(2, 4))
+        return pooled.reshape(b, 49) @ params["w"] + params["b"]
+
+
+def _pool(num_devices: int, per_device: int = 10, n_test: int = 200,
+          seed: int = 0):
+    n = num_devices * per_device + n_test
+    x, y = synthetic_images(jax.random.PRNGKey(seed), n)
+    ntr = num_devices * per_device
+    dev_x, dev_y = partition_iid(np.asarray(x[:ntr]), np.asarray(y[:ntr]),
+                                 num_devices, per_device, 10, seed=seed)
+    return dev_x, dev_y, jnp.asarray(x[ntr:]), jnp.asarray(y[ntr:])
+
+
+def _fc(num_devices: int, max_rounds: int, **kw):
+    return FederatedConfig(protocol="fd", num_devices=num_devices,
+                           local_iters=1, local_batch=4, server_iters=1,
+                           server_batch=4, max_rounds=max_rounds, seed=0,
+                           **kw)
+
+
+def run(pool: int = 4096, max_rounds: int = 3, quick: bool = False):
+    if quick:
+        pool = 256
+    data = _pool(pool)
+    ch = ChannelConfig(num_devices=pool, p_up_dbm=40.0)
+
+    per_ratio = {}
+    accs = {}
+    for ratio in RATIOS:
+        fc = _fc(pool, max_rounds, sample_ratio=ratio, sample_seed=123)
+        grid = make_grid(fc, ch, eta=(0.01,))
+        t0 = time.perf_counter()
+        runner = SweepRunner(TinyNet(), grid, *data)
+        res = runner.run()
+        cold_s = time.perf_counter() - t0
+        res = runner.run()  # warm: reuses the compiled scan
+        per_ratio[ratio] = {
+            "cohort": fc.cohort_size(),
+            "cold_s": round(cold_s, 3),
+            "warm_s": round(res.wall_s, 4),
+            "rounds_per_s": round(max_rounds / res.wall_s, 3),
+        }
+        accs[ratio] = res.acc.copy()
+        print(f"sample_ratio={ratio}: cohort={fc.cohort_size()}/{pool} "
+              f"warm={res.wall_s:.3f}s "
+              f"rounds/s={per_ratio[ratio]['rounds_per_s']:.2f}")
+
+    # the full-ratio point must BE the unsampled program: bitwise check
+    res0 = SweepRunner(TinyNet(), make_grid(_fc(pool, max_rounds), ch,
+                                            eta=(0.01,)), *data).run()
+    ratio1_max_dev = float(np.max(np.abs(accs[1.0] - res0.acc)))
+
+    rps = {r: per_ratio[r]["rounds_per_s"] for r in RATIOS}
+    out = {
+        "pool": pool,
+        "rounds": max_rounds,
+        "quick": bool(quick),
+        "ratios": {str(r): per_ratio[r] for r in RATIOS},
+        "speedup_050": round(rps[0.5] / rps[1.0], 3),
+        "speedup_025": round(rps[0.25] / rps[1.0], 3),
+        "ratio1_max_dev": ratio1_max_dev,
+    }
+    save_result("sampling", out)
+    print(f"sampling at D={pool}: q=0.5 {out['speedup_050']:.2f}x, "
+          f"q=0.25 {out['speedup_025']:.2f}x vs full participation; "
+          f"ratio1 dev={ratio1_max_dev:g}")
+    return out
+
+
+def main(quick=True):
+    out = run(quick=quick)
+    rows = []
+    for r, v in out["ratios"].items():
+        rows.append(f"sampling/q{r}_D{out['pool']},"
+                    f"{v['warm_s']*1e6:.0f},"
+                    f"rounds_per_s={v['rounds_per_s']:.2f}")
+    rows.append(f"sampling/speedup_D{out['pool']},0,"
+                f"q050={out['speedup_050']:.2f}x;"
+                f"q025={out['speedup_025']:.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv[1:])

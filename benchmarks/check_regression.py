@@ -74,6 +74,14 @@ GATES = [
     {"file": "service", "metric": "ckpt_on_off_ratio",
      "mode": "min_ratio", "ratio": 0.7,
      "match": ("rounds", "num_devices", "quick")},
+    # client sampling: a half cohort must keep its throughput edge over
+    # full participation (rounds/s ratio, host speed cancels) ...
+    {"file": "sampling", "metric": "speedup_050",
+     "mode": "min_ratio", "ratio": 0.7,
+     "match": ("pool", "rounds", "quick")},
+    # ... and sample_ratio=1.0 must stay the unsampled program exactly
+    {"file": "sampling", "metric": "ratio1_max_dev",
+     "mode": "max_value", "limit": 0.0, "match": ()},
     # Tables II/III mean sample privacy must not drop (values are
     # log-scale and can be negative, hence the additive floor)
     {"file": "privacy_tables", "metric": "tab2_mean",

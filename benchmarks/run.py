@@ -21,8 +21,8 @@ import traceback
 
 def main(argv=None) -> None:
     from . import (bench_kernels, bench_payload, bench_privacy,
-                   bench_protocols, bench_roofline, bench_scalability,
-                   bench_seed_sweep, bench_service)
+                   bench_protocols, bench_roofline, bench_sampling,
+                   bench_scalability, bench_seed_sweep, bench_service)
 
     modules = [
         ("payload", bench_payload),      # Sec. II-C / IV payload ratios
@@ -32,6 +32,7 @@ def main(argv=None) -> None:
         ("protocols", bench_protocols),  # Fig. 2 (quick, sweep engine)
         ("seed_sweep", bench_seed_sweep),  # (N_S, N_I) grid + engine speedup
         ("scalability", bench_scalability),  # Fig. 3 (quick)
+        ("sampling", bench_sampling),    # rounds/s vs sample_ratio
         ("service", bench_service),      # ckpt overhead + resume fidelity
     ]
     args = list(sys.argv[1:] if argv is None else argv)

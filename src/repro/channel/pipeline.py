@@ -55,7 +55,15 @@ class LinkPlan:
     requirements, and the payload bits they came from.  ``draw`` runs
     the channel stage for one round on the loop path; the sweep engine
     stacks the same fields over its config grid and vmaps
-    :data:`channel_stage` instead."""
+    :data:`channel_stage` instead.
+
+    ``n_links`` is the *participating* cohort of the round — under
+    client sampling / churn only the cohort is on air, so success masks
+    and the straggler stage span ``D_cohort`` links, not the pool
+    (``FederatedTrainer.link_plan`` caches one plan per cohort size).
+    The FDMA bandwidth split stays at the pool level
+    (``ChannelConfig.num_devices``): sampling changes who transmits, not
+    the spectrum plan."""
     p_up: float
     p_dn: float
     up_slots_first: int

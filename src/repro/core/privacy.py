@@ -26,6 +26,7 @@ import math
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def sample_privacy(uploaded, raws):
@@ -92,10 +93,25 @@ class GaussianAccountant:
     """Per-round (epsilon, delta) ledger for the ``dp_gaussian`` uplink
     codec.  ``step()`` once per round that released a noised payload;
     ``epsilon()`` is the cumulative spend so far (monotone in rounds,
-    equal to :func:`gaussian_epsilon` by construction)."""
+    equal to :func:`gaussian_epsilon` by construction).
+
+    Under client sampling / churn a device releases a payload only on
+    rounds it participates in, so charging every device for every round
+    over-reports per-device epsilon by 1/q.  ``step(cohort=...)`` with
+    the round's active-device indices records per-device participation
+    counts; :meth:`epsilon_device_max` then composes over the busiest
+    device's *own* rounds only.  Without cohort information the
+    accountant stays conservative: every device is assumed present every
+    round and the per-device bound collapses to the global one.
+    ``sample_ratio`` records the sampling fraction q for
+    amplification-aware reporting (the linear bound here does not take
+    the subsampling amplification discount — a tighter RDP accountant
+    would)."""
     sigma: float
     delta: float = 1e-5
     rounds: int = 0
+    sample_ratio: float = 1.0
+    device_rounds: dict = dataclasses.field(default_factory=dict)
 
     def __post_init__(self):
         # validate eagerly: a bad sigma/delta should fail at config
@@ -106,17 +122,42 @@ class GaussianAccountant:
     def epsilon_per_round(self) -> float:
         return gaussian_epsilon(self.sigma, self.delta, 1)
 
-    def step(self, n: int = 1) -> "GaussianAccountant":
+    def step(self, n: int = 1, cohort=None) -> "GaussianAccountant":
+        """Record ``n`` rounds of release.  ``cohort`` is the rounds'
+        active-device index array (None: participation unknown — every
+        device charged, the pre-sampling behaviour)."""
         self.rounds += n
+        if cohort is not None:
+            for d in np.asarray(cohort).ravel().tolist():
+                d = int(d)
+                self.device_rounds[d] = self.device_rounds.get(d, 0) + n
         return self
+
+    def device_rounds_max(self) -> int:
+        """Rounds of the most-participating device — ``rounds`` when no
+        cohorts were recorded (conservative full participation)."""
+        if not self.device_rounds:
+            return self.rounds
+        return max(self.device_rounds.values())
 
     def epsilon(self, rounds: int | None = None) -> float:
         return gaussian_epsilon(self.sigma, self.delta,
                                 self.rounds if rounds is None else rounds)
+
+    def epsilon_device_max(self) -> float:
+        """Worst per-device epsilon: composition over the rounds the
+        busiest device actually participated in."""
+        r = self.device_rounds_max()
+        return self.epsilon(r) if r else 0.0
 
     def ledger(self) -> dict:
         """JSON-ready accountant state for histories/result frames."""
         return {"sigma": self.sigma, "delta": self.delta,
                 "rounds": self.rounds,
                 "epsilon_per_round": self.epsilon_per_round,
-                "epsilon": self.epsilon() if self.rounds else 0.0}
+                "epsilon": self.epsilon() if self.rounds else 0.0,
+                "sample_ratio": self.sample_ratio,
+                "participating_devices": (len(self.device_rounds)
+                                          if self.device_rounds else None),
+                "device_rounds_max": self.device_rounds_max(),
+                "epsilon_device_max": self.epsilon_device_max()}

@@ -58,6 +58,7 @@ from .conversion import output_to_model, output_to_model_steps
 from .losses import fd_loss
 from .outputs import label_averaged_outputs
 from .privacy import GaussianAccountant
+from .sampling import SamplerConfig
 from .seed_prep import (collect_seeds, prepare_seeds,  # noqa: F401
                         summarize_seeds)
 
@@ -94,12 +95,22 @@ class FederatedConfig:
     dp_sigma: float = 1.0          # dp_gaussian codec: noise multiplier
     dp_clip: float = 1.0           # dp_gaussian codec: L2 sensitivity clip
     dp_delta: float = 1e-5         # dp_gaussian codec: DP delta
+    sample_ratio: float = 1.0      # per-round participation fraction q:
+    #                                each round trains a seeded cohort of
+    #                                ceil(q * num_devices) devices out of
+    #                                the num_devices pool (1.0: everyone,
+    #                                the paper's setting)
+    sample_seed: int = 0           # cohort-draw stream seed (cohorts are
+    #                                a pure function of (seed, sample_seed,
+    #                                round) — see core.sampling)
+    sample_min_active: int = 1     # cohort-size floor
 
     def __post_init__(self):
         # data-dependent bounds (n_seed vs the per-device sample count)
         # are checked where the data is first seen: seed_prep.collect_seeds
         self.protocol = canonical_protocol(self.protocol)
         self.codec_spec()  # codec fields fail at config time, not round 1
+        self.sampler()     # sampling fields too
         if self.n_seed < 1:
             raise ValueError(f"n_seed must be >= 1, got {self.n_seed}")
         if self.n_inverse < 1:
@@ -115,6 +126,19 @@ class FederatedConfig:
         return parse_codec(self.codec, quant_bits=self.quant_bits,
                            dp_sigma=self.dp_sigma, dp_clip=self.dp_clip,
                            dp_delta=self.dp_delta)
+
+    def sampler(self) -> SamplerConfig:
+        """The per-round client sampler (``sample_*`` fields resolved)."""
+        return SamplerConfig(sample_ratio=self.sample_ratio,
+                             min_active=self.sample_min_active,
+                             seed=self.sample_seed)
+
+    def cohort_size(self, pool_size: Optional[int] = None) -> int:
+        """Devices training per round — ``num_devices`` unless sampling
+        shrinks it.  This is the static shape every compiled round path
+        sizes its device axis (and mesh, and link plan) by."""
+        pool = self.num_devices if pool_size is None else pool_size
+        return self.sampler().cohort_size(pool)
 
 
 # ---------------------------------------------------------------------------
@@ -274,7 +298,10 @@ class FederatedTrainer:
 
         # ---- mesh-sharded path: device axis along the "data" mesh axis,
         # reductions as psum collectives over the shards ----
-        self.mesh = make_device_mesh(fc.num_devices,
+        # the mesh spans the per-round cohort, not the pool: only
+        # D_cohort devices ever enter the shard_mapped fns, so a sampled
+        # trainer can hold a pool far larger than the chip count
+        self.mesh = make_device_mesh(fc.cohort_size(),
                                      fc.mesh_shards or None)
         ps = federated_pspecs()
         dev, rep = ps["device"], ps["replicated"]
@@ -350,18 +377,26 @@ class FederatedTrainer:
         output); the round number and every PRNG draw derive from it, so
         a state rebuilt from a checkpoint continues the exact stream an
         uninterrupted loop would have produced.  ``dev_x``/``dev_y`` are
-        the *active cohort*'s shards ``(D_active, n_local, ...)`` — the
+        the *device pool*'s shards ``(D_pool, n_local, ...)`` — the
         device-axis state in ``state`` must match, which is how the
         serving driver runs churned cohorts through the same step.
+
+        With ``fc.sample_ratio < 1`` the round trains only the seeded
+        cohort of :meth:`FederatedConfig.cohort_size` devices
+        (``core.sampling.SamplerConfig``): pool-axis state is gathered
+        down to the cohort before local SGD, the link plan spans
+        ``D_cohort`` links, and the trained cohort rows are scattered
+        back into the pool afterwards — non-participants keep their
+        parameters and KD tables untouched, exactly like a failed
+        downlink.  At ``sample_ratio == 1`` this path is bypassed
+        entirely, so full-participation histories stay bit-identical.
         """
         fc = self.fc
         proto = fc.protocol
         dev_x = jnp.asarray(dev_x)
         dev_y = jnp.asarray(dev_y)
-        D = dev_x.shape[0]
+        D_pool = dev_x.shape[0]
         p = state["round"] + 1
-        if plan is None:
-            plan = self.link_plan(state["g_params"], n_links=D)
 
         t0 = time.perf_counter()
         kr = jax.random.fold_in(state["key"], p)
@@ -369,6 +404,23 @@ class FederatedTrainer:
         dev_params, g_params = state["dev_params"], state["g_params"]
         gout, dev_gout = state["gout"], state["dev_gout"]
         seeds = state["seeds"]
+
+        # ---- client sampling: gather the round's cohort off the pool ----
+        sampler = fc.sampler()
+        D = sampler.cohort_size(D_pool)
+        cohort = None
+        pool_params = pool_gout = None
+        if D < D_pool:
+            cohort = sampler.cohort(fc.seed, p, D_pool)
+            jdx = jnp.asarray(cohort)
+            pool_params, pool_gout = dev_params, dev_gout
+            dev_params = jax.tree.map(lambda a: a[jdx], dev_params)
+            dev_gout = dev_gout[jdx]
+            dev_x, dev_y = dev_x[jdx], dev_y[jdx]
+        # a caller-supplied plan sized for a different cohort (churn on
+        # top of sampling) is rebuilt for this round's link count
+        if plan is None or plan.n_links != D:
+            plan = self.link_plan(state["g_params"], n_links=D)
 
         # ---- local updates (eq. 1 / 3) ----
         dkeys = jax.random.split(jax.random.fold_in(kr, 1), D)
@@ -419,10 +471,17 @@ class FederatedTrainer:
         if proto != "fd":
             dev_params = downlink_params(dev_params, g_params, mask)
 
+        # ---- scatter the trained cohort back into the pool ----
+        if cohort is not None:
+            dev_params = jax.tree.map(
+                lambda pool, coh: pool.at[jdx].set(coh), pool_params,
+                dev_params)
+            dev_gout = pool_gout.at[jdx].set(dev_gout)
+
         compute_s = time.perf_counter() - t0
         cum_time = state["cum_time_s"] + compute_s + link["latency_s"]
 
-        # ---- evaluation of the reference device (device 0) ----
+        # ---- evaluation of the reference device (pool device 0) ----
         ref = jax.tree.map(lambda dp: dp[0], dev_params)
         acc = float(self._accuracy(ref, test_x, test_y))
         if log:
@@ -462,6 +521,8 @@ class FederatedTrainer:
                   "compute_s": compute_s, "cum_time_s": cum_time,
                   "uplink_ok": int(up_ok.sum()),
                   "n_straggle": int(link.get("n_straggle", 0)),
+                  "n_active": D,
+                  "cohort": cohort,  # None: every pool device trained
                   "link": link}
         return new_state, record
 
@@ -478,14 +539,18 @@ class FederatedTrainer:
         spec = self._codec
         state = self.init_state()
         # ---- link pipeline plan: codec-aware payload bits -> slot counts
-        plan = self.link_plan(state["g_params"])
-        acct = (GaussianAccountant(spec.dp_sigma, spec.dp_delta)
+        # (sized for the per-round cohort, the devices actually on air)
+        plan = self.link_plan(state["g_params"], n_links=fc.cohort_size())
+        acct = (GaussianAccountant(spec.dp_sigma, spec.dp_delta,
+                                   sample_ratio=fc.sample_ratio)
                 if spec.name == "dp_gaussian" else None)
 
         history = {"acc": [], "round_latency_s": [], "compute_s": [],
                    "cum_time_s": [], "loss": [], "uplink_ok": [],
                    "converged_round": None, "protocol": fc.protocol,
                    "codec": spec.name,
+                   "sample_ratio": fc.sample_ratio,
+                   "cohort_size": fc.cohort_size(),
                    "uplink_bits_first": plan.up_bits_first,
                    "uplink_bits": plan.up_bits,
                    "downlink_bits": plan.dn_bits}
@@ -498,7 +563,9 @@ class FederatedTrainer:
             state, rec = self.round_once(state, dev_x, dev_y, test_x,
                                          test_y, plan=plan, log=log)
             if acct is not None:
-                acct.step()
+                # a device spends privacy budget only on rounds it
+                # released a (noised) payload — i.e. its cohort rounds
+                acct.step(cohort=rec["cohort"])
                 history["dp_epsilon"].append(acct.epsilon())
             for k in ("acc", "loss", "round_latency_s", "compute_s",
                       "cum_time_s", "uplink_ok"):
@@ -532,7 +599,8 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
                          local_train_fn: Optional[Callable] = None,
                          weighted_avg_fn: Optional[Callable] = None,
                          gout_update_fn: Optional[Callable] = None,
-                         codec: str = "identity"):
+                         codec: str = "identity",
+                         cohort_size: Optional[int] = None):
     """Pure per-round protocol step batched over a leading config-grid
     axis — ``FederatedTrainer.run``'s round body with every host decision
     (success gating, convergence bookkeeping) expressed as masked lax ops,
@@ -584,15 +652,32 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
     quantization bit widths and DP noise sweep inside one program; the
     identity codec touches neither consts nor PRNG, keeping the compiled
     graph exactly the pre-pipeline one.
+
+    ``cohort_size`` < ``num_devices`` turns on per-round client sampling
+    (a structural axis like the codec family: the engine groups points by
+    cohort size).  ``xs`` then carries ``cohort`` (G, D_cohort) int32 —
+    host-precomputed sorted ``SamplerConfig.cohort`` draws — and the step
+    gathers pool-axis state/data down to the cohort, trains ``D_cohort``
+    devices through the identical round body (local SGD, ``D_cohort``
+    channel links, codec, aggregation, downlink), and scatters the
+    cohort rows back into the (G, D_pool, ...) carry.  When
+    ``cohort_size`` is None or covers the pool, no gather/scatter (or
+    ``cohort`` input) exists in the graph at all, so full-participation
+    programs stay graph-identical to the unsampled step.
     """
     proto = canonical_protocol(protocol)
     D, C = num_devices, num_classes
+    Dc = D if cohort_size is None else min(int(cohort_size), D)
+    sampled = Dc < D
     codec_spec = parse_codec(codec)
 
     if local_train_fn is None:
+        # a sampled gather of shared (D, n, ...) data yields per-config
+        # (G, Dc, n, ...) batches, so the grid local-train needs the
+        # per-config in_axes layout even on shared-data grids
         local_train_fn = make_grid_local_train(model_apply, C, local_iters,
                                                local_batch,
-                                               per_config_data)
+                                               per_config_data or sampled)
     if weighted_avg_fn is None:
         weighted_avg_fn = jax.vmap(weighted_avg)
     if gout_update_fn is None:
@@ -629,17 +714,34 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
             consts["key"], p)
         use_kd = (p > 1) if proto != "fl" else jnp.asarray(False)
 
+        # ---- client sampling: gather the round's cohort (G, Dc, ...)
+        # off the (G, D, ...) pool carry ----
+        pool_params, pool_gout = state["dev_params"], state["dev_gout"]
+        if sampled:
+            chrt = xs["cohort"]                          # (G, Dc) int32
+            take = jax.vmap(lambda a, i: a[i])
+            dev_params = jax.tree.map(lambda a: take(a, chrt),
+                                      pool_params)
+            dev_gout = take(pool_gout, chrt)
+            if per_config_data:
+                dx, dy = take(dev_x, chrt), take(dev_y, chrt)
+            else:
+                dx, dy = dev_x[chrt], dev_y[chrt]        # (G, Dc, n, ...)
+        else:
+            dev_params, dev_gout = pool_params, pool_gout
+            dx, dy = dev_x, dev_y
+
         # ---- local updates (eq. 1 / 3) ----
         dkeys = jax.vmap(
-            lambda k: jax.random.split(jax.random.fold_in(k, 1), D))(kr)
+            lambda k: jax.random.split(jax.random.fold_in(k, 1), Dc))(kr)
         dev_params, favg, cnt, mloss = local_train_fn(
-            state["dev_params"], dev_x, dev_y, dkeys, state["dev_gout"],
+            dev_params, dx, dy, dkeys, dev_gout,
             use_kd, consts["eta"], consts["beta"], consts["n_local"])
 
         # ---- channel (batched SNR/outage draws over the grid) ----
         ck = jax.vmap(lambda k: jax.random.fold_in(k, 3))(kr)
         link = channel_fn(ck, consts["p_up"], xs["up_slots"],
-                          consts["p_dn"], xs["dn_slots"], D, t_max_slots,
+                          consts["p_dn"], xs["dn_slots"], Dc, t_max_slots,
                           tau_s)
         up_ok = link["up_ok"]                        # (G, D)
         dn_ok = link["dn_ok"]
@@ -655,7 +757,7 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
         else:
             kc = jax.vmap(lambda k: jax.random.fold_in(k, 5))(kr)
             dev_params_rx, favg_rx = codec_fn(
-                dev_params, favg, kc, state["dev_gout"],
+                dev_params, favg, kc, dev_gout,
                 state["g_params"], consts["q_levels"],
                 consts["dp_sigma"], consts["dp_clip"])
 
@@ -678,11 +780,19 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
                     consts["eta"], consts["beta"])
 
         # ---- downlink stage (gated per device by dn_ok) ----
-        dev_gout = downlink_gout(state["dev_gout"], gout, dn_ok)
+        dev_gout = downlink_gout(dev_gout, gout, dn_ok)
         if proto != "fd":
             dev_params = downlink_params(dev_params, g_params, dn_ok)
 
-        # ---- evaluation of the reference device (device 0) ----
+        # ---- scatter the trained cohort back into the pool carry ----
+        if sampled:
+            scatter = jax.vmap(lambda pool, i, coh: pool.at[i].set(coh))
+            dev_params = jax.tree.map(
+                lambda pool, coh: scatter(pool, chrt, coh), pool_params,
+                dev_params)
+            dev_gout = scatter(pool_gout, chrt, dev_gout)
+
+        # ---- evaluation of the reference device (pool device 0) ----
         ref = jax.tree.map(lambda dp: dp[:, 0], dev_params)
         acc = acc_fn(ref)
 

@@ -1,0 +1,117 @@
+"""Per-round client sampling: stateless seeded cohort draws.
+
+The ROADMAP regime is a device *pool* far larger than any round can
+train — millions of users, a sampled cohort per round (the active-subset
+participation of communication-efficient FD variants, Sattler et al.).
+This module is the one source of cohort randomness for every path that
+selects devices:
+
+* :class:`SamplerConfig` — fixed-size sampling: round ``p`` trains the
+  ``cohort_size`` devices with the smallest per-device uniforms of the
+  round's stateless stream.  The cohort is a pure function of
+  ``(fed_seed, sampler_seed, round)``: no RNG state exists to
+  checkpoint, a resumed run re-draws identical cohorts, and the sweep
+  engine can precompute every round's cohort host-side and feed it to
+  the compiled scan as a traced gather index.
+* :func:`participation_uniforms` — the shared primitive: ONE uniform per
+  pool device from ``np.random.default_rng([fed_seed, sampler_seed,
+  round])``.  ``launch.service.ChurnConfig`` thresholds the same
+  uniforms (Bernoulli churn), so churn and sampling draw from one
+  stream; in particular the stream is consumed even when the draw is
+  degenerate (``sample_ratio = 1`` / ``p_active = 1``), so nudging a
+  ratio across 1.0 never shifts unrelated draws (the historical
+  ``p_active >= 1`` early-return bug).
+* :func:`participation_counts` — per-device participation totals over a
+  round range, the input to participation-correct DP accounting
+  (``core.privacy.GaussianAccountant``): a device's epsilon composes
+  only over the rounds it released a payload.
+
+Cohort invariants (property-tested in tests/test_sampling.py):
+deterministic, sorted, duplicate-free, exactly ``cohort_size`` entries,
+and nested across ratios — a device in the 10% cohort of round ``p`` is
+also in the 20% cohort of round ``p`` (smallest-uniform selection).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+def participation_rng(fed_seed: int, sampler_seed: int,
+                      round_: int) -> np.random.Generator:
+    """The stateless per-round participation stream — seeded by the run,
+    the sampler, and the 1-based round number, nothing else."""
+    return np.random.default_rng([int(fed_seed), int(sampler_seed),
+                                  int(round_)])
+
+
+def participation_uniforms(fed_seed: int, sampler_seed: int, round_: int,
+                           pool_size: int
+                           ) -> tuple[np.ndarray, np.random.Generator]:
+    """One uniform per pool device from the round's stream, plus the
+    generator (already advanced past the uniforms) for draws that need a
+    top-up (churn's ``min_active``).  Every participation decision —
+    fixed-size sampling and Bernoulli churn alike — derives from these
+    same ``pool_size`` numbers, which is what makes the two mechanisms
+    stream-compatible."""
+    rng = participation_rng(fed_seed, sampler_seed, round_)
+    return rng.random(pool_size), rng
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """Seeded, stateless fixed-size client sampling.
+
+    ``sample_ratio`` is the participation fraction q: each round trains
+    ``cohort_size = ceil(q * pool)`` devices (clamped to
+    ``[min_active, pool]``).  A fixed cohort size — unlike Bernoulli
+    churn's variable one — is what lets the compiled round paths trace
+    the gather once: every round of every grid point shares one
+    ``(D_cohort,)`` index shape.  ``sample_ratio = 1`` disables
+    sampling (the cohort is the whole pool, in order)."""
+    sample_ratio: float = 1.0
+    min_active: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.sample_ratio <= 1.0:
+            raise ValueError(f"sample_ratio must be in (0, 1], "
+                             f"got {self.sample_ratio}")
+        if self.min_active < 1:
+            raise ValueError("min_active must be >= 1: a round needs at "
+                             "least one training device")
+
+    def cohort_size(self, pool_size: int) -> int:
+        """Devices per round for a ``pool_size`` pool: ceil(q * pool),
+        at least ``min_active``, at most the pool.  The 1e-9 slack
+        absorbs float representation error (0.3 * 10 is 3.0000...04 in
+        binary; it must mean 3 devices, not 4)."""
+        want = math.ceil(self.sample_ratio * pool_size - 1e-9)
+        return min(pool_size, max(want, min(self.min_active, pool_size)))
+
+    def cohort(self, fed_seed: int, round_: int,
+               pool_size: int) -> np.ndarray:
+        """Sorted active-device indices of round ``round_`` — a pure
+        function of (seeds, round).  The cohort is the ``cohort_size``
+        devices with the smallest uniforms of the round's stream, so
+        cohorts nest across ratios and the full-ratio cohort is exactly
+        ``arange(pool_size)`` (bit-identical to the unsampled path)
+        while still consuming the stream."""
+        size = self.cohort_size(pool_size)
+        u, _ = participation_uniforms(fed_seed, self.seed, round_,
+                                      pool_size)
+        if size >= pool_size:
+            return np.arange(pool_size)
+        return np.sort(np.argpartition(u, size)[:size])
+
+    def participation_counts(self, fed_seed: int, rounds: int,
+                             pool_size: int) -> np.ndarray:
+        """(pool_size,) participation totals over rounds ``1..rounds`` —
+        how many payloads each device actually released, the unit DP
+        composition must count (see ``core.privacy``)."""
+        counts = np.zeros(pool_size, np.int64)
+        for p in range(1, rounds + 1):
+            counts[self.cohort(fed_seed, p, pool_size)] += 1
+        return counts

@@ -44,7 +44,10 @@ if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids a cycle)
 #: (step sizes, conversion budgets, channel fields) leaves the host prep
 #: untouched, so grid points differing only there share one prep run.
 SEED_FIELDS = ("protocol", "lam", "n_seed", "n_inverse", "seed",
-               "num_devices", "num_classes")
+               "num_devices", "num_classes",
+               # sampling fields: round-1 seeds are collected from the
+               # round-1 *cohort*, which these determine
+               "sample_ratio", "sample_seed", "sample_min_active")
 
 
 @dataclasses.dataclass

@@ -55,6 +55,7 @@ from repro.channel import ChannelConfig
 from repro.core.privacy import GaussianAccountant
 from repro.core.protocols import (FederatedConfig, FederatedTrainer,
                                   summarize_seeds)
+from repro.core.sampling import participation_uniforms
 
 #: Keys of one round's JSON-ready history record (the ``link`` arrays
 #: stay out of the checkpoint meta).
@@ -84,11 +85,16 @@ class ChurnConfig:
                        pool_size: int) -> np.ndarray:
         """Sorted active-device indices of round ``round_`` — a pure
         function of (seeds, round), so resumed runs re-draw identical
-        cohorts without checkpointing any RNG state."""
-        if self.p_active >= 1.0:
-            return np.arange(pool_size)
-        rng = np.random.default_rng([fed_seed, self.seed, round_])
-        mask = rng.random(pool_size) < self.p_active
+        cohorts without checkpointing any RNG state.
+
+        Churn thresholds the same per-round participation uniforms the
+        client sampler ranks (``core.sampling``), and consumes them even
+        when ``p_active >= 1`` makes the draw degenerate — an early
+        return used to skip the rng entirely, so nudging ``p_active``
+        across 1.0 shifted unrelated draws from the same stream."""
+        u, rng = participation_uniforms(fed_seed, self.seed, round_,
+                                        pool_size)
+        mask = u < self.p_active
         idx = np.flatnonzero(mask)
         want = min(self.min_active, pool_size)
         if len(idx) < want:
@@ -134,22 +140,35 @@ class InferenceEndpoint:
     def flush(self, g_params) -> np.ndarray:
         """Serve every pending request against ``g_params``.  Requests
         are padded to the fixed batch shape (pad rows are discarded), so
-        the jitted step never retraces."""
+        the jitted step never retraces.
+
+        Failure-safe: if predict raises mid-loop, the unserved tail is
+        re-queued (ahead of anything submitted meanwhile) before the
+        exception propagates — a crashed flush loses no requests, the
+        next flush serves them.  The swap-then-iterate here used to drop
+        every request the failed loop hadn't reached."""
         if not self._queue:
             return np.zeros((0,), np.int32)
         out = []
         B = self.batch_size
         queue, self._queue = self._queue, []
-        for i in range(0, len(queue), B):
-            chunk = np.stack(queue[i:i + B])
-            n = chunk.shape[0]
-            if n < B:
-                pad = np.zeros((B - n,) + chunk.shape[1:], chunk.dtype)
-                chunk = np.concatenate([chunk, pad])
-            preds = np.asarray(self._predict(g_params,
-                                             jnp.asarray(chunk)))[:n]
-            out.append(preds)
-            self.batches += 1
+        done = 0
+        try:
+            for i in range(0, len(queue), B):
+                chunk = np.stack(queue[i:i + B])
+                n = chunk.shape[0]
+                if n < B:
+                    pad = np.zeros((B - n,) + chunk.shape[1:],
+                                   chunk.dtype)
+                    chunk = np.concatenate([chunk, pad])
+                preds = np.asarray(self._predict(g_params,
+                                                 jnp.asarray(chunk)))[:n]
+                out.append(preds)
+                self.batches += 1
+                done = i + n
+        except BaseException:
+            self._queue[:0] = queue[done:]
+            raise
         preds = np.concatenate(out)
         self.served += preds.shape[0]
         return preds
@@ -180,7 +199,11 @@ class FederatedService:
         self.keep = keep
         self.endpoint = InferenceEndpoint(model.apply, serve_batch)
         spec = self.fc.codec_spec()
-        self._acct = (GaussianAccountant(spec.dp_sigma, spec.dp_delta)
+        # effective participation fraction: churn and client sampling
+        # compose (round_once sub-samples the churned cohort)
+        q = self.churn.p_active * self.fc.sample_ratio
+        self._acct = (GaussianAccountant(spec.dp_sigma, spec.dp_delta,
+                                         sample_ratio=q)
                       if spec.name == "dp_gaussian" else None)
         self.state = self.trainer.init_state()
         self.history: list[dict] = []
@@ -230,11 +253,17 @@ class FederatedService:
         new_state["dev_gout"] = state["dev_gout"].at[jdx].set(
             cohort["dev_gout"])
         self.state = new_state
+        # actual participants: the churned cohort, further narrowed by
+        # round_once's client sampling when fc.sample_ratio < 1
+        # (rec["cohort"] indexes within the churned cohort)
+        active = idx if rec["cohort"] is None else idx[rec["cohort"]]
         if self._acct is not None:
-            self._acct.step()
+            # privacy budget is spent by participating devices only
+            self._acct.step(cohort=active)
             rec["dp_epsilon"] = self._acct.epsilon()
-        rec["n_active"] = len(idx)
-        rec["active"] = idx
+            rec["dp_epsilon_device_max"] = self._acct.epsilon_device_max()
+        rec["n_active"] = len(active)
+        rec["active"] = active
         self.history.append(rec)
         if self.ckpt_dir and p % self.ckpt_every == 0:
             self.save_checkpoint()
@@ -254,8 +283,9 @@ class FederatedService:
 
     # -- checkpoint / restore -----------------------------------------
     def _history_meta(self) -> list[dict]:
-        return [{k: r.get(k) for k in _RECORD_KEYS + ("n_active",
-                                                      "dp_epsilon")
+        return [{k: r.get(k) for k in
+                 _RECORD_KEYS + ("n_active", "dp_epsilon",
+                                 "dp_epsilon_device_max")
                  if k in r} for r in self.history]
 
     def save_checkpoint(self) -> str:
@@ -286,6 +316,10 @@ class FederatedService:
                 "protocol": self.fc.protocol,
                 "dp_rounds": (self._acct.rounds
                               if self._acct is not None else 0),
+                "dp_device_rounds": (
+                    {str(k): v for k, v in
+                     sorted(self._acct.device_rounds.items())}
+                    if self._acct is not None else None),
                 "seed_meta": self._seed_meta,
                 "history": self._history_meta()}
         return checkpoint.save(self.ckpt_dir, state["round"], tree,
@@ -320,6 +354,9 @@ class FederatedService:
         self._seed_meta = meta.get("seed_meta")
         if self._acct is not None:
             self._acct.rounds = meta.get("dp_rounds", 0)
+            self._acct.device_rounds = {
+                int(k): int(v)
+                for k, v in (meta.get("dp_device_rounds") or {}).items()}
         return meta["round"]
 
 

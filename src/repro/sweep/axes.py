@@ -13,10 +13,12 @@ kinds of axis exist:
   ``codec``) — protocols differ *structurally* (their round bodies
   branch) and so do link-codec families (identity skips the codec stage
   entirely; quantize/delta/dp_gaussian insert different transforms), so
-  the engine groups points by (protocol, codec family) and compiles one
-  vmapped ``lax.scan`` program per distinct group.  A codec's *numeric*
-  parameters (``quant_bits``, ``dp_sigma``, ``dp_clip``) are ordinary
-  traced per-config scalars and batch inside a program;
+  the engine groups points by (protocol, codec family, cohort size) and
+  compiles one vmapped ``lax.scan`` program per distinct group — the
+  cohort size joining because a ``sample_ratio`` axis changes the
+  compiled device-axis shape.  A codec's *numeric* parameters
+  (``quant_bits``, ``dp_sigma``, ``dp_clip``) and the ``sample_seed``
+  are ordinary per-config values and batch inside a program;
 * **partition axes** (:data:`PART_SWEEPABLE`: ``partition``, ``alpha``,
   ``n_local``) — which device partition a point trains on.  Each grid
   point carries a :class:`PartitionSpec`; the runner builds each
@@ -44,10 +46,13 @@ from ..data.partition import PARTITION_SCHEMES, PartitionSpec
 from ..registry import PROTOCOLS, canonical_protocol
 
 # Traced per-config scalars, or host-absorbed before compilation.
+# sample_ratio / sample_seed are host-absorbed: cohorts are precomputed
+# per point and fed to the compiled scan as gather indices (ratios with
+# equal cohort *size* batch in one program; see program_groups).
 FED_SWEEPABLE = frozenset({
     "eta", "beta", "eps", "lam", "n_seed", "n_inverse", "server_iters",
     "sample_bits", "seed", "quant_bits", "dp_sigma", "dp_clip",
-    "dp_delta",
+    "dp_delta", "sample_ratio", "sample_seed",
 })
 # Channel fields only enter via the host-computed link budget
 # (per-slot success probability + decode-slot counts), so any of them
@@ -131,15 +136,20 @@ class SweepGrid:
         return groups
 
     def program_groups(self) -> dict:
-        """{(protocol, codec family): [point indices]} in point order —
-        the engine's compilation unit.  The codec *family* is structural
-        (it changes which transforms the round body contains); its
-        numeric parameters stay traced, so e.g. a ``quant_bits`` axis
-        batches inside one quantize program."""
+        """{(protocol, codec family, cohort size): [point indices]} in
+        point order — the engine's compilation unit.  The codec *family*
+        is structural (it changes which transforms the round body
+        contains); its numeric parameters stay traced, so e.g. a
+        ``quant_bits`` axis batches inside one quantize program.  The
+        *cohort size* is structural too (it fixes the device-axis shape
+        of the compiled round); ``sample_ratio=1.0`` points resolve to
+        the full pool and compile graph-identical programs to the
+        unsampled step, while a ``sample_seed`` axis — same size,
+        different draws — batches inside one sampled program."""
         groups: dict = {}
         for g, (fc, _) in enumerate(self.points):
-            groups.setdefault((fc.protocol, fc.codec_spec().name),
-                              []).append(g)
+            key = (fc.protocol, fc.codec_spec().name, fc.cohort_size())
+            groups.setdefault(key, []).append(g)
         return groups
 
 

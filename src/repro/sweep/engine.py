@@ -62,7 +62,7 @@ except ImportError:
     from jax.experimental.shard_map import shard_map
 
 from ..channel import round_slot_plan
-from ..core.privacy import gaussian_epsilon
+from ..core.privacy import GaussianAccountant, gaussian_epsilon
 from ..core.protocols import (FLD_FAMILY, FederatedTrainer,
                               gout_update_psum, make_grid_local_train,
                               make_grid_round_step, weighted_avg_psum)
@@ -206,7 +206,7 @@ class _ProtocolProgram:
 
     def __init__(self, model, grid: SweepGrid, proto: str, idxs, parts,
                  test_x, test_y, memo: SeedPrepMemo, mesh,
-                 codec: str = "identity"):
+                 codec: str = "identity", cohort_size: int | None = None):
         engine_stats.programs += 1
         fc0, ch0 = grid.points[idxs[0]]
         self.idxs = idxs
@@ -214,8 +214,16 @@ class _ProtocolProgram:
         points = [grid.points[i] for i in idxs]
         G, D, C, R = len(idxs), fc0.num_devices, fc0.num_classes, \
             fc0.max_rounds
+        # client sampling: the cohort size is part of this group's
+        # structural identity (program_groups), so every point agrees
+        Dc = D if cohort_size is None else min(int(cohort_size), D)
+        sampled = Dc < D
         dev_x, dev_y, n_local, per_config = _stack_partitions(parts)
         feat = dev_x.shape[3:] if per_config else dev_x.shape[2:]
+        if sampled and mesh is not None:
+            # the mesh spans the cohort (only Dc devices enter the
+            # shard_mapped fns), mirroring the sampled trainer's mesh
+            mesh = make_device_mesh(Dc, fc0.mesh_shards or None)
 
         # ---- host prep, per config in the loop path's exact key order;
         # seed prep is memoized on the seed-determining content (config
@@ -227,6 +235,12 @@ class _ProtocolProgram:
                  "up_bits1": [], "up_bits": []}
         specs = [fc.codec_spec() for fc, _ in points]
         k_max = max(fc.server_iters for fc, _ in points)
+        # sampled groups prep seeds on the round-1 *cohort* slice of each
+        # partition (the loop path collects from the gathered cohort);
+        # gathers are cached by (partition identity, cohort content) so
+        # points sharing both still share one array object — keeping the
+        # seed-prep memo's identity/fingerprint dedup effective
+        gather_cache: dict = {}
         for (fc, ch), spec, (px, py) in zip(points, specs, parts):
             kinit, key = jax.random.split(jax.random.PRNGKey(fc.seed))
             run_keys.append(np.asarray(key))
@@ -234,9 +248,18 @@ class _ProtocolProgram:
             inits.append(params)
             n_mod = sum(p.size for p in jax.tree.leaves(params))
             if proto in FLD_FAMILY:
+                spx, spy = px, py
+                if sampled:
+                    c1 = fc.sampler().cohort(fc.seed, 1, D)
+                    ckey = (id(px), c1.tobytes())
+                    pair = gather_cache.get(ckey)
+                    if pair is None:
+                        pair = (np.asarray(px)[c1], np.asarray(py)[c1])
+                        gather_cache[ckey] = pair
+                    spx, spy = pair
                 kr1 = jax.random.fold_in(key, 1)
                 seed_sets.append(prepare_seeds(
-                    fc, px, py, jax.random.fold_in(kr1, 2), memo=memo))
+                    fc, spx, spy, jax.random.fold_in(kr1, 2), memo=memo))
                 ck = np.zeros((R, k_max, 2), np.uint32)
                 for p in range(1, R + 1):
                     base = jax.random.fold_in(jax.random.fold_in(key, p), 4)
@@ -286,6 +309,24 @@ class _ProtocolProgram:
         self.dp_epsilon = np.asarray(
             [gaussian_epsilon(s.dp_sigma, s.dp_delta, R)
              if s.name == "dp_gaussian" else np.nan for s in specs])
+        # full DP ledgers, participation-aware: stepped through the same
+        # accountant (with the same per-round cohorts) the loop path's
+        # run() uses, so sweep histories carry identical history["dp"]
+        self.dp_ledgers = []
+        for (fc, _), s in zip(points, specs):
+            if s.name != "dp_gaussian":
+                self.dp_ledgers.append(None)
+                continue
+            acct = GaussianAccountant(s.dp_sigma, s.dp_delta,
+                                      sample_ratio=fc.sample_ratio)
+            smp = fc.sampler()
+            for p in range(1, R + 1):
+                acct.step(cohort=(smp.cohort(fc.seed, p, D) if sampled
+                                  else None))
+            self.dp_ledgers.append(acct.ledger())
+        self.dp_epsilon_device = np.asarray(
+            [led["epsilon_device_max"] if led else np.nan
+             for led in self.dp_ledgers])
         if proto in FLD_FAMILY:
             sx, sy, n_train = _pad_seed_sets(seed_sets, C)
             consts["seeds_x"] = jnp.asarray(sx)
@@ -307,16 +348,30 @@ class _ProtocolProgram:
                                  (R, 1)),
             "conv_keys": ck,
         }
+        if sampled:
+            # every round's cohort, host-drawn per point: (R, G, Dc)
+            # gather indices for the compiled scan (unsampled groups get
+            # no "cohort" input at all — graph-identical to the classic
+            # step)
+            cohorts = np.stack([
+                np.stack([fc.sampler().cohort(fc.seed, p, D)
+                          for fc, _ in points])
+                for p in range(1, R + 1)])
+            self._xs["cohort"] = jnp.asarray(cohorts, jnp.int32)
 
         # ---- device-axis placement: vmapped, or shard_mapped over the
         # "data" mesh exactly like the trainer's sharded path ----
         fns = {}
         if mesh is not None:
+            # a sampled gather hands local_train per-config (G, Dc, ...)
+            # batches even off shared data, so the in_axes/in_specs
+            # follow the per-config layout whenever sampling is on
             grid_lt = make_grid_local_train(model.apply, C,
                                             fc0.local_iters,
-                                            fc0.local_batch, per_config)
+                                            fc0.local_batch,
+                                            per_config or sampled)
             gdev = P(None, "data")   # (G, D, ...): shard the device dim
-            ddev = gdev if per_config else P("data")  # per-config data
+            ddev = gdev if (per_config or sampled) else P("data")
             rep = P()
             fns["local_train_fn"] = shard_map(
                 grid_lt, mesh=mesh,
@@ -338,7 +393,8 @@ class _ProtocolProgram:
             t_max_slots=ch0.t_max_slots, tau_s=ch0.tau_s,
             dev_x=dev_x, dev_y=dev_y, test_x=jnp.asarray(test_x),
             test_y=jnp.asarray(test_y), consts=consts,
-            per_config_data=per_config, codec=codec, **fns)
+            per_config_data=per_config, codec=codec,
+            cohort_size=Dc, **fns)
 
         def _sweep_program(state, xs):
             engine_stats.traces += 1  # Python side effect: trace-counted
@@ -393,11 +449,12 @@ class SweepRunner:
 
         memo = SeedPrepMemo()
         self._programs = []          # (protocol, idxs, program)
-        for (proto, codec), idxs in grid.program_groups().items():
+        for (proto, codec, csize), idxs in grid.program_groups().items():
             prog = _ProtocolProgram(
                 model, grid, proto, idxs,
                 [self.partitions[i] for i in idxs],
-                test_x, test_y, memo, self.mesh, codec=codec)
+                test_x, test_y, memo, self.mesh, codec=codec,
+                cohort_size=csize)
             self._programs.append((proto, idxs, prog))
         self.programs = len(self._programs)
 
@@ -430,6 +487,8 @@ class SweepRunner:
         up_bits_first = np.zeros((G,), np.float64)
         up_bits = np.zeros((G,), np.float64)
         dp_epsilon = np.full((G,), np.nan)
+        dp_epsilon_device = np.full((G,), np.nan)
+        dp = [None] * G
         t0 = time.perf_counter()
         for proto, idxs, prog in self._programs:
             state, out = prog.run()
@@ -442,12 +501,16 @@ class SweepRunner:
             up_bits_first[rows] = prog.up_bits_first
             up_bits[rows] = prog.up_bits_steady
             dp_epsilon[rows] = prog.dp_epsilon
+            dp_epsilon_device[rows] = prog.dp_epsilon_device
+            for i, led in zip(idxs, prog.dp_ledgers):
+                dp[i] = led
         wall = time.perf_counter() - t0
         return SweepResult(
             grid=self.grid, acc=acc, loss=loss, latency_s=latency,
             up_ok=up_ok, converged=converged, wall_s=wall,
             up_bits_first=up_bits_first, up_bits=up_bits,
-            dp_epsilon=dp_epsilon)
+            dp_epsilon=dp_epsilon, dp_epsilon_device=dp_epsilon_device,
+            dp=tuple(dp))
 
 
 def run_sweep(model, grid: SweepGrid, dev_x, dev_y, test_x, test_y

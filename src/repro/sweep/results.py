@@ -36,6 +36,11 @@ class SweepResult:
     up_bits_first: np.ndarray | None = None   # (G,)
     up_bits: np.ndarray | None = None         # (G,)
     dp_epsilon: np.ndarray | None = None      # (G,)
+    # participation-aware DP: worst per-device epsilon (composed over
+    # the rounds each device actually joined — equals dp_epsilon at
+    # sample_ratio=1) and the full per-point accountant ledgers
+    dp_epsilon_device: np.ndarray | None = None   # (G,)
+    dp: tuple | None = None                       # (G,) ledger dict|None
 
     @property
     def rounds(self) -> int:
@@ -50,7 +55,7 @@ class SweepResult:
     def history(self, g: int) -> dict:
         """Per-point history in ``FederatedTrainer.run``'s shape (minus
         the host-only seeds/compute_s fields)."""
-        return {
+        h = {
             "acc": [float(a) for a in self.acc[g]],
             "loss": [float(l) for l in self.loss[g]],
             "round_latency_s": [float(t) for t in self.latency_s[g]],
@@ -61,6 +66,9 @@ class SweepResult:
             "final_acc": float(self.acc[g, -1]),
             "protocol": self.grid.points[g][0].protocol,
         }
+        if self.dp is not None and self.dp[g] is not None:
+            h["dp"] = self.dp[g]  # the loop path's history["dp"] ledger
+        return h
 
     def uplink_bits_total(self, g: int) -> float | None:
         """Per-device uplink bits over the whole run: one first round +
@@ -91,6 +99,10 @@ class SweepResult:
                 # NaN -> None: non-DP points have no finite epsilon, and
                 # the result payload stays strict-JSON serializable
                 row["dp_epsilon"] = None if np.isnan(eps) else eps
+                if self.dp_epsilon_device is not None:
+                    dev = float(self.dp_epsilon_device[g])
+                    row["dp_epsilon_device_max"] = (None if np.isnan(dev)
+                                                    else dev)
             rows.append(row)
         return rows
 

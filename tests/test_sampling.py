@@ -1,0 +1,417 @@
+"""Client sampling: seeded cohorts through both compiled round paths.
+
+Locks down the sampling contract end to end: cohort draws are pure
+functions of (seed, round) with sorted/unique/fixed-size invariants,
+``sample_ratio=1.0`` reproduces the unsampled paths bit-for-bit (loop
+AND compiled grid), sampled sweeps match the per-point loop across
+protocols, and the DP ledger composes per-device epsilon over
+participation only.  Golden-sized configs (D=4, 8 local iters, 3
+rounds) keep the file in the fast tier; the pod-scale acceptance run
+(D_pool=10^4) is marked ``slow`` and the sharded 16-device cohort test
+``multichip``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.channel import ChannelConfig
+from repro.core.privacy import GaussianAccountant
+from repro.core.protocols import FederatedConfig, FederatedTrainer
+from repro.core.sampling import SamplerConfig, participation_uniforms
+from repro.data import partition_iid, synthetic_images
+from repro.models.cnn import CNN
+from repro.sweep import SweepRunner, make_grid, run_pointwise, run_sweep
+
+CH = ChannelConfig(num_devices=4, p_up_dbm=40.0)
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y = synthetic_images(jax.random.PRNGKey(42), 1400)
+    dev_x, dev_y = partition_iid(np.asarray(x[:1200]), np.asarray(y[:1200]),
+                                 4, 300, 10, seed=0)
+    return dev_x, dev_y, jnp.asarray(x[1200:]), jnp.asarray(y[1200:])
+
+
+@pytest.fixture(scope="module")
+def data16():
+    """A 16-device pool (the multichip sampled-cohort test shards its
+    8-device cohort across the forced 8-chip host)."""
+    x, y = synthetic_images(jax.random.PRNGKey(42), 1000)
+    dev_x, dev_y = partition_iid(np.asarray(x[:800]), np.asarray(y[:800]),
+                                 16, 50, 10, seed=0)
+    return dev_x, dev_y, jnp.asarray(x[800:]), jnp.asarray(y[800:])
+
+
+def _base(**kw):
+    cfg = dict(protocol="mix2fld", num_devices=4, local_iters=8,
+               local_batch=16, server_iters=8, server_batch=16,
+               max_rounds=3, n_seed=6, n_inverse=12, seed=0)
+    cfg.update(kw)
+    return FederatedConfig(**cfg)
+
+
+def _assert_equivalent(result, histories):
+    for g, h in enumerate(histories):
+        sh = result.history(g)
+        np.testing.assert_allclose(sh["acc"], h["acc"], atol=1e-6,
+                                   err_msg=f"acc, point {g}")
+        np.testing.assert_allclose(sh["loss"], h["loss"], atol=1e-6,
+                                   err_msg=f"loss, point {g}")
+        np.testing.assert_allclose(sh["round_latency_s"],
+                                   h["round_latency_s"], rtol=1e-6,
+                                   err_msg=f"latency, point {g}")
+        assert sh["uplink_ok"] == h["uplink_ok"], f"uplink_ok, point {g}"
+        assert sh["converged_round"] == h["converged_round"], \
+            f"converged_round, point {g}"
+
+
+# ---------------------------------------------------------------------------
+# SamplerConfig: draw invariants
+# ---------------------------------------------------------------------------
+
+def test_sampler_config_validation():
+    with pytest.raises(ValueError, match="sample_ratio"):
+        SamplerConfig(sample_ratio=0.0)
+    with pytest.raises(ValueError, match="sample_ratio"):
+        SamplerConfig(sample_ratio=1.5)
+    with pytest.raises(ValueError, match="min_active"):
+        SamplerConfig(min_active=0)
+    with pytest.raises(ValueError, match="sample_ratio"):
+        FederatedConfig(sample_ratio=-0.5)
+
+
+def test_cohort_size_is_ceil_with_floor_and_cap():
+    assert SamplerConfig(sample_ratio=0.5).cohort_size(10) == 5
+    assert SamplerConfig(sample_ratio=0.3).cohort_size(10) == 3  # not 4:
+    # 0.3 * 10 is 3.0000000000000004 in binary floats
+    assert SamplerConfig(sample_ratio=0.25).cohort_size(10) == 3  # ceil
+    assert SamplerConfig(sample_ratio=1.0).cohort_size(10) == 10
+    assert SamplerConfig(sample_ratio=0.01).cohort_size(10) == 1
+    assert SamplerConfig(sample_ratio=0.01, min_active=3).cohort_size(10) \
+        == 3
+    assert SamplerConfig(sample_ratio=0.5, min_active=99).cohort_size(4) \
+        == 4  # min_active clamps to the pool
+
+
+@pytest.mark.parametrize("ratio", [0.05, 0.3, 0.5, 0.9, 1.0])
+@pytest.mark.parametrize("pool", [1, 2, 7, 16, 101])
+def test_cohort_invariants(ratio, pool):
+    """Deterministic, sorted, duplicate-free, exactly cohort_size
+    entries in range, and >= min_active."""
+    s = SamplerConfig(sample_ratio=ratio, min_active=2, seed=5)
+    for p in (1, 2, 9):
+        c = s.cohort(fed_seed=3, round_=p, pool_size=pool)
+        c2 = s.cohort(fed_seed=3, round_=p, pool_size=pool)
+        assert np.array_equal(c, c2)
+        assert len(c) == s.cohort_size(pool) >= min(2, pool)
+        assert len(np.unique(c)) == len(c)
+        assert np.all(np.diff(c) > 0)
+        assert c.min() >= 0 and c.max() < pool
+
+
+def test_cohorts_nest_across_ratios():
+    """Smallest-uniform selection: the 30% cohort is a subset of the 60%
+    cohort of the same round/seed."""
+    lo = SamplerConfig(sample_ratio=0.3, seed=1)
+    hi = SamplerConfig(sample_ratio=0.6, seed=1)
+    for p in (1, 2, 3):
+        a = set(lo.cohort(0, p, 40).tolist())
+        b = set(hi.cohort(0, p, 40).tolist())
+        assert a < b
+
+
+def test_full_ratio_cohort_is_arange_but_consumes_stream():
+    """sample_ratio=1 must return the whole pool in order, drawing the
+    same uniforms a fractional ratio would (stream stability)."""
+    s = SamplerConfig(sample_ratio=1.0, seed=2)
+    assert np.array_equal(s.cohort(0, 1, 6), np.arange(6))
+    u1, _ = participation_uniforms(0, 2, 1, 6)
+    u2, _ = participation_uniforms(0, 2, 1, 6)
+    assert np.array_equal(u1, u2)
+
+
+def test_participation_counts_match_cohorts():
+    s = SamplerConfig(sample_ratio=0.5, seed=0)
+    counts = s.participation_counts(0, 6, 4)
+    want = np.zeros(4, np.int64)
+    for p in range(1, 7):
+        want[s.cohort(0, p, 4)] += 1
+    assert np.array_equal(counts, want)
+    assert counts.sum() == 6 * s.cohort_size(4)
+
+
+def test_cohort_invariants_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(ratio=st.floats(0.01, 1.0, allow_nan=False),
+           pool=st.integers(1, 64), min_active=st.integers(1, 8),
+           fed_seed=st.integers(0, 5), round_=st.integers(1, 20))
+    def check(ratio, pool, min_active, fed_seed, round_):
+        s = SamplerConfig(sample_ratio=ratio, min_active=min_active,
+                          seed=7)
+        c = s.cohort(fed_seed, round_, pool)
+        assert np.array_equal(c, s.cohort(fed_seed, round_, pool))
+        assert len(c) == s.cohort_size(pool)
+        assert len(c) >= min(min_active, pool)
+        assert len(np.unique(c)) == len(c)
+        assert np.all(np.diff(c) > 0)
+        assert (c >= 0).all() and (c < pool).all()
+
+    check()
+
+
+# ---------------------------------------------------------------------------
+# sample_ratio=1.0 bit-identity on BOTH round paths
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("protocol", ["fl", "mix2fld"])
+def test_ratio_one_loop_is_bit_identical_to_unsampled(data, protocol):
+    """A non-default sample_seed at ratio 1.0 must leave loop-path
+    histories bitwise unchanged (the sampler consumes its own stream,
+    nothing the round draws from)."""
+    dev_x, dev_y, tx, ty = data
+    h0 = FederatedTrainer(CNN(), _base(protocol=protocol), CH).run(
+        dev_x, dev_y, tx, ty)
+    h1 = FederatedTrainer(
+        CNN(), _base(protocol=protocol, sample_ratio=1.0, sample_seed=123),
+        CH).run(dev_x, dev_y, tx, ty)
+    assert h0["acc"] == h1["acc"]
+    assert h0["loss"] == h1["loss"]
+    assert h0["uplink_ok"] == h1["uplink_ok"]
+    assert h0["converged_round"] == h1["converged_round"]
+
+
+def test_ratio_one_sweep_is_bit_identical_to_unsampled(data):
+    """Grid path: ratio-1.0 points land in the unsampled program group
+    (same structural key) and reproduce its arrays exactly."""
+    dev_x, dev_y, tx, ty = data
+    g0 = make_grid(_base(), CH, eta=(0.01, 0.02))
+    g1 = make_grid(_base(sample_ratio=1.0, sample_seed=123), CH,
+                   eta=(0.01, 0.02))
+    assert list(g0.program_groups()) == list(g1.program_groups()) \
+        == [("mix2fld", "identity", 4)]
+    r0 = run_sweep(CNN(), g0, dev_x, dev_y, tx, ty)
+    r1 = run_sweep(CNN(), g1, dev_x, dev_y, tx, ty)
+    assert np.array_equal(r0.acc, r1.acc)
+    assert np.array_equal(r0.loss, r1.loss)
+    assert np.array_equal(r0.up_ok, r1.up_ok)
+    assert np.array_equal(r0.converged, r1.converged)
+
+
+# ---------------------------------------------------------------------------
+# Sampled sweep-vs-loop equivalence
+# ---------------------------------------------------------------------------
+
+def test_sampled_sweep_matches_loop_across_protocols(data):
+    """The headline equivalence: sample_ratio in {1.0, 0.5} crossed with
+    fl/fd/mix2fld — six programs (cohort size is structural), every
+    point's history equal to the per-point loop."""
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(), CH, protocol=("fl", "fd", "mix2fld"),
+                     sample_ratio=(1.0, 0.5))
+    runner = SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
+    assert runner.programs == 6
+    res = runner.run()
+    _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y,
+                                          tx, ty))
+
+
+def test_sample_seed_axis_batches_in_one_program(data):
+    """Different cohort draws at one ratio share a program (the seed is
+    host-absorbed into the gather indices) and still match the loop."""
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(protocol="fd", sample_ratio=0.5), CH,
+                     sample_seed=(0, 7))
+    runner = SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
+    assert runner.programs == 1
+    assert list(grid.program_groups()) == [("fd", "identity", 2)]
+    res = runner.run()
+    _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y,
+                                          tx, ty))
+    # distinct seeds draw distinct cohorts -> distinct trajectories
+    assert not np.array_equal(res.acc[0], res.acc[1]) or \
+        not np.array_equal(res.loss[0], res.loss[1])
+
+
+def test_sampled_round_once_scatters_back_to_pool(data):
+    """Non-participants keep their device state bit-for-bit; cohort rows
+    change.  Also covers the plan-rebuild guard (a pool-sized plan is
+    resized to the cohort)."""
+    dev_x, dev_y, tx, ty = data
+    fc = _base(protocol="fd", sample_ratio=0.5)
+    tr = FederatedTrainer(CNN(), fc, CH)
+    state = tr.init_state()
+    pool_plan = tr.link_plan(state["g_params"], n_links=4)
+    before = jax.tree.map(np.asarray, state["dev_params"])
+    new_state, rec = tr.round_once(state, dev_x, dev_y, tx, ty,
+                                   plan=pool_plan)
+    cohort = rec["cohort"]
+    assert rec["n_active"] == 2 and len(cohort) == 2
+    assert np.array_equal(cohort, fc.sampler().cohort(fc.seed, 1, 4))
+    rest = np.setdiff1d(np.arange(4), cohort)
+    for leaf_b, leaf_a in zip(jax.tree.leaves(before),
+                              jax.tree.leaves(new_state["dev_params"])):
+        assert np.array_equal(leaf_b[rest], np.asarray(leaf_a)[rest])
+    changed = any(
+        not np.array_equal(leaf_b[cohort], np.asarray(leaf_a)[cohort])
+        for leaf_b, leaf_a in zip(
+            jax.tree.leaves(before),
+            jax.tree.leaves(new_state["dev_params"])))
+    assert changed
+
+
+# ---------------------------------------------------------------------------
+# Participation-correct DP accounting
+# ---------------------------------------------------------------------------
+
+def test_accountant_composes_per_device_participation_only():
+    """The core satellite bugfix as a unit test: three rounds with
+    2-of-3 cohorts — per-device epsilon composes over 2 rounds, not 3."""
+    acct = GaussianAccountant(sigma=1.0, delta=1e-5, sample_ratio=2 / 3)
+    acct.step(cohort=[0, 1]).step(cohort=[1, 2]).step(cohort=[0, 2])
+    assert acct.rounds == 3
+    assert acct.device_rounds == {0: 2, 1: 2, 2: 2}
+    assert acct.device_rounds_max() == 2
+    assert acct.epsilon_device_max() == pytest.approx(acct.epsilon(2))
+    assert acct.epsilon_device_max() < acct.epsilon()
+    led = acct.ledger()
+    assert led["participating_devices"] == 3
+    assert led["device_rounds_max"] == 2
+    assert led["epsilon_device_max"] == pytest.approx(acct.epsilon(2))
+    assert led["sample_ratio"] == pytest.approx(2 / 3)
+
+
+def test_accountant_without_cohorts_stays_conservative():
+    acct = GaussianAccountant(sigma=1.0, delta=1e-5)
+    acct.step().step()
+    assert acct.device_rounds_max() == 2
+    assert acct.epsilon_device_max() == pytest.approx(acct.epsilon())
+    assert acct.ledger()["participating_devices"] is None
+
+
+def test_sampled_dp_ledger_matches_loop_and_reflects_participation(data):
+    """dp_gaussian at sample_ratio=0.5 over 6 rounds: the sweep's
+    history["dp"] equals the loop path's ledger exactly, and per-device
+    epsilon < all-rounds epsilon (sample_seed=0 draws a max
+    participation of 5/6 rounds for this config — regression for the
+    every-device-every-round over-report)."""
+    dev_x, dev_y, tx, ty = data
+    fc = _base(protocol="fd", codec="dp_gaussian", dp_sigma=2.0,
+               sample_ratio=0.5, max_rounds=6)
+    grid = make_grid(fc, CH, eta=(0.01,))
+    res = SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty).run()
+    (h,) = run_pointwise(CNN(), grid, dev_x, dev_y, tx, ty)
+    led = res.history(0)["dp"]
+    assert led == h["dp"]
+    assert led["sample_ratio"] == 0.5
+    assert led["device_rounds_max"] == 5
+    assert led["epsilon_device_max"] < led["epsilon"]
+    counts = fc.sampler().participation_counts(fc.seed, 6, 4)
+    assert led["participating_devices"] == int((counts > 0).sum())
+    row = res.frames()[0]
+    assert row["dp_epsilon_device_max"] == \
+        pytest.approx(led["epsilon_device_max"])
+
+
+# ---------------------------------------------------------------------------
+# Sharded sampled cohorts (the pod-scale path)
+# ---------------------------------------------------------------------------
+
+def _base16(**kw):
+    cfg = dict(protocol="mix2fld", num_devices=16, local_iters=4,
+               local_batch=8, server_iters=4, server_batch=8,
+               max_rounds=3, n_seed=4, n_inverse=8, seed=0)
+    cfg.update(kw)
+    return FederatedConfig(**cfg)
+
+
+CH16 = ChannelConfig(num_devices=16, p_up_dbm=40.0)
+
+
+@pytest.mark.multichip
+def test_sampled_sharded_sweep_multichip(data16):
+    """16-device pool, ratio 0.5: the 8-device cohort must shard across
+    the multichip mesh and reproduce the vmapped sampled sweep."""
+    dev_x, dev_y, tx, ty = data16
+    grid_s = make_grid(_base16(sample_ratio=0.5, shard_devices=True),
+                       CH16, eta=(0.01, 0.02))
+    runner = SweepRunner(CNN(), grid_s, dev_x, dev_y, tx, ty)
+    res_s = runner.run()
+    grid_v = make_grid(_base16(sample_ratio=0.5), CH16, eta=(0.01, 0.02))
+    res_v = SweepRunner(CNN(), grid_v, dev_x, dev_y, tx, ty).run()
+    np.testing.assert_allclose(res_s.acc, res_v.acc, atol=1e-4)
+    np.testing.assert_allclose(res_s.loss, res_v.loss, atol=1e-4)
+    assert np.array_equal(res_s.up_ok, res_v.up_ok)
+
+
+@pytest.mark.multichip
+def test_sampled_sharded_trainer_multichip(data16):
+    """Loop path under sharding: the trainer's mesh spans the cohort
+    (8 devices), more than one chip carries it, and histories match the
+    vmapped trainer."""
+    tr = FederatedTrainer(CNN(), _base16(sample_ratio=0.5,
+                                         shard_devices=True), CH16)
+    assert tr.mesh.devices.size > 1
+    assert tr.mesh.shape["data"] <= 8  # cohort-sized, not pool-sized
+    dev_x, dev_y, tx, ty = data16
+    h_s = tr.run(dev_x, dev_y, tx, ty)
+    h_v = FederatedTrainer(CNN(), _base16(sample_ratio=0.5), CH16).run(
+        dev_x, dev_y, tx, ty)
+    np.testing.assert_allclose(h_s["acc"], h_v["acc"], atol=1e-4)
+    np.testing.assert_allclose(h_s["loss"], h_v["loss"], atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Pod-scale acceptance: D_pool = 10^4 through the SweepRunner
+# ---------------------------------------------------------------------------
+
+class _TinyNet:
+    """~500-parameter linear probe over 4x4-pooled images — small enough
+    that a 10^4-device pool's stacked parameters fit comfortably."""
+
+    def init(self, key):
+        k, _ = jax.random.split(key)
+        return {"w": jax.random.normal(k, (49, 10)) * 0.1,
+                "b": jnp.zeros((10,))}
+
+    def apply(self, params, x):
+        b = x.shape[0]
+        pooled = x[..., 0].reshape(b, 7, 4, 7, 4).mean(axis=(2, 4))
+        return pooled.reshape(b, 49) @ params["w"] + params["b"]
+
+
+@pytest.mark.slow
+def test_pool_scale_sampled_sweep_10k_devices():
+    """Acceptance: a sample_ratio=0.5 sweep at D_pool=10^4 runs through
+    SweepRunner, matches the loop path, and carries a participation-only
+    DP ledger."""
+    D, n_loc = 10_000, 10  # partition_iid needs >= 1 sample per class
+    x, y = synthetic_images(jax.random.PRNGKey(42), D * n_loc + 200)
+    dev_x, dev_y = partition_iid(np.asarray(x[:D * n_loc]),
+                                 np.asarray(y[:D * n_loc]), D, n_loc, 10,
+                                 seed=0)
+    tx, ty = jnp.asarray(x[D * n_loc:]), jnp.asarray(y[D * n_loc:])
+    fc = FederatedConfig(protocol="fd", num_devices=D, local_iters=1,
+                         local_batch=4, server_iters=1, server_batch=4,
+                         max_rounds=2, codec="dp_gaussian", dp_sigma=2.0,
+                         sample_ratio=0.5, seed=0)
+    ch = ChannelConfig(num_devices=D, p_up_dbm=40.0)
+    grid = make_grid(fc, ch, eta=(0.01,))
+    assert list(grid.program_groups()) == [("fd", "dp_gaussian", 5000)]
+    res = SweepRunner(_TinyNet(), grid, dev_x, dev_y, tx, ty).run()
+    (h,) = run_pointwise(_TinyNet(), grid, dev_x, dev_y, tx, ty)
+    _assert_equivalent(res, [h])
+    led = res.history(0)["dp"]
+    assert led == h["dp"]
+    assert led["sample_ratio"] == 0.5
+    # participation-only composition: the accountant's per-device counts
+    # are exactly the sampler's, not rounds-for-everyone
+    counts = fc.sampler().participation_counts(fc.seed, 2, D)
+    assert led["participating_devices"] == int((counts > 0).sum()) < D
+    assert led["device_rounds_max"] == int(counts.max())
+    assert led["epsilon_device_max"] <= led["epsilon"]

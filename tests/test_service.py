@@ -246,3 +246,140 @@ def test_bind_data_validates_pool_size(data):
     svc = FederatedService(CNN(), _cfg("fd", num_devices=7), CH)
     with pytest.raises(ValueError, match="num_devices=7"):
         svc.bind_data(dev_x, dev_y, tx, ty)
+
+
+# ---- churn stream stability at p_active >= 1 -----------------------------
+
+
+def test_full_participation_churn_consumes_the_same_stream():
+    """p_active=1.0 must return the whole pool AND draw the same
+    uniforms a fractional p_active would — regression for the branch
+    that skipped the rng entirely, which made p_active=1.0 histories
+    diverge from p_active=1-eps ones through later draws."""
+    full = ChurnConfig(p_active=1.0, min_active=1, seed=5)
+    near = ChurnConfig(p_active=1.0 - 1e-9, min_active=1, seed=5)
+    for p in range(1, 10):
+        a = full.active_devices(0, p, 6)
+        np.testing.assert_array_equal(a, np.arange(6))
+        np.testing.assert_array_equal(a, near.active_devices(0, p, 6))
+
+
+# ---- flush failure re-queues the unserved tail ---------------------------
+
+
+def test_flush_requeues_tail_when_predict_fails_mid_loop(data):
+    """Inject a predict that dies on its second batch: the first chunk
+    is lost to the caller (the exception propagates) but every request
+    the loop never reached must stay queued, ahead of later arrivals."""
+    svc = _svc(data, "fd", serve_batch=4)
+    ep = svc.endpoint
+    real = ep._predict
+    calls = {"n": 0}
+
+    def flaky(params, x):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise RuntimeError("backend died")
+        return real(params, x)
+
+    ep._predict = flaky
+    dev_x, dev_y, tx, ty = data
+    ep.submit(np.asarray(tx[:10]))  # 3 batches: 4 + 4 + padded 2
+    with pytest.raises(RuntimeError, match="backend died"):
+        ep.flush(svc.state["g_params"])
+    assert ep.pending == 6  # the served 4 are gone, the tail is not
+    assert ep.served == 0   # nothing reached the caller
+    ep._predict = real
+    preds = ep.flush(svc.state["g_params"])
+    assert preds.shape == (6,)
+    want = np.argmax(np.asarray(CNN().apply(svc.state["g_params"],
+                                            jnp.asarray(tx[4:10]))),
+                     axis=-1)
+    np.testing.assert_array_equal(preds, want)
+    assert ep.pending == 0
+
+
+def test_flush_requeues_everything_when_apply_fn_fails_at_trace(data):
+    """A broken apply_fn raises inside jit tracing on the FIRST chunk:
+    the whole queue must survive the failed flush."""
+
+    def bad_apply(params, x):
+        raise ValueError("no such model")
+
+    ep = InferenceEndpoint(bad_apply, batch_size=4)
+    dev_x, dev_y, tx, ty = data
+    ep.submit(np.asarray(tx[:7]))
+    svc = _svc(data, "fd")
+    with pytest.raises(ValueError, match="no such model"):
+        ep.flush(svc.state["g_params"])
+    assert ep.pending == 7
+    assert ep.served == 0 and ep.batches == 0
+
+
+def test_flush_requeue_keeps_submission_order(data):
+    """Requests submitted after a failed flush serve AFTER the re-queued
+    tail."""
+    svc = _svc(data, "fd", serve_batch=2)
+    ep = svc.endpoint
+    real = ep._predict
+    ep._predict = lambda *a: (_ for _ in ()).throw(RuntimeError("x"))
+    dev_x, dev_y, tx, ty = data
+    ep.submit(np.asarray(tx[:3]))
+    with pytest.raises(RuntimeError):
+        ep.flush(svc.state["g_params"])
+    ep.submit(np.asarray(tx[3:5]))
+    ep._predict = real
+    preds = ep.flush(svc.state["g_params"])
+    want = np.argmax(np.asarray(CNN().apply(svc.state["g_params"],
+                                            jnp.asarray(tx[:5]))), axis=-1)
+    np.testing.assert_array_equal(preds, want)
+
+
+# ---- participation-correct DP accounting through the service -------------
+
+
+def test_service_dp_epsilon_composes_over_participation_only(data):
+    """Regression for the all-rounds DP over-report: under 50% churn the
+    busiest device of this seed joins 5 of 6 rounds, so its epsilon must
+    compose over 5 — strictly below the global all-rounds epsilon."""
+    dev_x, dev_y, tx, ty = data
+    churn = ChurnConfig(p_active=0.5, min_active=1, seed=3)
+    svc = FederatedService(CNN(), _cfg("fd", codec="dp_gaussian",
+                                       dp_sigma=2.0, max_rounds=6),
+                           CH, churn=churn)
+    svc.bind_data(dev_x, dev_y, tx, ty)
+    recs = svc.run_rounds(6)
+    acct = svc._acct
+    assert acct is not None and acct.rounds == 6
+    counts = np.zeros(4, np.int64)
+    for r in recs:
+        counts[r["active"]] += 1
+    assert dict(acct.device_rounds) == {
+        int(d): int(c) for d, c in enumerate(counts) if c}
+    assert acct.device_rounds_max() == counts.max() < 6
+    assert acct.epsilon_device_max() < acct.epsilon()
+    assert recs[-1]["dp_epsilon_device_max"] == acct.epsilon_device_max()
+    assert acct.ledger()["sample_ratio"] == pytest.approx(0.5)
+
+
+def test_checkpoint_roundtrips_device_participation(data, tmp_path):
+    """device_rounds must survive save/restore — a resumed service keeps
+    composing per-device epsilon from the true participation history."""
+    dev_x, dev_y, tx, ty = data
+    churn = ChurnConfig(p_active=0.5, min_active=1, seed=3)
+    fc = _cfg("fd", codec="dp_gaussian", dp_sigma=2.0, max_rounds=6)
+    svc = FederatedService(CNN(), fc, CH, churn=churn,
+                           ckpt_dir=str(tmp_path / "ck"), ckpt_every=1)
+    svc.bind_data(dev_x, dev_y, tx, ty)
+    svc.run_rounds(3)
+    svc2 = FederatedService(CNN(), fc, CH, churn=churn,
+                            ckpt_dir=str(tmp_path / "ck"))
+    svc2.bind_data(dev_x, dev_y, tx, ty)
+    assert svc2.restore() == 3
+    assert svc2._acct.device_rounds == svc._acct.device_rounds
+    assert svc2._acct.rounds == 3
+    svc.run_rounds(3)
+    svc2.run_rounds(3)
+    assert svc2._acct.device_rounds == svc._acct.device_rounds
+    assert svc2._acct.epsilon_device_max() == \
+        svc._acct.epsilon_device_max()
