@@ -481,8 +481,13 @@ class FederatedTrainer:
         compute_s = time.perf_counter() - t0
         cum_time = state["cum_time_s"] + compute_s + link["latency_s"]
 
-        # ---- evaluation of the reference device (pool device 0) ----
-        ref = jax.tree.map(lambda dp: dp[0], dev_params)
+        # ---- evaluation of the round's reference device: pool device 0
+        # at full participation, else the cohort's first device — it
+        # just trained and received the downlink, whereas a fixed
+        # device 0 sits out most rounds at small sample_ratio and its
+        # stale parameters would stall the reported acc ----
+        ref_dev = 0 if cohort is None else int(cohort[0])
+        ref = jax.tree.map(lambda dp: dp[ref_dev], dev_params)
         acc = float(self._accuracy(ref, test_x, test_y))
         if log:
             log(f"[{proto}] round {p}: acc={acc:.3f} "
@@ -743,8 +748,8 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
         link = channel_fn(ck, consts["p_up"], xs["up_slots"],
                           consts["p_dn"], xs["dn_slots"], Dc, t_max_slots,
                           tau_s)
-        up_ok = link["up_ok"]                        # (G, D)
-        dn_ok = link["dn_ok"]
+        up_ok = link["up_ok"]                        # (G, Dc)
+        dn_ok = link["dn_ok"]                        # (G, Dc)
         w = up_ok.astype(jnp.float32) * \
             consts["n_local"].astype(jnp.float32)[:, None]
         any_up = jnp.any(up_ok, axis=1)              # (G,)
@@ -792,8 +797,16 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
                 dev_params)
             dev_gout = scatter(pool_gout, chrt, dev_gout)
 
-        # ---- evaluation of the reference device (pool device 0) ----
-        ref = jax.tree.map(lambda dp: dp[:, 0], dev_params)
+        # ---- evaluation of the round's reference device: pool device 0
+        # at full participation, else each config's first cohort device
+        # (mirrors the loop path — a fixed device 0 goes stale under
+        # sampling) ----
+        if sampled:
+            ref = jax.tree.map(
+                lambda dp: jax.vmap(lambda a, i: a[i])(dp, chrt[:, 0]),
+                dev_params)
+        else:
+            ref = jax.tree.map(lambda dp: dp[:, 0], dev_params)
         acc = acc_fn(ref)
 
         # ---- convergence (relative change < eps), first hit recorded ----

@@ -15,12 +15,18 @@ selects devices:
   the compiled scan as a traced gather index.
 * :func:`participation_uniforms` — the shared primitive: ONE uniform per
   pool device from ``np.random.default_rng([fed_seed, sampler_seed,
-  round])``.  ``launch.service.ChurnConfig`` thresholds the same
-  uniforms (Bernoulli churn), so churn and sampling draw from one
-  stream; in particular the stream is consumed even when the draw is
-  degenerate (``sample_ratio = 1`` / ``p_active = 1``), so nudging a
-  ratio across 1.0 never shifts unrelated draws (the historical
-  ``p_active >= 1`` early-return bug).
+  round, mechanism])``.  ``launch.service.ChurnConfig`` thresholds
+  uniforms of the same shape (Bernoulli churn) but under its own
+  ``mechanism`` tag (:data:`MECH_CHURN` vs the sampler's
+  :data:`MECH_SAMPLE`), so churn and sampling draw from *disjoint*
+  streams even at identical seeds — when the sampler sub-samples a
+  churned cohort, its uniforms are independent of the ones churn
+  already thresholded (re-reading churn's stream conditioned the
+  sampler's draws below ``p_active`` and biased the composed cohort
+  toward low-index survivors).  The stream is consumed even when the
+  draw is degenerate (``sample_ratio = 1`` / ``p_active = 1``), so
+  nudging a ratio across 1.0 never shifts unrelated draws (the
+  historical ``p_active >= 1`` early-return bug).
 * :func:`participation_counts` — per-device participation totals over a
   round range, the input to participation-correct DP accounting
   (``core.privacy.GaussianAccountant``): a device's epsilon composes
@@ -38,25 +44,35 @@ import math
 
 import numpy as np
 
+#: Mechanism tags folded into the participation stream seed: each
+#: participation mechanism draws from its own stream, so composing them
+#: (churn, then sampling over the churned cohort) never re-reads
+#: uniforms another mechanism already conditioned on.
+MECH_SAMPLE = 0   #: fixed-size client sampling (SamplerConfig)
+MECH_CHURN = 1    #: Bernoulli device churn (launch.service.ChurnConfig)
 
-def participation_rng(fed_seed: int, sampler_seed: int,
-                      round_: int) -> np.random.Generator:
+
+def participation_rng(fed_seed: int, sampler_seed: int, round_: int,
+                      mechanism: int = MECH_SAMPLE
+                      ) -> np.random.Generator:
     """The stateless per-round participation stream — seeded by the run,
-    the sampler, and the 1-based round number, nothing else."""
+    the mechanism's seed, the 1-based round number, and the mechanism
+    tag, nothing else."""
     return np.random.default_rng([int(fed_seed), int(sampler_seed),
-                                  int(round_)])
+                                  int(round_), int(mechanism)])
 
 
 def participation_uniforms(fed_seed: int, sampler_seed: int, round_: int,
-                           pool_size: int
+                           pool_size: int,
+                           mechanism: int = MECH_SAMPLE
                            ) -> tuple[np.ndarray, np.random.Generator]:
-    """One uniform per pool device from the round's stream, plus the
-    generator (already advanced past the uniforms) for draws that need a
-    top-up (churn's ``min_active``).  Every participation decision —
-    fixed-size sampling and Bernoulli churn alike — derives from these
-    same ``pool_size`` numbers, which is what makes the two mechanisms
-    stream-compatible."""
-    rng = participation_rng(fed_seed, sampler_seed, round_)
+    """One uniform per pool device from the round's per-mechanism
+    stream, plus the generator (already advanced past the uniforms) for
+    draws that need a top-up (churn's ``min_active``).  Fixed-size
+    sampling and Bernoulli churn share this primitive but pass distinct
+    ``mechanism`` tags, so their streams are disjoint even at identical
+    seeds — composing them stays unbiased."""
+    rng = participation_rng(fed_seed, sampler_seed, round_, mechanism)
     return rng.random(pool_size), rng
 
 

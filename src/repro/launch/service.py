@@ -7,10 +7,11 @@ as a long-running service:
 
 * **Churn** — devices arrive and depart between rounds.  The active
   cohort of round ``p`` is drawn by a *stateless* seeded host process
-  (``np.random.default_rng([fc.seed, churn.seed, p])``), so the cohort
-  sequence is a pure function of the round number: a resumed run draws
-  the exact cohorts the uninterrupted run would have, with no RNG state
-  to checkpoint.
+  (``np.random.default_rng([fc.seed, churn.seed, p, MECH_CHURN])`` —
+  the mechanism tag keeps churn's stream disjoint from the client
+  sampler's), so the cohort sequence is a pure function of the round
+  number: a resumed run draws the exact cohorts the uninterrupted run
+  would have, with no RNG state to checkpoint.
 * **Straggler timeouts** — enabled through the channel config
   (``compute_mean_s``/``deadline_s``): the :class:`LinkPlan` draw masks
   devices past the round deadline out of the aggregation set exactly
@@ -55,7 +56,7 @@ from repro.channel import ChannelConfig
 from repro.core.privacy import GaussianAccountant
 from repro.core.protocols import (FederatedConfig, FederatedTrainer,
                                   summarize_seeds)
-from repro.core.sampling import participation_uniforms
+from repro.core.sampling import MECH_CHURN, participation_uniforms
 
 #: Keys of one round's JSON-ready history record (the ``link`` arrays
 #: stay out of the checkpoint meta).
@@ -87,13 +88,17 @@ class ChurnConfig:
         function of (seeds, round), so resumed runs re-draw identical
         cohorts without checkpointing any RNG state.
 
-        Churn thresholds the same per-round participation uniforms the
-        client sampler ranks (``core.sampling``), and consumes them even
-        when ``p_active >= 1`` makes the draw degenerate — an early
-        return used to skip the rng entirely, so nudging ``p_active``
-        across 1.0 shifted unrelated draws from the same stream."""
+        Churn thresholds per-round participation uniforms from the same
+        primitive the client sampler ranks (``core.sampling``) but under
+        its own ``MECH_CHURN`` stream tag, so sampling over a churned
+        cohort never re-reads uniforms churn already conditioned on
+        (sharing one stream biased the composed cohort toward low-index
+        survivors).  The stream is consumed even when ``p_active >= 1``
+        makes the draw degenerate — an early return used to skip the
+        rng entirely, so nudging ``p_active`` across 1.0 shifted
+        unrelated draws."""
         u, rng = participation_uniforms(fed_seed, self.seed, round_,
-                                        pool_size)
+                                        pool_size, mechanism=MECH_CHURN)
         mask = u < self.p_active
         idx = np.flatnonzero(mask)
         want = min(self.min_active, pool_size)
@@ -142,17 +147,19 @@ class InferenceEndpoint:
         are padded to the fixed batch shape (pad rows are discarded), so
         the jitted step never retraces.
 
-        Failure-safe: if predict raises mid-loop, the unserved tail is
-        re-queued (ahead of anything submitted meanwhile) before the
-        exception propagates — a crashed flush loses no requests, the
-        next flush serves them.  The swap-then-iterate here used to drop
-        every request the failed loop hadn't reached."""
+        Failure-safe: results only reach the caller if every chunk
+        predicts, so if predict raises mid-loop NO request was answered
+        — the whole flushed queue is re-queued (ahead of anything
+        submitted meanwhile) before the exception propagates.  A
+        crashed flush loses no requests: the next flush serves them
+        all, in submission order.  (Re-queueing only the unreached tail
+        here used to leak the already-predicted chunks — their results
+        never left this frame.)"""
         if not self._queue:
             return np.zeros((0,), np.int32)
         out = []
         B = self.batch_size
         queue, self._queue = self._queue, []
-        done = 0
         try:
             for i in range(0, len(queue), B):
                 chunk = np.stack(queue[i:i + B])
@@ -165,9 +172,8 @@ class InferenceEndpoint:
                                                  jnp.asarray(chunk)))[:n]
                 out.append(preds)
                 self.batches += 1
-                done = i + n
         except BaseException:
-            self._queue[:0] = queue[done:]
+            self._queue[:0] = queue
             raise
         preds = np.concatenate(out)
         self.served += preds.shape[0]
@@ -316,9 +322,10 @@ class FederatedService:
                 "protocol": self.fc.protocol,
                 "dp_rounds": (self._acct.rounds
                               if self._acct is not None else 0),
-                "dp_device_rounds": (
-                    {str(k): v for k, v in
-                     sorted(self._acct.device_rounds.items())}
+                # dense per-device participation counts as a flat int
+                # list — compact at pool scale, unlike a str-keyed dict
+                "dp_device_counts": (
+                    self._acct.device_counts.tolist()
                     if self._acct is not None else None),
                 "seed_meta": self._seed_meta,
                 "history": self._history_meta()}
@@ -354,9 +361,14 @@ class FederatedService:
         self._seed_meta = meta.get("seed_meta")
         if self._acct is not None:
             self._acct.rounds = meta.get("dp_rounds", 0)
-            self._acct.device_rounds = {
-                int(k): int(v)
-                for k, v in (meta.get("dp_device_rounds") or {}).items()}
+            counts = meta.get("dp_device_counts")
+            if counts is not None:
+                self._acct.device_counts = np.asarray(counts, np.int64)
+            else:
+                # pre-array checkpoints stored a str-keyed dict
+                self._acct.device_rounds = {
+                    int(k): int(v) for k, v in
+                    (meta.get("dp_device_rounds") or {}).items()}
         return meta["round"]
 
 

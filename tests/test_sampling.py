@@ -132,6 +132,21 @@ def test_full_ratio_cohort_is_arange_but_consumes_stream():
     assert np.array_equal(u1, u2)
 
 
+def test_participation_streams_are_disjoint_per_mechanism():
+    """Identical (fed_seed, seed, round) must still give churn and the
+    sampler independent uniforms — the mechanism tag separates the
+    streams, so composing churn with sampling never re-reads values the
+    other mechanism conditioned on."""
+    from repro.core.sampling import MECH_CHURN, MECH_SAMPLE
+
+    u_s, _ = participation_uniforms(0, 0, 1, 64, mechanism=MECH_SAMPLE)
+    u_c, _ = participation_uniforms(0, 0, 1, 64, mechanism=MECH_CHURN)
+    assert not np.array_equal(u_s, u_c)
+    # the default is the sampler stream
+    u_d, _ = participation_uniforms(0, 0, 1, 64)
+    assert np.array_equal(u_d, u_s)
+
+
 def test_participation_counts_match_cohorts():
     s = SamplerConfig(sample_ratio=0.5, seed=0)
     counts = s.participation_counts(0, 6, 4)
