@@ -1,0 +1,123 @@
+"""Heterogeneous-architecture FD on the compiled sweep path: ONE
+``SweepRunner`` call over protocol x model x task.
+
+This is the workload the model/task registries exist for — and the one
+FL structurally cannot express: the FD-family uplink exchanges only
+(C, C) output tables, so a cohort of {cnn, mlp, transformer} clients
+distills into one global model.  The benchmark records
+
+* ``programs_per_group`` — compiled-program builds per structural
+  (protocol, codec, cohort, model, task) group; the engine contract is
+  exactly 1.0 (gated);
+* ``het_gain_min``/``het_gain_mean`` — final accuracy of the mixed
+  {cnn, mlp, transformer} cohort minus its single-WORST-architecture
+  baseline, per (protocol, task) cell: distillation across
+  architectures must not fall below the weakest homogeneous cohort
+  (gated via ``het_gain_mean``);
+* ``rounds_per_s_warm`` — warm whole-grid throughput (the compiled
+  scans re-run without retracing).
+
+Numbers land in benchmarks/results/models.json and are gated by
+check_regression.py in the CI sweeps job.
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from repro.channel import ChannelConfig
+from repro.core.protocols import FederatedConfig
+from repro.data.partition import PartitionSpec
+from repro.sweep import SweepRunner, engine_stats, make_grid
+
+from .common import save_result
+
+PROTOCOLS = ("fd", "mix2fld")
+SINGLETONS = ("cnn", "mlp", "transformer")
+MIXED = "cnn+mlp+transformer"
+
+
+def run(quick: bool = False):
+    tasks = ("digits", "speech") if quick else ("digits", "cifar",
+                                                "speech")
+    rounds = 3 if quick else 6
+    fc = FederatedConfig(protocol="fd", num_devices=4, local_iters=6,
+                         local_batch=16, server_iters=4, server_batch=16,
+                         max_rounds=rounds, n_seed=6, n_inverse=12,
+                         eps=0.0, seed=0)
+    ch = ChannelConfig(num_devices=4, p_up_dbm=40.0)
+    part = PartitionSpec(scheme="iid", n_local=150, seed=0)
+
+    grid = make_grid(fc, ch, part, protocol=PROTOCOLS,
+                     model=SINGLETONS + (MIXED,), task=tasks)
+    groups = len(grid.program_groups())
+
+    engine_stats.reset()
+    t0 = time.perf_counter()
+    runner = SweepRunner(None, grid)   # registry-built models, per-task
+    res = runner.run()                 # pools — the ONE heterogeneous call
+    cold_s = time.perf_counter() - t0
+    res = runner.run()                 # warm: compiled scans re-execute
+    programs_per_group = engine_stats.programs / groups
+
+    # mixed-cohort gain over the single-worst-architecture baseline,
+    # per (protocol, task) cell of the grid
+    final = {}
+    for g in range(grid.size):
+        h = res.history(g)
+        final[(h["protocol"], h["model"], h["task"])] = h["final_acc"]
+    gains, cells = [], {}
+    for p in PROTOCOLS:
+        for t in tasks:
+            worst = min(final[(p, m, t)] for m in SINGLETONS)
+            gain = final[(p, MIXED, t)] - worst
+            cells[f"{p}/{t}"] = {
+                "mixed": round(final[(p, MIXED, t)], 4),
+                "worst_singleton": round(worst, 4),
+                "gain": round(gain, 4),
+                **{m: round(final[(p, m, t)], 4) for m in SINGLETONS},
+            }
+            gains.append(gain)
+
+    out = {
+        "grid_points": grid.size,
+        "rounds": rounds,
+        "tasks": list(tasks),
+        "quick": bool(quick),
+        "groups": groups,
+        "programs": engine_stats.programs,
+        "programs_per_group": programs_per_group,
+        "traces": engine_stats.traces,
+        "cold_s": round(cold_s, 2),
+        "warm_s": round(res.wall_s, 4),
+        "rounds_per_s_warm": round(grid.size * rounds / res.wall_s, 3),
+        "het_gain_min": round(min(gains), 4),
+        "het_gain_mean": round(sum(gains) / len(gains), 4),
+        "cells": cells,
+    }
+    save_result("models", out)
+    print(f"models: {grid.size} points in {groups} programs "
+          f"({programs_per_group:.1f} per group), cold {cold_s:.1f}s, "
+          f"warm {res.wall_s:.2f}s "
+          f"({out['rounds_per_s_warm']:.1f} rounds/s)")
+    for cell, v in cells.items():
+        print(f"  {cell}: mixed={v['mixed']:.3f} "
+              f"worst_singleton={v['worst_singleton']:.3f} "
+              f"gain={v['gain']:+.3f}")
+    return out
+
+
+def main(quick=True):
+    out = run(quick=quick)
+    rows = [
+        (f"models/het_grid,{out['warm_s']*1e6:.0f},"
+         f"rounds_per_s={out['rounds_per_s_warm']:.1f};"
+         f"programs_per_group={out['programs_per_group']:.1f}"),
+        (f"models/het_gain,0,min={out['het_gain_min']:+.3f};"
+         f"mean={out['het_gain_mean']:+.3f}"),
+    ]
+    return rows
+
+
+if __name__ == "__main__":
+    run(quick="--quick" in sys.argv[1:])

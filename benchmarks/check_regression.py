@@ -88,6 +88,24 @@ GATES = [
      "mode": "min_delta", "tol": 0.05, "match": ("n_samples", "quick")},
     {"file": "privacy_tables", "metric": "tab3_mean",
      "mode": "min_delta", "tol": 0.05, "match": ("n_samples", "quick")},
+    # heterogeneous model x task grid: the engine must build exactly one
+    # program per structural (protocol, codec, cohort, model, task)
+    # group — a second build per group means the grouping key broke
+    {"file": "models", "metric": "programs_per_group",
+     "mode": "max_value", "limit": 1.0, "match": ()},
+    # ... the mixed {cnn, mlp, transformer} cohort's mean gain over its
+    # single-worst-architecture baseline must not collapse (small
+    # additive slack: final accs quantize at 1/n_test on the quick grid)
+    {"file": "models", "metric": "het_gain_mean",
+     "mode": "min_delta", "tol": 0.02,
+     "match": ("grid_points", "rounds", "quick")},
+    # ... and warm whole-grid throughput must hold.  Coarse floor: this
+    # is raw wall-clock (no host-cancelling ratio exists here), so 0.25
+    # absorbs runner-speed spread while still catching the failure it
+    # exists for — a retrace-per-round regression drops it ~10x
+    {"file": "models", "metric": "rounds_per_s_warm",
+     "mode": "min_ratio", "ratio": 0.25,
+     "match": ("grid_points", "rounds", "quick")},
 ]
 
 

@@ -48,12 +48,14 @@ from ..channel.payload import CodecSpec, parse_codec
 from ..channel.pipeline import (LinkPlan, channel_stage, downlink_gout,
                                 downlink_params, make_uplink_stage,
                                 uplink_stage)
+from ..data.pipeline import TaskSpec, parse_task
 from ..launch.mesh import make_device_mesh
 from ..launch.sharding import federated_pspecs
+from ..models.registry import ModelSpec, build_model, parse_model
 # the protocol registry is the single source of truth for names; the
 # historical PROTOCOLS / FLD_FAMILY module attributes stay as re-exports
-from ..registry import (FLD_FAMILY, PROTOCOLS,  # noqa: F401
-                        canonical_protocol)
+from ..registry import (FLD_FAMILY, MODELS, PROTOCOLS,  # noqa: F401
+                        canonical_model, canonical_protocol)
 from .conversion import output_to_model, output_to_model_steps
 from .losses import fd_loss
 from .outputs import label_averaged_outputs
@@ -67,7 +69,9 @@ from .seed_prep import (collect_seeds, prepare_seeds,  # noqa: F401
 class FederatedConfig:
     protocol: str = "mix2fld"
     num_devices: int = 10          # |D|
-    num_classes: int = 10          # N_L
+    num_classes: Optional[int] = None  # N_L (None: the task's class count;
+    #                                the registered digits task keeps the
+    #                                paper's 10)
     local_iters: int = 200         # K   (paper: 6400 single-sample SGD)
     local_batch: int = 16          # samples per local SGD iteration
     server_iters: int = 160        # K_s (paper: 3200)
@@ -79,7 +83,9 @@ class FederatedConfig:
     n_seed: int = 10               # N_S per device
     n_inverse: int = 20            # N_I per device-equivalent (>= N_S)
     max_rounds: int = 20
-    sample_bits: int = 6272        # b_s = 8 bit * 28 * 28
+    sample_bits: Optional[int] = None  # per-sample uplink payload (None:
+    #                                the task's width; digits keeps the
+    #                                paper's b_s = 8 bit * 28 * 28 = 6272)
     seed: int = 0
     shard_devices: bool = False    # mesh-shard the device axis (False: vmap)
     mesh_shards: int = 0           # 0 = auto (largest divisor of |D| that
@@ -104,11 +110,62 @@ class FederatedConfig:
     #                                a pure function of (seed, sample_seed,
     #                                round) — see core.sampling)
     sample_min_active: int = 1     # cohort-size floor
+    model: str = "cnn"             # registry model spec — a single
+    #                                architecture, or a "+"-joined cohort
+    #                                ("cnn+mlp+transformer") assigned to
+    #                                devices round-robin (FD family only)
+    task: str = "digits"           # registry task: input shape, default
+    #                                class count, per-sample payload bits
+    model_partition: Optional[tuple] = None  # explicit per-device
+    #                                architecture names (len num_devices);
+    #                                None: derived from a composite
+    #                                ``model`` by cycling its parts
 
     def __post_init__(self):
         # data-dependent bounds (n_seed vs the per-device sample count)
         # are checked where the data is first seen: seed_prep.collect_seeds
         self.protocol = canonical_protocol(self.protocol)
+        self.task = parse_task(self.task).name
+        if self.num_classes is None:
+            self.num_classes = self.task_spec().num_classes
+        if self.sample_bits is None:
+            self.sample_bits = self.task_spec().sample_bits
+        mspec = parse_model(self.model)
+        self.model = mspec.name
+        if self.model_partition is None:
+            if mspec.mixed:
+                self.model_partition = mspec.partition(self.num_devices)
+        else:
+            part = tuple(canonical_model(m) for m in self.model_partition)
+            if len(part) != self.num_devices:
+                raise ValueError(
+                    f"model_partition has {len(part)} entries for "
+                    f"num_devices={self.num_devices}")
+            # a uniform partition of the (single) model is just the
+            # homogeneous cohort — normalize so program identity is stable
+            self.model_partition = (
+                None if set(part) == {self.model} else part)
+        if self.model_partition is not None:
+            # mixed cohorts exchange *outputs*: only the FD-family uplink
+            # aggregates in the shared (C, C) output space
+            if self.protocol == "fl":
+                raise ValueError(
+                    "protocol 'fl' aggregates parameter vectors and "
+                    "cannot mix architectures; a mixed-model cohort "
+                    f"({self.model!r}) needs an FD-family uplink — one "
+                    "of ('fd',) + FLD_FAMILY "
+                    f"{FLD_FAMILY}")
+            if self.shard_devices:
+                raise ValueError(
+                    "mixed-architecture cohorts are not supported on the "
+                    "mesh-sharded path (shard_devices=True): per-device "
+                    "parameter pytrees differ across shards")
+            if self.sample_ratio < 1.0:
+                raise ValueError(
+                    "mixed-architecture cohorts require full "
+                    f"participation (sample_ratio=1.0, got "
+                    f"{self.sample_ratio}): a sampled cohort would need "
+                    "ragged per-architecture gathers")
         self.codec_spec()  # codec fields fail at config time, not round 1
         self.sampler()     # sampling fields too
         if self.n_seed < 1:
@@ -139,6 +196,53 @@ class FederatedConfig:
         sizes its device axis (and mesh, and link plan) by."""
         pool = self.num_devices if pool_size is None else pool_size
         return self.sampler().cohort_size(pool)
+
+    def task_spec(self) -> TaskSpec:
+        """The resolved task (shape / class count / payload width)."""
+        return parse_task(self.task)
+
+    def model_spec(self) -> ModelSpec:
+        """The parsed model spec (``parts[0]`` is the global/server
+        architecture)."""
+        return parse_model(self.model)
+
+    def server_model(self) -> str:
+        """The global (server-side) architecture name."""
+        return self.model_spec().parts[0]
+
+    def model_key(self) -> str:
+        """Structural model identity for program grouping: the composite
+        spec name when the per-device assignment is the spec's own
+        round-robin cycle, the full explicit assignment otherwise, and
+        the single name for homogeneous cohorts."""
+        if self.model_partition is None:
+            return self.model
+        parts = self.model_spec().parts
+        cyc = tuple(parts[i % len(parts)] for i in range(self.num_devices))
+        if tuple(self.model_partition) == cyc:
+            return self.model
+        return "+".join(self.model_partition)
+
+    def arch_groups(self):
+        """None for homogeneous cohorts; else the per-architecture device
+        groups as ``[(name, np.int32 indices), ...]`` in first-appearance
+        order over the partition (so the first group contains device 0).
+        """
+        if self.model_partition is None:
+            return None
+        part = self.model_partition
+        order = list(dict.fromkeys(part))
+        return [(m, np.flatnonzero(np.asarray(part) == m).astype(np.int32))
+                for m in order]
+
+    def build_models(self) -> dict:
+        """Registry-built classifiers for every architecture this config
+        trains (always includes the server architecture)."""
+        spec_t = self.task_spec()
+        names = list(self.model_partition or (self.server_model(),))
+        names.append(self.server_model())
+        return {m: build_model(m, spec_t.input_shape, self.num_classes)
+                for m in dict.fromkeys(names)}
 
 
 # ---------------------------------------------------------------------------
@@ -248,15 +352,36 @@ def gout_update_psum(favg, cnt, ok):
 class FederatedTrainer:
     """Runs one protocol over a simulated device population.
 
-    model: an object with .init(key) and .apply(params, x) -> logits.
-    dev_x: (D, n_local, ...), dev_y: (D, n_local).
+    model: an object with .init(key) and .apply(params, x) -> logits —
+    or None to build ``fc.model`` from the registry for ``fc.task``'s
+    geometry.  dev_x: (D, n_local, ...), dev_y: (D, n_local).
+
+    A mixed cohort (``fc.model_partition`` set — FD family only) builds
+    one classifier per architecture: every device trains its own
+    parameter space, the eq. (2) aggregation merges the per-label output
+    averages in the shared (C, C) output space, and the FLD conversion /
+    parameter downlink act on the *server* architecture
+    (``fc.server_model()``) alone — clients of other architectures keep
+    learning through the KD tables, which is exactly the workload FL
+    cannot express.
     """
 
     def __init__(self, model, fc: FederatedConfig,
                  ch: Optional[ChannelConfig] = None):
         assert fc.protocol in PROTOCOLS
-        self.model = model
         self.fc = fc
+        self._arch_groups = fc.arch_groups()
+        if self._arch_groups is not None:
+            if model is not None:
+                raise ValueError(
+                    "mixed-architecture cohorts build their per-device "
+                    "models from the registry; pass model=None")
+            self.models = fc.build_models()
+            model = self.models[fc.server_model()]
+        elif model is None:
+            model = fc.model_spec().build(fc.task_spec().input_shape,
+                                          fc.num_classes)
+        self.model = model
         self.ch = ch or ChannelConfig(num_devices=fc.num_devices)
         self._build()
 
@@ -288,6 +413,33 @@ class FederatedTrainer:
         self._codec = fc.codec_spec()
         self._uplink_stage = make_uplink_stage(self._codec, fc.protocol)
         self._plan_cache = {}  # LinkPlan per cohort size (see link_plan)
+
+        # ---- mixed cohorts: one local-train / accuracy program per
+        # architecture group (device indices are static, so each group's
+        # vmap spans exactly its devices) ----
+        self._arch_trains = None
+        if self._arch_groups is not None:
+            def make_pair(apply_a):
+                base_a = make_local_train(apply_a, fc.num_classes,
+                                          fc.local_iters, fc.local_batch)
+
+                def lt(params, x, y, key, gout, use_kd):
+                    return base_a(params, x, y, key, gout, use_kd,
+                                  fc.eta, fc.beta, x.shape[0])
+
+                def acc_a(params, x, y):
+                    logits = apply_a(params, x)
+                    return jnp.mean((jnp.argmax(logits, -1) == y)
+                                    .astype(jnp.float32))
+
+                return (jax.jit(jax.vmap(
+                    lt, in_axes=(0, 0, 0, 0, 0, None))), jax.jit(acc_a))
+
+            self._arch_trains, self._arch_acc = [], {}
+            for arch, idx in self._arch_groups:
+                lt_a, acc_a = make_pair(self.models[arch].apply)
+                self._arch_trains.append((arch, np.asarray(idx), lt_a))
+                self._arch_acc[arch] = acc_a
 
         self.mesh = None
         if not fc.shard_devices:
@@ -340,8 +492,22 @@ class FederatedTrainer:
         kinit, key = jax.random.split(key)
         # all devices start from a common init (paper: same architecture)
         g_params = self.model.init(kinit)
-        dev_params = jax.tree.map(
-            lambda p: jnp.broadcast_to(p, (D,) + p.shape).copy(), g_params)
+        if self._arch_groups is not None:
+            # per-architecture stacks: the server architecture's group
+            # shares the global init; other architectures draw from a
+            # deterministic fold of the same init key
+            dev_params = {}
+            srv = fc.server_model()
+            for arch, idx in self._arch_groups:
+                init_a = g_params if arch == srv else self.models[arch].init(
+                    jax.random.fold_in(kinit, MODELS.index(arch) + 1))
+                dev_params[arch] = jax.tree.map(
+                    lambda p: jnp.broadcast_to(
+                        p, (len(idx),) + p.shape).copy(), init_a)
+        else:
+            dev_params = jax.tree.map(
+                lambda p: jnp.broadcast_to(p, (D,) + p.shape).copy(),
+                g_params)
         gout = jnp.full((C, C), 1.0 / C)
         # per-device view of gout: a device only refreshes its copy when
         # its downlink succeeds (failed links keep the previous table)
@@ -424,9 +590,31 @@ class FederatedTrainer:
 
         # ---- local updates (eq. 1 / 3) ----
         dkeys = jax.random.split(jax.random.fold_in(kr, 1), D)
-        dev_params, favg, cnt, mloss = self._local_train(
-            dev_params, dev_x, dev_y, dkeys, dev_gout,
-            jnp.asarray(use_kd))
+        if self._arch_trains is None:
+            dev_params, favg, cnt, mloss = self._local_train(
+                dev_params, dev_x, dev_y, dkeys, dev_gout,
+                jnp.asarray(use_kd))
+        else:
+            # per-architecture groups train in their own parameter
+            # spaces; the (D, C, C) output tables reassemble in the
+            # shared output space for the eq. (2) merge below.  Each
+            # device consumes the same dkeys[d] it would draw in a
+            # homogeneous cohort.
+            C = fc.num_classes
+            favg = jnp.zeros((D, C, C))
+            cnt = jnp.zeros((D, C))
+            mloss = jnp.zeros((D,))
+            new_dp = {}
+            for arch, idx, lt in self._arch_trains:
+                ji = jnp.asarray(idx)
+                p_a, f_a, c_a, l_a = lt(
+                    dev_params[arch], dev_x[ji], dev_y[ji], dkeys[ji],
+                    dev_gout[ji], jnp.asarray(use_kd))
+                new_dp[arch] = p_a
+                favg = favg.at[ji].set(f_a)
+                cnt = cnt.at[ji].set(c_a)
+                mloss = mloss.at[ji].set(l_a)
+            dev_params = new_dp
         jax.block_until_ready(favg)
 
         # ---- seed collection (first round, FLD family) ----
@@ -469,7 +657,20 @@ class FederatedTrainer:
         mask = jnp.asarray(dn_ok)
         dev_gout = downlink_gout(dev_gout, gout, mask)
         if proto != "fd":
-            dev_params = downlink_params(dev_params, g_params, mask)
+            if self._arch_groups is None:
+                dev_params = downlink_params(dev_params, g_params, mask)
+            else:
+                # the converted global model lives in the server
+                # architecture's parameter space: only that group can
+                # receive it; other architectures keep training through
+                # the KD tables delivered above
+                srv = fc.server_model()
+                for arch, idx in self._arch_groups:
+                    if arch == srv:
+                        dev_params = dict(dev_params)
+                        dev_params[srv] = downlink_params(
+                            dev_params[srv], g_params,
+                            mask[jnp.asarray(idx)])
 
         # ---- scatter the trained cohort back into the pool ----
         if cohort is not None:
@@ -487,8 +688,15 @@ class FederatedTrainer:
         # device 0 sits out most rounds at small sample_ratio and its
         # stale parameters would stall the reported acc ----
         ref_dev = 0 if cohort is None else int(cohort[0])
-        ref = jax.tree.map(lambda dp: dp[ref_dev], dev_params)
-        acc = float(self._accuracy(ref, test_x, test_y))
+        if self._arch_groups is None:
+            ref = jax.tree.map(lambda dp: dp[ref_dev], dev_params)
+            acc = float(self._accuracy(ref, test_x, test_y))
+        else:
+            # device 0 sits at position 0 of the first (first-appearance
+            # ordered) architecture group; evaluate with its own apply
+            arch0 = self._arch_groups[0][0]
+            ref = jax.tree.map(lambda dp: dp[0], dev_params[arch0])
+            acc = float(self._arch_acc[arch0](ref, test_x, test_y))
         if log:
             log(f"[{proto}] round {p}: acc={acc:.3f} "
                 f"loss={float(mloss.mean()):.3f} up_ok={up_ok.sum()}/{D} "
@@ -553,6 +761,7 @@ class FederatedTrainer:
         history = {"acc": [], "round_latency_s": [], "compute_s": [],
                    "cum_time_s": [], "loss": [], "uplink_ok": [],
                    "converged_round": None, "protocol": fc.protocol,
+                   "model": fc.model_key(), "task": fc.task,
                    "codec": spec.name,
                    "sample_ratio": fc.sample_ratio,
                    "cohort_size": fc.cohort_size(),
@@ -605,7 +814,8 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
                          weighted_avg_fn: Optional[Callable] = None,
                          gout_update_fn: Optional[Callable] = None,
                          codec: str = "identity",
-                         cohort_size: Optional[int] = None):
+                         cohort_size: Optional[int] = None,
+                         arch_groups: Optional[list] = None):
     """Pure per-round protocol step batched over a leading config-grid
     axis — ``FederatedTrainer.run``'s round body with every host decision
     (success gating, convergence bookkeeping) expressed as masked lax ops,
@@ -669,14 +879,36 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
     ``cohort_size`` is None or covers the pool, no gather/scatter (or
     ``cohort`` input) exists in the graph at all, so full-participation
     programs stay graph-identical to the unsampled step.
+
+    ``arch_groups`` turns on mixed-architecture cohorts (FD family,
+    full participation): a list of ``(name, device_indices, apply_fn)``
+    triples in first-appearance order over the device partition (so the
+    first group holds device 0, and — by the round-robin assignment
+    contract — the *server* architecture whose apply is
+    ``model_apply``).  ``state["dev_params"]`` becomes a dict of
+    per-architecture (G, D_a, ...) stacks; each group runs its own grid
+    local-train, the (G, D, C, C) output tables reassemble for the
+    eq. (2) merge, and the FLD parameter downlink reaches only the
+    server architecture's group.  Homogeneous programs pass None and
+    keep the exact pre-refactor graph.
     """
     proto = canonical_protocol(protocol)
     D, C = num_devices, num_classes
     Dc = D if cohort_size is None else min(int(cohort_size), D)
     sampled = Dc < D
     codec_spec = parse_codec(codec)
+    if arch_groups is not None:
+        if sampled:
+            raise ValueError("mixed-architecture grid programs require "
+                             "full participation")
+        if proto == "fl":
+            raise ValueError("protocol 'fl' cannot mix architectures")
+        arch_lt = [(a, np.asarray(idx, np.int32),
+                    make_grid_local_train(fn, C, local_iters, local_batch,
+                                          per_config_data))
+                   for a, idx, fn in arch_groups]
 
-    if local_train_fn is None:
+    if local_train_fn is None and arch_groups is None:
         # a sampled gather of shared (D, n, ...) data yields per-config
         # (G, Dc, n, ...) batches, so the grid local-train needs the
         # per-config in_axes layout even on shared-data grids
@@ -695,8 +927,13 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
 
     conv_fn = jax.vmap(conv_one)
 
+    # the reference device for evaluation is device 0 — in a mixed
+    # cohort that is the first group's architecture, not necessarily the
+    # server's
+    ref_apply = arch_groups[0][2] if arch_groups is not None else model_apply
+
     def acc_one(params):
-        logits = model_apply(params, test_x)
+        logits = ref_apply(params, test_x)
         return jnp.mean((jnp.argmax(logits, -1) == test_y)
                         .astype(jnp.float32))
 
@@ -739,9 +976,34 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
         # ---- local updates (eq. 1 / 3) ----
         dkeys = jax.vmap(
             lambda k: jax.random.split(jax.random.fold_in(k, 1), Dc))(kr)
-        dev_params, favg, cnt, mloss = local_train_fn(
-            dev_params, dx, dy, dkeys, dev_gout,
-            use_kd, consts["eta"], consts["beta"], consts["n_local"])
+        if arch_groups is None:
+            dev_params, favg, cnt, mloss = local_train_fn(
+                dev_params, dx, dy, dkeys, dev_gout,
+                use_kd, consts["eta"], consts["beta"], consts["n_local"])
+        else:
+            # per-architecture groups train their own (G, D_a, ...)
+            # stacks; outputs reassemble on the full device axis so the
+            # eq. (2) merge below sees the whole cohort.  dkeys spans all
+            # D devices, so each device draws the stream a homogeneous
+            # cohort would give it.
+            G = consts["key"].shape[0]
+            favg = jnp.zeros((G, D, C, C))
+            cnt = jnp.zeros((G, D, C))
+            mloss = jnp.zeros((G, D))
+            new_dp = {}
+            for arch, idx, lt in arch_lt:
+                ji = jnp.asarray(idx)
+                dx_a = dx[:, ji] if per_config_data else dx[ji]
+                dy_a = dy[:, ji] if per_config_data else dy[ji]
+                p_a, f_a, c_a, l_a = lt(
+                    dev_params[arch], dx_a, dy_a, dkeys[:, ji],
+                    dev_gout[:, ji], use_kd, consts["eta"],
+                    consts["beta"], consts["n_local"])
+                new_dp[arch] = p_a
+                favg = favg.at[:, ji].set(f_a)
+                cnt = cnt.at[:, ji].set(c_a)
+                mloss = mloss.at[:, ji].set(l_a)
+            dev_params = new_dp
 
         # ---- channel (batched SNR/outage draws over the grid) ----
         ck = jax.vmap(lambda k: jax.random.fold_in(k, 3))(kr)
@@ -787,7 +1049,16 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
         # ---- downlink stage (gated per device by dn_ok) ----
         dev_gout = downlink_gout(dev_gout, gout, dn_ok)
         if proto != "fd":
-            dev_params = downlink_params(dev_params, g_params, dn_ok)
+            if arch_groups is None:
+                dev_params = downlink_params(dev_params, g_params, dn_ok)
+            else:
+                # the converted global model is server-architecture
+                # parameters: only that group (the first, by the
+                # round-robin contract) receives it
+                a0, i0 = arch_lt[0][0], jnp.asarray(arch_lt[0][1])
+                dev_params = dict(dev_params)
+                dev_params[a0] = downlink_params(
+                    dev_params[a0], g_params, dn_ok[:, i0])
 
         # ---- scatter the trained cohort back into the pool carry ----
         if sampled:
@@ -805,6 +1076,10 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
             ref = jax.tree.map(
                 lambda dp: jax.vmap(lambda a, i: a[i])(dp, chrt[:, 0]),
                 dev_params)
+        elif arch_groups is not None:
+            # device 0 = position 0 of the first architecture group
+            ref = jax.tree.map(lambda dp: dp[:, 0],
+                               dev_params[arch_lt[0][0]])
         else:
             ref = jax.tree.map(lambda dp: dp[:, 0], dev_params)
         acc = acc_fn(ref)

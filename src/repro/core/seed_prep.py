@@ -45,6 +45,11 @@ if TYPE_CHECKING:  # pragma: no cover - annotation only (avoids a cycle)
 #: untouched, so grid points differing only there share one prep run.
 SEED_FIELDS = ("protocol", "lam", "n_seed", "n_inverse", "seed",
                "num_devices", "num_classes",
+               # the task fixes the seed-sample feature shape (the
+               # partition fingerprint would catch a shape change too,
+               # but the config half of the key must disambiguate grids
+               # that sweep the task axis over one shared memo)
+               "task",
                # sampling fields: round-1 seeds are collected from the
                # round-1 *cohort*, which these determine
                "sample_ratio", "sample_seed", "sample_min_active")

@@ -1,6 +1,8 @@
-"""Data substrate: synthetic corpora (offline container) + partitioners."""
-from .synthetic import synthetic_images, synthetic_tokens  # noqa: F401
+"""Data substrate: synthetic corpora (offline container), the task
+registry, and partitioners."""
+from .synthetic import (synthetic_audio, synthetic_images,  # noqa: F401
+                        synthetic_rgb_images, synthetic_tokens)
 from .partition import (PARTITION_SCHEMES, PartitionSpec,  # noqa: F401
                         partition_dirichlet, partition_iid,
                         partition_noniid)
-from .pipeline import device_batches  # noqa: F401
+from .pipeline import TaskSpec, device_batches, parse_task  # noqa: F401

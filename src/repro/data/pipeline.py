@@ -1,8 +1,79 @@
-"""Batching pipeline for the federated runtime: per-device index sampling
-done with JAX PRNG so local training is fully traceable/vmappable."""
+"""Data pipeline: the task registry + batching for the federated runtime.
+
+A :class:`TaskSpec` names one workload as a hashable value object — its
+input shape, class count, per-sample uplink payload width, and the
+procedural generator that materializes it (the container is offline, so
+``digits``/``cifar``/``speech`` are synthetic stand-ins with the *real*
+dataset's geometry: 28x28x1 @ 8 bit, 32x32x3 @ 8 bit, and a
+speech-commands-shaped 32x40 log-mel gram @ 16 bit).  Payload widths
+feed ``round_payload_bits``, so uplink latency responds to the task the
+same way it would on the real data.
+
+Name resolution (aliases + the shared ValueError) lives in
+``repro.registry.canonical_task``; this module owns construction.
+Batching helpers below are task-agnostic (JAX PRNG index sampling so
+local training is fully traceable/vmappable).
+"""
 from __future__ import annotations
 
+import dataclasses
+import math
+
 import jax
+
+from ..registry import TASKS, canonical_task
+from .synthetic import synthetic_audio, synthetic_images, synthetic_rgb_images
+
+
+@dataclasses.dataclass(frozen=True)
+class TaskSpec:
+    """One workload: shape/classes/payload width + a seeded generator.
+
+    ``sample_bits`` is the uplink payload of ONE raw (or mixed) sample —
+    ``bits_per_feature * prod(input_shape)`` — matching the paper's
+    b_s = 8 bit x 28 x 28 accounting for the digit task.
+    """
+    name: str
+    input_shape: tuple
+    num_classes: int
+    bits_per_feature: int
+
+    @property
+    def sample_bits(self) -> int:
+        return self.bits_per_feature * math.prod(self.input_shape)
+
+    def data(self, key, n: int, num_classes: int | None = None):
+        """Materialize (x (n, *input_shape), y (n,)) with ``key``.
+
+        ``num_classes`` overrides the task's default class count (the
+        generators are class-count generic); shapes never change."""
+        c = self.num_classes if num_classes is None else num_classes
+        if self.name == "digits":
+            return synthetic_images(key, n, num_classes=c,
+                                    side=self.input_shape[0])
+        if self.name == "cifar":
+            return synthetic_rgb_images(key, n, num_classes=c,
+                                        side=self.input_shape[0],
+                                        channels=self.input_shape[2])
+        if self.name == "speech":
+            return synthetic_audio(key, n, num_classes=c,
+                                   frames=self.input_shape[0],
+                                   mels=self.input_shape[1])
+        raise ValueError(f"TaskSpec {self.name!r} has no generator")
+
+
+_TASK_SPECS = {
+    "digits": TaskSpec("digits", (28, 28, 1), 10, 8),
+    "cifar": TaskSpec("cifar", (32, 32, 3), 10, 8),
+    "speech": TaskSpec("speech", (32, 40, 1), 12, 16),
+}
+assert set(_TASK_SPECS) == set(TASKS)
+
+
+def parse_task(name: str) -> TaskSpec:
+    """Resolve a task name (canonical or alias) to its :class:`TaskSpec`;
+    unknown names raise ``canonical_task``'s shared ValueError."""
+    return _TASK_SPECS[canonical_task(name)]
 
 
 def device_batches(key, n_local: int, iters: int, batch_size: int):

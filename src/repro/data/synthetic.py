@@ -40,6 +40,57 @@ def synthetic_images(key, n: int, num_classes: int = 10, side: int = 28,
     return x[..., None].astype(jnp.float32), y.astype(jnp.int32)
 
 
+def synthetic_rgb_images(key, n: int, num_classes: int = 10,
+                         side: int = 32, channels: int = 3,
+                         noise: float = 0.35):
+    """CIFAR-shaped task: (x (n, side, side, channels) in [0,1], y (n,)).
+
+    Same recipe as :func:`synthetic_images` but with per-channel
+    prototypes drawn from a coarser 8x8 grid, so classes are separable
+    by color *and* spatial structure."""
+    kp, ky, kn, ks = jax.random.split(key, 4)
+    coarse = jax.random.normal(kp, (num_classes, 8, 8, channels))
+    protos = jax.image.resize(
+        coarse, (num_classes, side, side, channels), "bilinear")
+    protos = protos / jnp.max(jnp.abs(protos), axis=(1, 2, 3),
+                              keepdims=True)
+    y = jax.random.randint(ky, (n,), 0, num_classes)
+    base = protos[y]
+    jitter = jax.random.normal(kn, (n, side, side, channels)) * noise
+    shifts = jax.random.randint(ks, (n, 2), -3, 4)
+
+    def roll_one(img, sh):
+        return jnp.roll(jnp.roll(img, sh[0], axis=0), sh[1], axis=1)
+
+    x = jax.vmap(roll_one)(base + jitter, shifts)
+    x = jax.nn.sigmoid(2.0 * x)
+    return x.astype(jnp.float32), y.astype(jnp.int32)
+
+
+def synthetic_audio(key, n: int, num_classes: int = 12, frames: int = 32,
+                    mels: int = 40, noise: float = 0.3):
+    """Speech-commands-shaped task: (x (n, frames, mels, 1), y (n,)).
+
+    Each class is a smooth random time-frequency 'formant track'
+    (coarse 8x10 grid upsampled to frames x mels), jittered per sample
+    and rolled along the *time* axis only — mel bins carry class
+    identity, onsets do not.  The trailing channel axis keeps the
+    layout image-like so every registered model applies unchanged."""
+    kp, ky, kn, ks = jax.random.split(key, 4)
+    coarse = jax.random.normal(kp, (num_classes, 8, 10))
+    protos = jax.image.resize(
+        coarse, (num_classes, frames, mels), "bilinear")
+    protos = protos / jnp.max(jnp.abs(protos), axis=(1, 2), keepdims=True)
+    y = jax.random.randint(ky, (n,), 0, num_classes)
+    base = protos[y]
+    jitter = jax.random.normal(kn, (n, frames, mels)) * noise
+    shifts = jax.random.randint(ks, (n,), -4, 5)
+    x = jax.vmap(lambda img, sh: jnp.roll(img, sh, axis=0))(
+        base + jitter, shifts)
+    x = jax.nn.sigmoid(2.0 * x)  # squash like a normalized log-mel gram
+    return x[..., None].astype(jnp.float32), y.astype(jnp.int32)
+
+
 def synthetic_tokens(key, n_seqs: int, seq_len: int, vocab: int,
                      order: int = 2):
     """Markov-ish token streams for LM smoke tests: next token depends on a

@@ -10,6 +10,13 @@ only" — one jitted step at a fixed batch size, requests padded to it.
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
       --batch 4 --prompt-len 64 --gen 32
+
+Federated classifiers serve through the same fixed-batch contract via
+``--classifier`` (a model registry name) plus ``--task`` (the registry
+task that fixes the input geometry):
+
+  PYTHONPATH=src python -m repro.launch.serve --classifier transformer \
+      --task cifar --batch 8
 """
 from __future__ import annotations
 
@@ -73,15 +80,56 @@ def serve(arch: str, batch: int, prompt_len: int, gen: int,
     return gen_tokens
 
 
+def serve_classifier(model_name: str, task_name: str, batch: int,
+                     requests: int = 40, log=print):
+    """Single-shot classifier serving: build the registry model at the
+    task's geometry and drive the federated inference endpoint (the
+    prefill-only analogue of the decode loop above — one compiled shape,
+    requests padded to it)."""
+    from repro.data.pipeline import parse_task
+    from repro.launch.service import InferenceEndpoint
+    from repro.models.registry import build_model
+
+    task = parse_task(task_name)
+    model = build_model(model_name, task.input_shape, task.num_classes)
+    params = model.init(jax.random.PRNGKey(0))
+    n_par = sum(p.size for p in jax.tree.leaves(params))
+    log(f"classifier={model_name} task={task.name} "
+        f"input={task.input_shape} classes={task.num_classes} "
+        f"params={n_par/1e3:.1f}K batch={batch}")
+
+    endpoint = InferenceEndpoint(model.apply, batch,
+                                 input_shape=task.input_shape)
+    x, _ = task.data(jax.random.PRNGKey(1), requests)
+    endpoint.submit(x)
+    t0 = time.time()
+    preds = endpoint.flush(params)
+    t_serve = time.time() - t0
+    log(f"served {preds.shape[0]} requests in {endpoint.batches} "
+        f"batches: {t_serve*1e3:.1f} ms "
+        f"({preds.shape[0] / max(t_serve, 1e-9):.0f} req/s)")
+    log(f"sample predictions: {preds[:12].tolist()}")
+    return preds
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--classifier", default=None,
+                    help="serve a federated classifier from the model "
+                         "registry instead of a token arch")
+    ap.add_argument("--task", default="digits",
+                    help="registry task fixing the classifier's input "
+                         "geometry (with --classifier)")
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=64)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--full", action="store_true",
                     help="use the full (non-smoke) config")
     args = ap.parse_args()
+    if args.classifier is not None:
+        serve_classifier(args.classifier, args.task, args.batch)
+        return
     serve(args.arch, args.batch, args.prompt_len, args.gen,
           smoke=not args.full)
 

@@ -119,10 +119,18 @@ class InferenceEndpoint:
     to that shape.  ``submit`` enqueues feature arrays; ``flush`` runs
     as many padded batches as the queue holds and returns per-request
     predicted labels in submission order.
+
+    ``input_shape`` (normally the serving task's
+    ``TaskSpec.input_shape``) pins the per-request feature shape; a
+    mis-shaped request is rejected at ``submit`` time with both sides
+    named, instead of surfacing as a retrace or a model-side shape
+    error mid-flush.
     """
 
-    def __init__(self, apply_fn, batch_size: int = 16):
+    def __init__(self, apply_fn, batch_size: int = 16,
+                 input_shape: Optional[tuple] = None):
         self.batch_size = batch_size
+        self.input_shape = tuple(input_shape) if input_shape else None
         self._queue: list = []
         self.served = 0
         self.batches = 0
@@ -135,6 +143,12 @@ class InferenceEndpoint:
     def submit(self, x) -> int:
         """Queue a request batch ``(n, ...)``; returns n."""
         x = np.asarray(x)
+        if self.input_shape is not None and \
+                tuple(x.shape[1:]) != self.input_shape:
+            raise ValueError(
+                f"endpoint serves a model built for input shape "
+                f"{self.input_shape} but got a request batch of shape "
+                f"{tuple(x.shape[1:])}")
         self._queue.extend(x)
         return x.shape[0]
 
@@ -197,13 +211,24 @@ class FederatedService:
                  churn: Optional[ChurnConfig] = None,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 1,
                  keep: Optional[int] = None, serve_batch: int = 16):
+        if fc.model_partition is not None:
+            raise ValueError(
+                "FederatedService drives homogeneous cohorts: churn "
+                "gathers/scatters one (P, ...) device stack, which a "
+                "mixed-architecture cohort's per-architecture stacks "
+                "don't fit; run mixed cohorts through FederatedTrainer "
+                "or the sweep engine")
         self.trainer = FederatedTrainer(model, fc, ch)
         self.fc = self.trainer.fc
         self.churn = churn or ChurnConfig()
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.keep = keep
-        self.endpoint = InferenceEndpoint(model.apply, serve_batch)
+        # the served batch shape comes from the config's task, so a
+        # model=None service (registry-built) serves the right geometry
+        self.endpoint = InferenceEndpoint(
+            self.trainer.model.apply, serve_batch,
+            input_shape=self.fc.task_spec().input_shape)
         spec = self.fc.codec_spec()
         # effective participation fraction: churn and client sampling
         # compose (round_once sub-samples the churned cohort)
@@ -379,21 +404,28 @@ class FederatedService:
 # ---------------------------------------------------------------------------
 
 def _smoke_setup(args):
-    from repro.data import partition_iid, synthetic_images
-    from repro.models.cnn import CNN
+    from repro.data import partition_iid
+    from repro.data.pipeline import parse_task
 
-    x, y = synthetic_images(jax.random.PRNGKey(42), 1400)
+    # the task fixes data geometry and class count; the model comes from
+    # the registry (defaults reproduce the historical CNN-on-digits
+    # smoke bit-for-bit: same generator, same init stream)
+    task = parse_task(getattr(args, "task", "digits"))
+    x, y = task.data(jax.random.PRNGKey(42), 1400)
     dev_x, dev_y = partition_iid(np.asarray(x[:1200]),
-                                 np.asarray(y[:1200]), 4, 300, 10, seed=0)
+                                 np.asarray(y[:1200]), 4, 300,
+                                 task.num_classes, seed=0)
     fc = FederatedConfig(protocol=args.protocol, num_devices=4,
                          local_iters=8, local_batch=16, server_iters=8,
                          server_batch=16, max_rounds=args.rounds,
-                         n_seed=6, n_inverse=12, seed=0)
+                         n_seed=6, n_inverse=12, seed=0,
+                         model=getattr(args, "model", "cnn"),
+                         task=task.name)
     ch = ChannelConfig(num_devices=4, p_up_dbm=40.0,
                        compute_mean_s=args.compute_mean_s,
                        deadline_s=args.deadline_s)
     churn = ChurnConfig(p_active=args.p_active, min_active=2)
-    svc = FederatedService(CNN(), fc, ch, churn=churn,
+    svc = FederatedService(None, fc, ch, churn=churn,
                            ckpt_dir=args.ckpt_dir, ckpt_every=1)
     svc.bind_data(dev_x, dev_y, x[1200:], y[1200:])
     return svc, (x, y)
@@ -409,6 +441,11 @@ def main(argv=None) -> int:
         description="continuous federated service smoke")
     ap.add_argument("--rounds", type=int, default=4)
     ap.add_argument("--protocol", default="mix2fld")
+    ap.add_argument("--model", default="cnn",
+                    help="registry model to train/serve (cnn/mlp/"
+                         "transformer; homogeneous only)")
+    ap.add_argument("--task", default="digits",
+                    help="registry task shaping the synthetic workload")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--p-active", type=float, default=0.75)
     ap.add_argument("--compute-mean-s", type=float, default=0.05,

@@ -1,3 +1,8 @@
-"""Model stack: paper CNN + production transformer/SSM architectures."""
-from .transformer import Transformer, init_params, count_params, active_params  # noqa: F401
+"""Model stack: paper CNN + production transformer/SSM architectures,
+plus the federated model registry (cnn / mlp / transformer classifiers
+with one shared init/apply contract)."""
+from .transformer import (Transformer, TransformerClassifier,  # noqa: F401
+                          active_params, count_params, init_params)
 from .cnn import CNN  # noqa: F401
+from .mlp import MLPClassifier  # noqa: F401
+from .registry import ModelSpec, build_model, parse_model  # noqa: F401

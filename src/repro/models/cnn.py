@@ -4,7 +4,11 @@ Sec. IV: "Every device has a 3-layer convolutional neural network model
 (2 convolutional layers, 1 fully-connected layer) having N_mod = 12,544."
 Exact layer shapes are unpublished; our reconstruction
 (conv 1->14 3x3, pool 2, conv 14->20 3x3, pool 2, fc 980->10) gives 12,490
-parameters — recorded in configs/paper_cnn.py.
+parameters on the default 28x28x1 digits geometry — recorded in
+configs/paper_cnn.py.  The conv stack and FC fan-in derive from
+``input_shape``, so the same class serves any registered task shape
+(e.g. the CIFAR-shaped 32x32x3 task) without touching the paper
+defaults.
 """
 from __future__ import annotations
 
@@ -21,19 +25,30 @@ def _conv_init(key, k, cin, cout):
 
 
 class CNN:
-    """Functional CNN: params pytree + pure apply. Input: (B, 28, 28, 1)."""
+    """Functional CNN: params pytree + pure apply. Input: (B, *input_shape)."""
 
-    def __init__(self, num_classes: int = NUM_CLASSES):
+    def __init__(self, num_classes: int = NUM_CLASSES,
+                 input_shape: tuple = (IMAGE_SIZE, IMAGE_SIZE, 1)):
+        if len(input_shape) != 3:
+            raise ValueError(
+                f"CNN input_shape must be (H, W, C), got {input_shape}")
         self.num_classes = num_classes
+        self.input_shape = tuple(int(s) for s in input_shape)
+        h, w, _ = self.input_shape
         c1, c2 = CONV_CHANNELS
-        side = IMAGE_SIZE // POOL // POOL
-        self.fc_in = side * side * c2
+        # two VALID pool-2 stages: floor division per stage
+        self.fc_in = (h // POOL // POOL) * (w // POOL // POOL) * c2
+        if self.fc_in == 0:
+            raise ValueError(
+                f"input_shape {self.input_shape} too small for two "
+                f"pool-{POOL} stages")
 
     def init(self, key):
         k1, k2, k3 = jax.random.split(key, 3)
         c1, c2 = CONV_CHANNELS
+        cin = self.input_shape[2]
         return {
-            "conv1": {"w": _conv_init(k1, KERNEL, 1, c1),
+            "conv1": {"w": _conv_init(k1, KERNEL, cin, c1),
                       "b": jnp.zeros((c1,), jnp.float32)},
             "conv2": {"w": _conv_init(k2, KERNEL, c1, c2),
                       "b": jnp.zeros((c2,), jnp.float32)},
@@ -56,7 +71,11 @@ class CNN:
             "VALID")
 
     def apply(self, params, x):
-        """x: (B, 28, 28, 1) -> logits (B, num_classes)."""
+        """x: (B, *input_shape) -> logits (B, num_classes)."""
+        if tuple(x.shape[1:]) != self.input_shape:
+            raise ValueError(
+                f"CNN built for input shape {self.input_shape} but got a "
+                f"batch of shape {tuple(x.shape[1:])}")
         h = jax.nn.relu(self._conv(x, params["conv1"]))
         h = self._pool(h)
         h = jax.nn.relu(self._conv(h, params["conv2"]))

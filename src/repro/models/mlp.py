@@ -1,7 +1,12 @@
-"""Feed-forward blocks: SwiGLU (silu) and plain GELU MLP (whisper)."""
+"""Feed-forward blocks: SwiGLU (silu) and plain GELU MLP (whisper) —
+plus :class:`MLPClassifier`, the registry's flatten->ReLU-stack
+federated client model."""
 from __future__ import annotations
 
+import math
+
 import jax
+import jax.numpy as jnp
 
 from .layers import act_fn, dense_init, dtype_of
 
@@ -25,3 +30,46 @@ def mlp(cfg, p, x):
     if "w3" in p:  # SwiGLU
         return (act(x @ p["w3"]) * (x @ p["w1"])) @ p["w2"]
     return act(x @ p["w1"]) @ p["w2"]
+
+
+class MLPClassifier:
+    """Flatten -> ReLU hidden stack -> logits; same .init/.apply contract
+    as :class:`repro.models.cnn.CNN` so the federated round bodies treat
+    architectures interchangeably."""
+
+    def __init__(self, num_classes: int, input_shape: tuple,
+                 hidden: tuple = (64, 64)):
+        self.num_classes = num_classes
+        self.input_shape = tuple(int(s) for s in input_shape)
+        self.hidden = tuple(int(h) for h in hidden)
+        self.dims = (math.prod(self.input_shape), *self.hidden, num_classes)
+
+    def init(self, key):
+        # str-keyed (not a list) so the param tree round-trips through
+        # the path-flattening checkpoint package unchanged
+        keys = jax.random.split(key, len(self.dims) - 1)
+        params = {}
+        for i, (k, fan_in, fan_out) in enumerate(
+                zip(keys, self.dims[:-1], self.dims[1:])):
+            w = jax.random.normal(k, (fan_in, fan_out), jnp.float32)
+            params[f"layer{i}"] = {
+                "w": w / jnp.sqrt(fan_in),
+                "b": jnp.zeros((fan_out,), jnp.float32)}
+        return params
+
+    def apply(self, params, x):
+        """x: (B, *input_shape) -> logits (B, num_classes)."""
+        if tuple(x.shape[1:]) != self.input_shape:
+            raise ValueError(
+                f"MLPClassifier built for input shape {self.input_shape} "
+                f"but got a batch of shape {tuple(x.shape[1:])}")
+        h = x.reshape(x.shape[0], -1)
+        n = len(self.dims) - 1
+        for i in range(n - 1):
+            layer = params[f"layer{i}"]
+            h = jax.nn.relu(h @ layer["w"] + layer["b"])
+        last = params[f"layer{n - 1}"]
+        return h @ last["w"] + last["b"]
+
+    def num_params(self, params) -> int:
+        return sum(p.size for p in jax.tree.leaves(params))

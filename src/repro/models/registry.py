@@ -1,0 +1,81 @@
+"""Model registry: construction behind the ``repro.registry`` model names.
+
+``parse_model`` turns a model spec string into a :class:`ModelSpec`
+value object — either a single architecture (``"cnn"``) or a "+"-joined
+heterogeneous cohort spec (``"cnn+mlp+transformer"``) whose parts are
+assigned to devices round-robin by :meth:`ModelSpec.partition`.  The
+FIRST part is the *global* (server-side) architecture: FD-family
+protocols aggregate per-label output averages, so any client
+architecture can feed the eq. (2) merge, but the converted global model
+and the FLD downlink parameters live in exactly one parameter space.
+
+Name validation (aliases + the shared ValueError) lives in
+``repro.registry.canonical_model``; unknown atoms fail there with the
+same message in every layer.  Classifiers share one contract:
+``model.init(key) -> params`` pytree, ``model.apply(params, x (B,
+*input_shape)) -> logits (B, num_classes)``, plus ``input_shape`` /
+``num_classes`` attributes the serving endpoint derives its batch shape
+from.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from ..registry import MODELS, canonical_model
+from .cnn import CNN
+from .mlp import MLPClassifier
+from .transformer import TransformerClassifier
+
+
+def build_model(name: str, input_shape, num_classes: int):
+    """Construct one registered classifier for a task geometry."""
+    name = canonical_model(name)
+    if name == "cnn":
+        return CNN(num_classes, tuple(input_shape))
+    if name == "mlp":
+        return MLPClassifier(num_classes, tuple(input_shape))
+    return TransformerClassifier(num_classes, tuple(input_shape))
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """A parsed model spec: one or more canonical architecture names.
+
+    ``parts[0]`` is the global/server architecture; ``partition``
+    assigns parts to devices round-robin, so a ``"cnn+mlp"`` cohort of 4
+    devices trains (cnn, mlp, cnn, mlp)."""
+    parts: tuple
+
+    @property
+    def name(self) -> str:
+        return "+".join(self.parts)
+
+    @property
+    def mixed(self) -> bool:
+        return len(self.parts) > 1
+
+    def partition(self, num_devices: int) -> tuple:
+        """Per-device architecture names, cycling through ``parts``."""
+        return tuple(self.parts[d % len(self.parts)]
+                     for d in range(num_devices))
+
+    def build(self, input_shape, num_classes: int):
+        """Construct the global (server-side) architecture."""
+        return build_model(self.parts[0], input_shape, num_classes)
+
+
+def parse_model(spec: str) -> ModelSpec:
+    """Parse ``"cnn"`` or ``"cnn+mlp+transformer"`` into a
+    :class:`ModelSpec`; each atom resolves through ``canonical_model``
+    (same ValueError contract as ``canonical_protocol``).  A composite
+    whose atoms are all identical collapses to the single architecture.
+    """
+    if isinstance(spec, ModelSpec):
+        return spec
+    parts = tuple(canonical_model(p) for p in str(spec).split("+"))
+    if len(set(parts)) == 1:
+        parts = parts[:1]
+    return ModelSpec(parts)
+
+
+__all__ = ["MODELS", "ModelSpec", "build_model", "parse_model"]

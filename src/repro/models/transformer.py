@@ -15,8 +15,8 @@ from . import attention as attn_mod
 from . import kvcache
 from .attention import (cross_attention, encode_cross_kv, gqa_attention,
                         mla_attention)
-from .layers import (apply_norm, dtype_of, embed_init, grad_dtype_guard,
-                     init_norm)
+from .layers import (apply_norm, dense_init, dtype_of, embed_init,
+                     grad_dtype_guard, init_norm)
 from .mamba2 import init_mamba, mamba2_forward
 from .mlp import init_mlp, mlp
 from .moe import init_moe, moe_ffn
@@ -351,6 +351,65 @@ class Transformer:
 
     def init_cache(self, batch_size, seq_len):
         return kvcache.init_cache(self.cfg, batch_size, seq_len)
+
+
+class TransformerClassifier:
+    """Tiny dense transformer as a federated client model: flatten the
+    input, cut it into ``seq_len`` patch tokens, project to d_model, run
+    the scanned dense stack, mean-pool position logits.
+
+    Same .init/.apply contract as :class:`repro.models.cnn.CNN` (float32
+    params, logits (B, num_classes)), so FD-family cohorts can mix it
+    with the conv/MLP clients.  Built on the same ``init_params`` /
+    ``forward`` stack the serving configs use (``embed_input`` front
+    door, learned positions, GELU MLP)."""
+
+    def __init__(self, num_classes: int, input_shape: tuple,
+                 d_model: int = 32, num_layers: int = 2, num_heads: int = 2,
+                 head_dim: int = 16, d_ff: int = 64, seq_len: int = 16):
+        from ..configs import ArchConfig  # local: configs never imports models
+        self.num_classes = num_classes
+        self.input_shape = tuple(int(s) for s in input_shape)
+        total = 1
+        for s in self.input_shape:
+            total *= s
+        if total % seq_len:
+            raise ValueError(
+                f"input shape {self.input_shape} ({total} features) does "
+                f"not split into seq_len={seq_len} patch tokens")
+        self.seq_len = seq_len
+        self.patch_dim = total // seq_len
+        self.cfg = ArchConfig(
+            name="fed_transformer", family="dense",
+            source="registry classifier (this repo)",
+            num_layers=num_layers, d_model=d_model, num_heads=num_heads,
+            num_kv_heads=num_heads, d_ff=d_ff, vocab_size=num_classes,
+            head_dim=head_dim, attn_type="gqa", pos_emb="learned",
+            max_position=seq_len, embed_input=True, mlp_act="gelu",
+            param_dtype="float32")
+
+    def init(self, key):
+        kp, kt = jax.random.split(key)
+        patch = {"w": dense_init(kp, self.patch_dim, self.cfg.d_model,
+                                 jnp.float32),
+                 "b": jnp.zeros((self.cfg.d_model,), jnp.float32)}
+        return {"patch": patch, "tf": init_params(self.cfg, kt)}
+
+    def apply(self, params, x):
+        """x: (B, *input_shape) -> logits (B, num_classes)."""
+        if tuple(x.shape[1:]) != self.input_shape:
+            raise ValueError(
+                f"TransformerClassifier built for input shape "
+                f"{self.input_shape} but got a batch of shape "
+                f"{tuple(x.shape[1:])}")
+        toks = x.reshape(x.shape[0], self.seq_len, self.patch_dim)
+        h = toks @ params["patch"]["w"] + params["patch"]["b"]
+        logits, _, _ = forward(self.cfg, params["tf"], {"embeds": h},
+                               remat=False)
+        return logits.mean(axis=1)
+
+    def num_params(self, params) -> int:
+        return sum(p.size for p in jax.tree.leaves(params))
 
 
 def count_params(params) -> int:

@@ -1,4 +1,5 @@
-"""The protocol registry: ONE source of truth for protocol names.
+"""The name registries: ONE source of truth for protocol, model and
+task names.
 
 Every layer that dispatches on a protocol name — the payload accounting
 in ``channel.payload``, the round bodies in ``core.protocols``, the
@@ -12,7 +13,11 @@ descriptive one in another.
 
 ``canonical_protocol`` resolves aliases and is the single gate: all
 registered spellings work everywhere, all unknown names fail everywhere
-with the same message listing the valid set.
+with the same message listing the valid set.  ``canonical_model`` /
+``canonical_task`` apply the identical contract to the model and task
+registries (construction lives in ``repro.models.registry`` and
+``repro.data.pipeline``; this module only owns the *names* so it stays
+import-light and cycle-free).
 """
 from __future__ import annotations
 
@@ -42,3 +47,53 @@ def canonical_protocol(name: str) -> str:
     raise ValueError(
         f"unknown protocol {name!r}; one of {PROTOCOLS} "
         f"(aliases: {PROTOCOL_ALIASES})")
+
+
+#: Canonical single-architecture model names.  Composite specs join
+#: these with "+" ("cnn+mlp+transformer") and are parsed by
+#: ``repro.models.registry.parse_model`` into a heterogeneous cohort
+#: assignment; this tuple only names the atoms.
+MODELS = ("cnn", "mlp", "transformer")
+
+#: Alternate spellings -> canonical model name.
+MODEL_ALIASES = {"conv": "cnn", "paper_cnn": "cnn", "tf": "transformer"}
+
+
+def canonical_model(name: str) -> str:
+    """Resolve ``name`` (canonical or alias) to its canonical
+    single-architecture model name; unknown names raise the one shared
+    ValueError listing the registered set.  Composite "+"-joined specs
+    are handled one atom at a time by ``parse_model``."""
+    if name in MODELS:
+        return name
+    alias = MODEL_ALIASES.get(name)
+    if alias is not None:
+        return alias
+    raise ValueError(
+        f"unknown model {name!r}; one of {MODELS} "
+        f"(aliases: {MODEL_ALIASES})")
+
+
+#: Canonical task names.  Each names a procedurally generated workload
+#: with a real dataset's shape/class-count/payload-width (the container
+#: is offline): 28x28x1 digits, 32x32x3 CIFAR-shaped images, and a
+#: speech-commands-shaped (frames x mels) log-mel audio task.
+TASKS = ("digits", "cifar", "speech")
+
+#: Alternate spellings -> canonical task name.
+TASK_ALIASES = {"mnist": "digits", "cifar10": "cifar",
+                "speech_commands": "speech"}
+
+
+def canonical_task(name: str) -> str:
+    """Resolve ``name`` (canonical or alias) to its canonical task name;
+    unknown names raise the one shared ValueError listing the registered
+    set."""
+    if name in TASKS:
+        return name
+    alias = TASK_ALIASES.get(name)
+    if alias is not None:
+        return alias
+    raise ValueError(
+        f"unknown task {name!r}; one of {TASKS} "
+        f"(aliases: {TASK_ALIASES})")

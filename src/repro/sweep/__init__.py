@@ -4,6 +4,6 @@ scan over rounds × [shard_map over devices]; one program per distinct
 protocol, per-config device partitions).  See docs/sweep_engine.md."""
 from .axes import (ALL_SWEEPABLE, CH_SWEEPABLE, FED_SWEEPABLE,  # noqa: F401
                    GROUP_SWEEPABLE, PART_SWEEPABLE, SweepGrid, make_grid)
-from .engine import (SweepRunner, engine_stats, run_pointwise,  # noqa: F401
-                     run_sweep)
+from .engine import (SweepRunner, engine_stats, make_task_data,  # noqa: F401
+                     run_pointwise, run_sweep)
 from .results import SweepResult  # noqa: F401

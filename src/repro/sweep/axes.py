@@ -41,6 +41,8 @@ from ..channel.payload import CODECS, parse_codec
 from ..core.protocols import FederatedConfig
 from ..core.seed_prep import seed_fields_key
 from ..data.partition import PARTITION_SCHEMES, PartitionSpec
+from ..data.pipeline import parse_task
+from ..models.registry import parse_model
 # protocol names come from the one shared registry (the same module
 # channel.payload and core.protocols validate against)
 from ..registry import PROTOCOLS, canonical_protocol
@@ -65,9 +67,13 @@ CH_SWEEPABLE = frozenset({
 # point trains on (stacked per-config, ragged n_local padded + masked).
 PART_SWEEPABLE = frozenset({"partition", "alpha", "n_local"})
 _PART_FIELD = {"partition": "scheme", "alpha": "alpha", "n_local": "n_local"}
-# Structural axes group points into stacked per-(protocol, codec-family)
-# programs; both are FederatedConfig fields, so they route like FED axes.
-GROUP_SWEEPABLE = frozenset({"protocol", "codec"})
+# Structural axes group points into stacked per-(protocol, codec family,
+# cohort size, model, task) programs; all are FederatedConfig fields, so
+# they route like FED axes.  ``model`` values may be composite
+# ("cnn+mlp+transformer"): a mixed-architecture FD cohort per point.
+# ``task`` changes input shapes and class counts, so tasked grids build
+# per-task data pools and re-derive num_classes/sample_bits per point.
+GROUP_SWEEPABLE = frozenset({"protocol", "codec", "model", "task"})
 
 ALL_SWEEPABLE = FED_SWEEPABLE | CH_SWEEPABLE | PART_SWEEPABLE | \
     GROUP_SWEEPABLE
@@ -136,21 +142,40 @@ class SweepGrid:
         return groups
 
     def program_groups(self) -> dict:
-        """{(protocol, codec family, cohort size): [point indices]} in
-        point order — the engine's compilation unit.  The codec *family*
-        is structural (it changes which transforms the round body
-        contains); its numeric parameters stay traced, so e.g. a
-        ``quant_bits`` axis batches inside one quantize program.  The
-        *cohort size* is structural too (it fixes the device-axis shape
-        of the compiled round); ``sample_ratio=1.0`` points resolve to
-        the full pool and compile graph-identical programs to the
-        unsampled step, while a ``sample_seed`` axis — same size,
-        different draws — batches inside one sampled program."""
+        """{(protocol, codec family, cohort size, model, task): [point
+        indices]} in point order — the engine's compilation unit.  The
+        codec *family* is structural (it changes which transforms the
+        round body contains); its numeric parameters stay traced, so
+        e.g. a ``quant_bits`` axis batches inside one quantize program.
+        The *cohort size* is structural too (it fixes the device-axis
+        shape of the compiled round); ``sample_ratio=1.0`` points
+        resolve to the full pool and compile graph-identical programs to
+        the unsampled step, while a ``sample_seed`` axis — same size,
+        different draws — batches inside one sampled program.  The
+        *model* (the full per-device assignment for mixed cohorts) and
+        *task* fix the parameter pytrees and input shapes, so each
+        distinct architecture/workload pair is its own program —
+        exactly like the protocol grouping."""
         groups: dict = {}
         for g, (fc, _) in enumerate(self.points):
-            key = (fc.protocol, fc.codec_spec().name, fc.cohort_size())
+            key = (fc.protocol, fc.codec_spec().name, fc.cohort_size(),
+                   fc.model_key(), fc.task)
             groups.setdefault(key, []).append(g)
         return groups
+
+    def task_groups(self) -> dict:
+        """{task name: [point indices]} in point order — the unit the
+        runner materializes one data pool (and test set) for."""
+        groups: dict = {}
+        for g, (fc, _) in enumerate(self.points):
+            groups.setdefault(fc.task, []).append(g)
+        return groups
+
+    @property
+    def tasked(self) -> bool:
+        """True iff the grid sweeps the ``task`` axis (the runner then
+        generates one procedural pool per task instead of taking data)."""
+        return any(n == "task" for n, _ in self.axes)
 
 
 def _validate_axis(name: str, values: tuple):
@@ -190,6 +215,22 @@ def _validate_axis(name: str, values: tuple):
                 raise ValueError(
                     f"partition axis value {v!r} is not a registered "
                     f"partition scheme; one of {PARTITION_SCHEMES}")
+    if name == "model":
+        for v in values:
+            try:
+                parse_model(v)
+            except ValueError as e:
+                raise ValueError(
+                    f"model axis value {v!r} is not a registered model "
+                    f"spec: {e}") from None
+    if name == "task":
+        for v in values:
+            try:
+                parse_task(v)
+            except ValueError as e:
+                raise ValueError(
+                    f"task axis value {v!r} is not a registered task: "
+                    f"{e}") from None
 
 
 def make_grid(base_fc: FederatedConfig,
@@ -213,8 +254,11 @@ def make_grid(base_fc: FederatedConfig,
     for name, values in axes.items():
         _validate_axis(name, values)
 
+    # a task axis changes input shapes and data pools, so tasked grids
+    # are always partitioned: the runner builds each task's pool and
+    # cuts it per point's PartitionSpec
     partitioned = base_part is not None or any(
-        n in PART_SWEEPABLE for n in axes)
+        n in PART_SWEEPABLE or n == "task" for n in axes)
     base_part = base_part or (PartitionSpec() if partitioned else None)
 
     items = tuple(axes.items())
@@ -228,6 +272,14 @@ def make_grid(base_fc: FederatedConfig,
                 pt_kw[_PART_FIELD[name]] = value
             else:  # FED_SWEEPABLE | GROUP_SWEEPABLE: FederatedConfig fields
                 fc_kw[name] = value
+        if "task" in fc_kw:
+            # re-derive the task-dependent fields per point (an explicit
+            # sample_bits axis still wins); num_classes follows the task
+            fc_kw["num_classes"] = None
+            fc_kw.setdefault("sample_bits", None)
+        if "model" in fc_kw:
+            # never carry a stale per-device assignment across the axis
+            fc_kw["model_partition"] = None
         points.append((dataclasses.replace(base_fc, **fc_kw),
                        dataclasses.replace(base_ch, **ch_kw)))
         parts.append(dataclasses.replace(base_part, **pt_kw)

@@ -67,7 +67,9 @@ from ..core.protocols import (FLD_FAMILY, FederatedTrainer,
                               gout_update_psum, make_grid_local_train,
                               make_grid_round_step, weighted_avg_psum)
 from ..core.seed_prep import SeedPrepMemo, prepare_seeds
+from ..data.pipeline import parse_task
 from ..launch.mesh import make_device_mesh
+from ..registry import MODELS, TASKS
 from .axes import SweepGrid
 from .results import SweepResult
 
@@ -175,6 +177,12 @@ def _resolve_partitions(grid: SweepGrid, dev_x, dev_y, num_devices: int,
     pool; classic grids share the given pre-partitioned arrays (one
     object, so downstream identity dedup and the seed-prep fingerprint
     cache both see a single partition)."""
+    if dev_x is None or dev_y is None:
+        raise ValueError(
+            "grid without a task axis takes explicit data: pass "
+            "dev_x/dev_y (and test_x/test_y), or task_data=... / "
+            "make_task_data(grid) to draw the base task's procedural "
+            "pool")
     if grid.partitioned:
         pool_x, pool_y = np.asarray(dev_x), np.asarray(dev_y)
         if pool_y.ndim != 1:
@@ -198,6 +206,76 @@ def _resolve_partitions(grid: SweepGrid, dev_x, dev_y, num_devices: int,
     return [shared] * grid.size
 
 
+def make_task_data(grid: SweepGrid, n_test: int = 200,
+                   data_seed: int = 1234) -> dict:
+    """Materialize one procedural sample pool + test set per distinct
+    task of a tasked grid: ``{task: (pool_x, pool_y, test_x, test_y)}``.
+
+    Pools are sized for the largest partition any point of the task
+    requests (``num_devices * n_local``), drawn from a per-task fold of
+    ``data_seed`` so every task's data is deterministic and independent
+    of grid layout.  Pass the result (or your own dict with the same
+    layout) to :class:`SweepRunner` / :func:`run_pointwise` as
+    ``task_data``."""
+    out = {}
+    for task, idxs in grid.task_groups().items():
+        spec = parse_task(task)
+        fc0 = grid.points[idxs[0]][0]
+        if not grid.partitioned:
+            raise ValueError("make_task_data needs a partitioned grid "
+                             "(task axes always are)")
+        n_pool = max(grid.points[g][0].num_devices * grid.parts[g].n_local
+                     for g in idxs)
+        key = jax.random.fold_in(jax.random.PRNGKey(data_seed),
+                                 TASKS.index(spec.name))
+        x, y = spec.data(key, n_pool + n_test, fc0.num_classes)
+        out[task] = (np.asarray(x[:n_pool]), np.asarray(y[:n_pool]),
+                     np.asarray(x[n_pool:]), np.asarray(y[n_pool:]))
+    return out
+
+
+def _resolve_task_partitions(grid: SweepGrid, task_data: dict):
+    """Per-point (dev_x, dev_y) pairs for a tasked grid: each distinct
+    (task, PartitionSpec) pair is built exactly once from that task's
+    pool (identity-shared arrays keep the seed-prep fingerprint cache
+    and stacking dedup effective)."""
+    missing = set(grid.task_groups()) - set(task_data)
+    if missing:
+        raise ValueError(f"task_data is missing pools for {sorted(missing)}")
+    built: dict = {}
+    parts = []
+    for (fc, _), spec in zip(grid.points, grid.parts):
+        key = (fc.task, spec)
+        if key not in built:
+            px, py = task_data[fc.task][:2]
+            built[key] = spec.build(px, py, fc.num_devices, fc.num_classes)
+        parts.append(built[key])
+    return parts
+
+
+def _group_models(model, fc):
+    """Resolve one program group's models: the caller-supplied object for
+    classic grids, else registry builds from the group's (model, task)
+    identity.  Returns ``(global_model, arch_models)`` where
+    ``arch_models`` is None for homogeneous cohorts or the ordered
+    ``[(name, device_indices, model), ...]`` groups (first group =
+    server architecture = device 0, the round-robin contract the grid
+    step relies on)."""
+    if model is not None:
+        return model, None
+    models = fc.build_models()
+    groups = fc.arch_groups()
+    gmodel = models[fc.server_model()]
+    if groups is None:
+        return gmodel, None
+    if groups[0][0] != fc.server_model():
+        raise ValueError(
+            "grid programs require device 0 to run the server "
+            f"architecture ({fc.server_model()!r}); the partition "
+            f"starts with {groups[0][0]!r}")
+    return gmodel, [(a, idx, models[a]) for a, idx in groups]
+
+
 class _ProtocolProgram:
     """One compiled program: every grid point of one protocol.  This is
     the stacking/tracing core the homogeneous runner used to be, now
@@ -206,7 +284,8 @@ class _ProtocolProgram:
 
     def __init__(self, model, grid: SweepGrid, proto: str, idxs, parts,
                  test_x, test_y, memo: SeedPrepMemo, mesh,
-                 codec: str = "identity", cohort_size: int | None = None):
+                 codec: str = "identity", cohort_size: int | None = None,
+                 arch_models: list | None = None):
         engine_stats.programs += 1
         fc0, ch0 = grid.points[idxs[0]]
         self.idxs = idxs
@@ -231,6 +310,10 @@ class _ProtocolProgram:
         # a seed key — and, across partitions, distinct points sharing
         # one partition's content — share one result object ----
         run_keys, inits, conv_keys, seed_sets = [], [], [], []
+        # mixed cohorts: per-point inits for the non-server architectures
+        # (the server architecture's group shares the global init, the
+        # same stream contract as FederatedTrainer.init_state)
+        arch_inits = {a: [] for a, _, _ in (arch_models or [])[1:]}
         plans = {"p_up": [], "p_dn": [], "up1": [], "up": [], "dn": [],
                  "up_bits1": [], "up_bits": []}
         specs = [fc.codec_spec() for fc, _ in points]
@@ -246,6 +329,9 @@ class _ProtocolProgram:
             run_keys.append(np.asarray(key))
             params = model.init(kinit)
             inits.append(params)
+            for a, _, m in (arch_models or [])[1:]:
+                arch_inits[a].append(m.init(
+                    jax.random.fold_in(kinit, MODELS.index(a) + 1)))
             n_mod = sum(p.size for p in jax.tree.leaves(params))
             if proto in FLD_FAMILY:
                 spx, spy = px, py
@@ -394,7 +480,10 @@ class _ProtocolProgram:
             dev_x=dev_x, dev_y=dev_y, test_x=jnp.asarray(test_x),
             test_y=jnp.asarray(test_y), consts=consts,
             per_config_data=per_config, codec=codec,
-            cohort_size=Dc, **fns)
+            cohort_size=Dc,
+            arch_groups=(None if arch_models is None else
+                         [(a, idx, m.apply) for a, idx, m in arch_models]),
+            **fns)
 
         def _sweep_program(state, xs):
             engine_stats.traces += 1  # Python side effect: trace-counted
@@ -402,10 +491,24 @@ class _ProtocolProgram:
 
         self._program = jax.jit(_sweep_program)
 
-        self._state0 = {
-            "dev_params": jax.tree.map(
+        if arch_models is None:
+            dev_params0 = jax.tree.map(
                 lambda p: jnp.broadcast_to(
-                    p[:, None], (G, D) + p.shape[1:]).copy(), g_params),
+                    p[:, None], (G, D) + p.shape[1:]).copy(), g_params)
+        else:
+            # per-architecture (G, Da, ...) stacks; group 0 (= device 0 =
+            # server architecture) broadcasts the global init
+            dev_params0 = {}
+            for a, idx, _ in arch_models:
+                base = (g_params if a == arch_models[0][0] else
+                        jax.tree.map(lambda *ls: jnp.stack(ls),
+                                     *arch_inits[a]))
+                dev_params0[a] = jax.tree.map(
+                    lambda p: jnp.broadcast_to(
+                        p[:, None], (G, len(idx)) + p.shape[1:]).copy(),
+                    base)
+        self._state0 = {
+            "dev_params": dev_params0,
             "g_params": g_params,
             "gout": jnp.full((G, C, C), 1.0 / C),
             "dev_gout": jnp.full((G, D, C, C), 1.0 / C),
@@ -429,32 +532,68 @@ class SweepRunner:
     partition axes) and classic single-protocol shared-partition grids
     take the same entry point — for partitioned grids pass the *flat*
     sample pool as ``dev_x``/``dev_y`` and each point's
-    :class:`PartitionSpec` splits it."""
+    :class:`PartitionSpec` splits it.
 
-    def __init__(self, model, grid: SweepGrid, dev_x, dev_y, test_x,
-                 test_y):
+    Model/task-structural grids pass ``model=None``: each program group
+    builds its architecture(s) from the model registry at the group's
+    task shape, and grids with a ``task`` axis generate per-task
+    procedural pools/test sets (``task_data``, auto-generated via
+    :func:`make_task_data` when not given) instead of taking
+    ``dev_x``/``test_x``."""
+
+    def __init__(self, model, grid: SweepGrid, dev_x=None, dev_y=None,
+                 test_x=None, test_y=None, *, task_data=None):
         fc0, ch0 = grid.points[0]
         if ch0.num_devices != fc0.num_devices:
             raise ValueError(
                 f"channel simulates {ch0.num_devices} links but the "
                 f"population has {fc0.num_devices} devices")
+        if model is not None and (
+                grid.tasked
+                or len({fc.model_key() for fc, _ in grid.points}) > 1
+                or any(fc.model_partition is not None
+                       for fc, _ in grid.points)):
+            raise ValueError(
+                "grids that sweep model/task axes (or run mixed-"
+                "architecture cohorts) build their models from the "
+                "registry; pass model=None")
         self.model = model
         self.grid = grid
         D, C = fc0.num_devices, fc0.num_classes
 
-        self.partitions = _resolve_partitions(grid, dev_x, dev_y, D, C)
+        if grid.tasked or task_data is not None:
+            if dev_x is not None or dev_y is not None or \
+                    test_x is not None or test_y is not None:
+                raise ValueError(
+                    "task-driven grids generate per-task pools and test "
+                    "sets; pass dev_x/dev_y/test_x/test_y=None (supply "
+                    "task_data=... to override the generated data)")
+            if task_data is None:
+                task_data = make_task_data(grid)
+            self.task_data = task_data
+            self.partitions = _resolve_task_partitions(grid, task_data)
+        else:
+            self.task_data = None
+            self.partitions = _resolve_partitions(grid, dev_x, dev_y, D, C)
 
         self.mesh = (make_device_mesh(D, fc0.mesh_shards or None)
                      if fc0.shard_devices else None)
 
         memo = SeedPrepMemo()
         self._programs = []          # (protocol, idxs, program)
-        for (proto, codec, csize), idxs in grid.program_groups().items():
+        for (proto, codec, csize, modelk, task), idxs in \
+                grid.program_groups().items():
+            fcg = grid.points[idxs[0]][0]
+            gmodel, arch_models = _group_models(model, fcg)
+            if self.task_data is not None:
+                gtx, gty = self.task_data[task][2:4]
+            else:
+                gtx, gty = test_x, test_y
             prog = _ProtocolProgram(
-                model, grid, proto, idxs,
+                gmodel, grid, proto, idxs,
                 [self.partitions[i] for i in idxs],
-                test_x, test_y, memo, self.mesh, codec=codec,
-                cohort_size=csize)
+                gtx, gty, memo, self.mesh, codec=codec,
+                cohort_size=csize, arch_models=arch_models)
             self._programs.append((proto, idxs, prog))
         self.programs = len(self._programs)
 
@@ -513,21 +652,32 @@ class SweepRunner:
             dp=tuple(dp))
 
 
-def run_sweep(model, grid: SweepGrid, dev_x, dev_y, test_x, test_y
-              ) -> SweepResult:
+def run_sweep(model, grid: SweepGrid, dev_x=None, dev_y=None, test_x=None,
+              test_y=None, *, task_data=None) -> SweepResult:
     """One-shot convenience: build a :class:`SweepRunner` and run it."""
-    return SweepRunner(model, grid, dev_x, dev_y, test_x, test_y).run()
+    return SweepRunner(model, grid, dev_x, dev_y, test_x, test_y,
+                       task_data=task_data).run()
 
 
-def run_pointwise(model, grid: SweepGrid, dev_x, dev_y, test_x, test_y,
-                  log=None) -> list[dict]:
+def run_pointwise(model, grid: SweepGrid, dev_x=None, dev_y=None,
+                  test_x=None, test_y=None, log=None, *,
+                  task_data=None) -> list[dict]:
     """The per-point loop the sweep replaces (and the equivalence oracle):
     one ``FederatedTrainer.run`` per grid point, re-tracing each time.
     Partitioned grids build each point's partition exactly like the
-    runner, so histories are comparable point-for-point."""
+    runner, task-driven grids draw the same per-task pools/test sets, and
+    ``model=None`` points build their (possibly mixed) architectures from
+    the registry — so histories are comparable point-for-point."""
     fc0 = grid.points[0][0]
-    parts = _resolve_partitions(grid, dev_x, dev_y, fc0.num_devices,
-                                fc0.num_classes)
-    return [FederatedTrainer(model, fc, ch).run(px, py, test_x, test_y,
-                                                log=log)
-            for (fc, ch), (px, py) in zip(grid.points, parts)]
+    if grid.tasked or task_data is not None:
+        if task_data is None:
+            task_data = make_task_data(grid)
+        parts = _resolve_task_partitions(grid, task_data)
+        tests = [task_data[fc.task][2:4] for fc, _ in grid.points]
+    else:
+        parts = _resolve_partitions(grid, dev_x, dev_y, fc0.num_devices,
+                                    fc0.num_classes)
+        tests = [(test_x, test_y)] * grid.size
+    return [FederatedTrainer(model, fc, ch).run(px, py, tx, ty, log=log)
+            for (fc, ch), (px, py), (tx, ty)
+            in zip(grid.points, parts, tests)]

@@ -65,6 +65,8 @@ class SweepResult:
                                 if self.converged[g] else None),
             "final_acc": float(self.acc[g, -1]),
             "protocol": self.grid.points[g][0].protocol,
+            "model": self.grid.points[g][0].model_key(),
+            "task": self.grid.points[g][0].task,
         }
         if self.dp is not None and self.dp[g] is not None:
             h["dp"] = self.dp[g]  # the loop path's history["dp"] ledger

@@ -209,7 +209,7 @@ def test_ratio_one_sweep_is_bit_identical_to_unsampled(data):
     g1 = make_grid(_base(sample_ratio=1.0, sample_seed=123), CH,
                    eta=(0.01, 0.02))
     assert list(g0.program_groups()) == list(g1.program_groups()) \
-        == [("mix2fld", "identity", 4)]
+        == [("mix2fld", "identity", 4, "cnn", "digits")]
     r0 = run_sweep(CNN(), g0, dev_x, dev_y, tx, ty)
     r1 = run_sweep(CNN(), g1, dev_x, dev_y, tx, ty)
     assert np.array_equal(r0.acc, r1.acc)
@@ -244,7 +244,7 @@ def test_sample_seed_axis_batches_in_one_program(data):
                      sample_seed=(0, 7))
     runner = SweepRunner(CNN(), grid, dev_x, dev_y, tx, ty)
     assert runner.programs == 1
-    assert list(grid.program_groups()) == [("fd", "identity", 2)]
+    assert list(grid.program_groups()) == [("fd", "identity", 2, "cnn", "digits")]
     res = runner.run()
     _assert_equivalent(res, run_pointwise(CNN(), grid, dev_x, dev_y,
                                           tx, ty))
@@ -417,7 +417,7 @@ def test_pool_scale_sampled_sweep_10k_devices():
                          sample_ratio=0.5, seed=0)
     ch = ChannelConfig(num_devices=D, p_up_dbm=40.0)
     grid = make_grid(fc, ch, eta=(0.01,))
-    assert list(grid.program_groups()) == [("fd", "dp_gaussian", 5000)]
+    assert list(grid.program_groups()) == [("fd", "dp_gaussian", 5000, "cnn", "digits")]
     res = SweepRunner(_TinyNet(), grid, dev_x, dev_y, tx, ty).run()
     (h,) = run_pointwise(_TinyNet(), grid, dev_x, dev_y, tx, ty)
     _assert_equivalent(res, [h])

@@ -16,7 +16,7 @@ from repro.data import PartitionSpec, partition_iid, synthetic_images
 from repro.models.cnn import CNN
 from repro.sweep import (CH_SWEEPABLE, FED_SWEEPABLE, PART_SWEEPABLE,
                          SweepRunner, engine_stats, make_grid,
-                         run_pointwise, run_sweep)
+                         make_task_data, run_pointwise, run_sweep)
 
 CH = ChannelConfig(num_devices=4, p_up_dbm=40.0)
 
@@ -475,3 +475,104 @@ def test_result_frames_and_payload(data):
     payload = res.to_payload()
     import json
     assert json.loads(json.dumps(payload))["grid_shape"] == [2]
+
+
+# ---------------------------------------------------------------------------
+# Model/task axes: registry-built per-group programs, per-task data pools,
+# and mixed-architecture FD cohorts
+# ---------------------------------------------------------------------------
+
+def test_model_task_axes_match_loop_per_group():
+    """protocol x model x task grid: exactly one compiled program per
+    structural (protocol, codec, cohort, model, task) group, every point
+    equivalent to its per-point loop run (registry-built models,
+    per-task procedural pools/test sets)."""
+    grid = make_grid(_het_base(), CH, HET_PART,
+                     protocol=("fd", "mix2fld"),
+                     model=("cnn", "mlp"),
+                     task=("digits", "speech"))
+    assert grid.tasked and grid.partitioned and grid.size == 8
+    engine_stats.reset()
+    runner = SweepRunner(None, grid)
+    assert runner.programs == len(grid.program_groups()) == 8
+    res = runner.run()
+    res2 = runner.run()  # warm: no re-trace
+    assert engine_stats.traces == 8
+    np.testing.assert_array_equal(res.acc, res2.acc)
+    _assert_equivalent(res, run_pointwise(None, grid,
+                                          task_data=runner.task_data))
+    rows = res.frames()
+    assert {r["model"] for r in rows} == {"cnn", "mlp"}
+    assert {r["task"] for r in rows} == {"digits", "speech"}
+
+
+def test_model_axis_sharded_matches_loop():
+    """A homogeneous model axis under ``shard_devices`` (per-group
+    registry models on the "data" mesh)."""
+    grid = make_grid(_het_base(shard_devices=True), CH, HET_PART,
+                     model=("cnn", "mlp"))
+    td = make_task_data(grid)
+    runner = SweepRunner(None, grid, task_data=td)
+    assert runner.mesh is not None and runner.programs == 2
+    res = runner.run()
+    _assert_equivalent(res, run_pointwise(None, grid, task_data=td))
+
+
+def test_mixed_architecture_cohort_matches_loop():
+    """The workload FL structurally cannot express: a
+    {cnn, mlp, transformer} FD cohort runs as ONE compiled program per
+    group and matches the loop path bitwise-or-1e-6; the fl protocol
+    refuses mixed cohorts with a clear error."""
+    grid = make_grid(_het_base(protocol="fd"), CH, HET_PART,
+                     model=("cnn", "cnn+mlp+transformer"))
+    td = make_task_data(grid)
+    runner = SweepRunner(None, grid, task_data=td)
+    assert runner.programs == 2
+    res = runner.run()
+    _assert_equivalent(res, run_pointwise(None, grid, task_data=td))
+    assert res.history(0)["model"] == "cnn"
+    assert res.history(1)["model"] == "cnn+mlp+transformer"
+    # the per-arch output tables genuinely differ from the cnn-only run
+    assert not np.allclose(res.loss[0], res.loss[1])
+    with pytest.raises(ValueError, match="cannot mix architectures"):
+        _het_base(protocol="fl", model="cnn+mlp")
+
+
+def test_cnn_digits_sweep_stays_golden(data):
+    """The pre-refactor gate: the default model="cnn", task="digits"
+    grid over all five protocols must reproduce the recorded golden
+    histories — and the registry-built program (model=None) must be
+    bit-identical to the explicit ``CNN()`` one."""
+    from test_protocols import GOLDEN
+    dev_x, dev_y, tx, ty = data
+    grid = make_grid(_base(), CH, protocol=PROTOCOLS)
+    res = run_sweep(None, grid, dev_x, dev_y, tx, ty)
+    res_explicit = run_sweep(CNN(), grid, dev_x, dev_y, tx, ty)
+    np.testing.assert_array_equal(res.acc, res_explicit.acc)
+    np.testing.assert_array_equal(res.loss, res_explicit.loss)
+    for g, (fc, _) in enumerate(grid.points):
+        want = GOLDEN[fc.protocol]
+        h = res.history(g)
+        np.testing.assert_allclose(h["acc"], want["acc"], atol=1e-4,
+                                   err_msg=fc.protocol)
+        np.testing.assert_allclose(h["loss"], want["loss"], atol=1e-4,
+                                   err_msg=fc.protocol)
+        np.testing.assert_allclose(h["round_latency_s"],
+                                   want["latency_s"], rtol=1e-6)
+        assert h["model"] == "cnn" and h["task"] == "digits"
+
+
+def test_model_task_axes_validate(pool):
+    px, py, tx, ty = pool
+    with pytest.raises(ValueError, match="unknown model"):
+        make_grid(_het_base(), CH, model=("cnn", "resnet"))
+    with pytest.raises(ValueError, match="unknown task"):
+        make_grid(_het_base(), CH, task=("digits", "imagenet"))
+    # model/task-structural grids build from the registry
+    grid = make_grid(_het_base(), CH, HET_PART, model=("cnn", "mlp"))
+    with pytest.raises(ValueError, match="pass model=None"):
+        SweepRunner(CNN(), grid, px, py, tx, ty)
+    # tasked grids generate their own pools/test sets
+    tgrid = make_grid(_het_base(), CH, task=("digits", "cifar"))
+    with pytest.raises(ValueError, match="per-task"):
+        SweepRunner(None, tgrid, px, py, tx, ty)
