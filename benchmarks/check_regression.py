@@ -17,6 +17,8 @@ Gate modes:
   below 1 absorbs machine-to-machine noise, the speedup itself is a
   wall-clock *ratio* so host speed largely cancels);
 * ``max_value`` — fresh <= absolute limit (numeric equivalence drift);
+* ``min_value`` — fresh >= absolute floor (same-host wall-time ratios
+  with a hard acceptance bar, e.g. the async-round overlap speedup);
 * ``not_above_baseline`` — fresh <= baseline (counters that must never
   grow, e.g. memoized prep runs);
 * ``min_delta`` — fresh >= baseline - tol (floors for metrics that can
@@ -88,6 +90,20 @@ GATES = [
      "mode": "min_delta", "tol": 0.05, "match": ("n_samples", "quick")},
     {"file": "privacy_tables", "metric": "tab3_mean",
      "mode": "min_delta", "tol": 0.05, "match": ("n_samples", "quick")},
+    # async round pipeline: dispatch order must never change a bit (the
+    # double-buffered path's draws are pure functions of (plan, key)) ...
+    {"file": "pipeline", "metric": "serial_max_dev",
+     "mode": "max_value", "limit": 0.0, "match": ()},
+    # ... the depth-2 schedule must keep exposing its overlap headroom
+    # (measured same-host component-time ratio, so machine speed
+    # cancels; regime tuned to ~1.6x, the floor catches a draw that
+    # re-serialized) ...
+    {"file": "pipeline", "metric": "overlap_speedup",
+     "mode": "min_value", "floor": 1.2, "match": ()},
+    # ... and the 2-D (grid x device) mesh sweep must still compile one
+    # program per structural group
+    {"file": "pipeline", "metric": "programs_per_group",
+     "mode": "max_value", "limit": 1.0, "match": ()},
     # heterogeneous model x task grid: the engine must build exactly one
     # program per structural (protocol, codec, cohort, model, task)
     # group — a second build per group means the grouping key broke
@@ -159,6 +175,9 @@ def check_gate(gate: dict, fresh: dict, base: dict) -> tuple[bool, str]:
     if mode == "max_value":
         ok = fv is not None and fv <= gate["limit"]
         return ok, f"{metric}={fv!r} (limit {gate['limit']:g})"
+    if mode == "min_value":
+        ok = fv is not None and fv >= gate["floor"]
+        return ok, f"{metric}={fv!r} (floor {gate['floor']:g})"
     bv = base.get(metric)
     if fv is None or bv is None:
         return False, f"{metric} missing (fresh={fv!r}, baseline={bv!r})"
@@ -192,7 +211,7 @@ def run_checks(results_dir: str = RESULTS, baseline_dir: str | None = None,
                   f"(did the benchmark step run?)")
             failures += 1
             continue
-        if gate["mode"] == "max_value":
+        if gate["mode"] in ("max_value", "min_value"):
             # absolute gates need no baseline — never skippable
             ok, msg = check_gate(gate, fresh, base or {})
             print(f"{'ok   ' if ok else 'FAIL '} {tag}: {msg}")

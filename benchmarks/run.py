@@ -21,9 +21,9 @@ import traceback
 
 def main(argv=None) -> None:
     from . import (bench_kernels, bench_models, bench_payload,
-                   bench_privacy, bench_protocols, bench_roofline,
-                   bench_sampling, bench_scalability, bench_seed_sweep,
-                   bench_service)
+                   bench_pipeline, bench_privacy, bench_protocols,
+                   bench_roofline, bench_sampling, bench_scalability,
+                   bench_seed_sweep, bench_service)
 
     modules = [
         ("payload", bench_payload),      # Sec. II-C / IV payload ratios
@@ -35,6 +35,7 @@ def main(argv=None) -> None:
         ("scalability", bench_scalability),  # Fig. 3 (quick)
         ("sampling", bench_sampling),    # rounds/s vs sample_ratio
         ("service", bench_service),      # ckpt overhead + resume fidelity
+        ("pipeline", bench_pipeline),    # async rounds + 2-D mesh sweep
         ("models", bench_models),        # heterogeneous model x task grid
     ]
     args = list(sys.argv[1:] if argv is None else argv)

@@ -133,6 +133,33 @@ def parse_codec(spec, *, quant_bits: int = 8, dp_sigma: float = 1.0,
                      dp_clip=dp_clip, dp_delta=dp_delta)
 
 
+@dataclasses.dataclass(frozen=True)
+class LinkConfig:
+    """The link-codec half of a federated config, as a typed sub-config.
+
+    ``FederatedConfig.channel`` groups what used to be five flat fields
+    (``codec``/``quant_bits``/``dp_sigma``/``dp_clip``/``dp_delta``);
+    validation happens once here through :func:`parse_codec` (a bad spec
+    raises at construction, not first use).  Distinct from
+    ``repro.channel.ChannelConfig`` — that is the *physical* channel
+    (SNR, slots); this is what the payload carries over it."""
+    codec: str = "identity"
+    quant_bits: int = 8
+    dp_sigma: float = 1.0
+    dp_clip: float = 1.0
+    dp_delta: float = 1e-5
+
+    def __post_init__(self):
+        self.spec()  # one validation site: parse eagerly, raise early
+
+    def spec(self) -> CodecSpec:
+        """The resolved :class:`CodecSpec` (parameterized strings like
+        ``"quantize4"`` override the field defaults)."""
+        return parse_codec(self.codec, quant_bits=self.quant_bits,
+                           dp_sigma=self.dp_sigma, dp_clip=self.dp_clip,
+                           dp_delta=self.dp_delta)
+
+
 # ---------------------------------------------------------------------------
 # Traced codec transforms (the encode/decode halves the pipeline stages
 # compose; numeric parameters may be traced per-config scalars)

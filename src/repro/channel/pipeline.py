@@ -101,33 +101,51 @@ class LinkPlan:
     def uplink_bits(self, first_round: bool) -> float:
         return self.up_bits_first if first_round else self.up_bits
 
-    def draw(self, key, first_round: bool) -> dict:
-        """One round's channel outcome (loop path): per-device success
-        masks + the round latency as a host float.
+    def dispatch(self, key, first_round: bool) -> dict:
+        """Launch one round's channel (+ straggler) draw WITHOUT
+        blocking: the device computations are dispatched and their
+        un-synchronized array handles returned for a later
+        :meth:`collect`.
 
-        With the straggler stage enabled (``compute_mean_s > 0``), each
-        device first draws a local compute time; devices past the
-        deadline are AND-masked out of ``up_ok`` (the server treats a
-        late report exactly like an undecodable one) and the round
-        latency extends by the slowest *finishing* device's compute
-        time.  The stage keys off ``fold_in(key, 7)``, so the channel
-        draw below consumes the PRNG identically whether or not
-        stragglers are simulated — disabled configs reproduce the
-        pre-straggler histories bit-for-bit.
+        This is the double-buffering seam: a link outcome is a pure
+        function of ``(plan, key)`` — never of training state — so
+        round ``p``'s draw can go on the wire while round ``p-1``'s
+        local SGD is still running, and :meth:`collect` later blocks on
+        arrays that by then are usually done.  Dispatch order (channel
+        stage, then the ``fold_in(key, 7)`` straggler stage) is exactly
+        :meth:`draw`'s, so serial and overlapped schedules consume the
+        PRNG identically — the bitwise-equivalence contract the
+        ``serial_max_dev == 0`` gate locks down.
         """
         out = channel_stage(
             key, self.p_up,
             self.up_slots_first if first_round else self.up_slots,
             self.p_dn, self.dn_slots, self.n_links, self.t_max_slots,
             self.tau_s)
+        pending = {"out": out, "comp": None}
+        if self.compute_mean_s > 0.0:
+            pending["comp"] = compute_outcomes(
+                jax.random.fold_in(key, 7), self.compute_mean_s,
+                self.deadline_s, self.n_links)
+        return pending
+
+    def collect(self, pending: dict) -> dict:
+        """Block on a :meth:`dispatch` handle and assemble the round's
+        host-side link outcome (the ``np.asarray`` conversions are the
+        synchronization points).
+
+        With the straggler stage enabled, late devices are AND-masked
+        out of ``up_ok`` (the server treats a late report exactly like
+        an undecodable one) and the round latency extends by the
+        slowest *finishing* device's compute time.
+        """
+        out = pending["out"]
         up_ok = np.asarray(out["up_ok"])
         latency_s = float(out["latency_s"])
         result = {"up_ok": up_ok, "dn_ok": np.asarray(out["dn_ok"]),
                   "t_up": out["t_up"], "t_dn": out["t_dn"]}
-        if self.compute_mean_s > 0.0:
-            t_comp, comp_ok = compute_outcomes(
-                jax.random.fold_in(key, 7), self.compute_mean_s,
-                self.deadline_s, self.n_links)
+        if pending["comp"] is not None:
+            t_comp, comp_ok = pending["comp"]
             comp_ok = np.asarray(comp_ok)
             result["up_ok"] = up_ok & comp_ok
             result["comp_ok"] = comp_ok
@@ -138,6 +156,12 @@ class LinkPlan:
                                                self.deadline_s))
         result["latency_s"] = latency_s
         return result
+
+    def draw(self, key, first_round: bool) -> dict:
+        """One round's channel outcome (strict-serial path): dispatch
+        and immediately collect.  The async round program overlaps the
+        two halves instead; this composition is its bitwise oracle."""
+        return self.collect(self.dispatch(key, first_round))
 
 
 # ---------------------------------------------------------------------------

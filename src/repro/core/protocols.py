@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Optional
 
 import jax
@@ -44,7 +45,7 @@ except ImportError:
     from jax.experimental.shard_map import shard_map
 
 from ..channel import ChannelConfig
-from ..channel.payload import CodecSpec, parse_codec
+from ..channel.payload import CodecSpec, LinkConfig, parse_codec
 from ..channel.pipeline import (LinkPlan, channel_stage, downlink_gout,
                                 downlink_params, make_uplink_stage,
                                 uplink_stage)
@@ -60,7 +61,9 @@ from .conversion import output_to_model, output_to_model_steps
 from .losses import fd_loss
 from .outputs import label_averaged_outputs
 from .privacy import GaussianAccountant
-from .sampling import SamplerConfig
+from .program import LoopRoundProgram, ProgramOptions
+from .sampling import ChurnConfig, SamplerConfig
+from .state import RoundState
 from .seed_prep import (collect_seeds, prepare_seeds,  # noqa: F401
                         summarize_seeds)
 
@@ -120,6 +123,75 @@ class FederatedConfig:
     #                                architecture names (len num_devices);
     #                                None: derived from a composite
     #                                ``model`` by cycling its parts
+    # -- typed sub-configs (the canonical surface; the flat fields above
+    #    are deprecated aliases kept for one release — see _sync_sub) --
+    sampler: Optional[SamplerConfig] = None  # client sampling; None:
+    #                                built from the sample_* aliases
+    churn: Optional[ChurnConfig] = None  # device churn (read by
+    #                                launch.service); None: no churn
+    channel: Optional[LinkConfig] = None  # link codec; None: built from
+    #                                the codec/quant/dp_* aliases.  (The
+    #                                *physical* channel stays a separate
+    #                                ChannelConfig argument.)
+
+    #: flat alias -> sub-config attribute, per sub-config field.  The
+    #: sub-config class defaults double as the flat-field defaults, so
+    #: "was this flat alias set?" never needs a second defaults table.
+    _SUB_ALIASES = {
+        "sampler": (SamplerConfig, {"sample_ratio": "sample_ratio",
+                                    "sample_seed": "seed",
+                                    "sample_min_active": "min_active"}),
+        "channel": (LinkConfig, {"codec": "codec",
+                                 "quant_bits": "quant_bits",
+                                 "dp_sigma": "dp_sigma",
+                                 "dp_clip": "dp_clip",
+                                 "dp_delta": "dp_delta"}),
+    }
+
+    def _sync_sub(self, attr: str) -> None:
+        """Reconcile one typed sub-config with its flat aliases.
+
+        Resolution order (one constructor path for old and new callers):
+
+        * sub-config absent, aliases at defaults — build the default sub;
+        * sub-config absent, aliases set — the legacy kwargs path: build
+          the sub from the aliases and emit a DeprecationWarning;
+        * sub-config present, aliases at defaults — canonical path; the
+          aliases are synced *from* the sub so legacy readers
+          (``seed_fields_key``'s getattr, sweep axis validation, tests)
+          keep seeing live values;
+        * both set and disagreeing — the flat aliases win and the sub is
+          rebuilt.  This keeps ``dataclasses.replace(fc, sample_ratio=q)``
+          (the sweep-axis mutation surface) working on configs that
+          already carry sub-configs: replace hands the old sub plus the
+          new flat value, and the flat edit must take effect.  Known
+          limit: replace() on an alias-set config can't also swap that
+          group's sub-config wholesale — set the aliases instead until
+          they are removed.
+
+        Validation itself lives in the sub-config ``__post_init__``s —
+        the one site either path funnels through.
+        """
+        cls, aliases = self._SUB_ALIASES[attr]
+        defaults = cls()
+        sub = getattr(self, attr)
+        flats = {f: getattr(self, f) for f in aliases}
+        flats_set = any(flats[f] != getattr(defaults, aliases[f])
+                        for f in aliases)
+        if sub is None:
+            if flats_set:
+                warnings.warn(
+                    f"flat FederatedConfig fields "
+                    f"{sorted(f for f in aliases if flats[f] != getattr(defaults, aliases[f]))} "
+                    f"are deprecated; pass {attr}={cls.__name__}(...) "
+                    f"instead", DeprecationWarning, stacklevel=4)
+            sub = cls(**{aliases[f]: flats[f] for f in aliases})
+        elif flats_set and \
+                any(flats[f] != getattr(sub, aliases[f]) for f in aliases):
+            sub = cls(**{aliases[f]: flats[f] for f in aliases})
+        object.__setattr__(self, attr, sub)
+        for f in aliases:  # aliases mirror the sub-config, always
+            object.__setattr__(self, f, getattr(sub, aliases[f]))
 
     def __post_init__(self):
         # data-dependent bounds (n_seed vs the per-device sample count)
@@ -130,6 +202,14 @@ class FederatedConfig:
             self.num_classes = self.task_spec().num_classes
         if self.sample_bits is None:
             self.sample_bits = self.task_spec().sample_bits
+        # typed sub-configs reconcile (and validate) before any check
+        # below reads a sampling/codec value through either surface
+        self._sync_sub("sampler")
+        self._sync_sub("channel")
+        if self.churn is not None and not isinstance(self.churn,
+                                                     ChurnConfig):
+            raise TypeError(f"churn must be a ChurnConfig, "
+                            f"got {type(self.churn).__name__}")
         mspec = parse_model(self.model)
         self.model = mspec.name
         if self.model_partition is None:
@@ -166,8 +246,6 @@ class FederatedConfig:
                     f"participation (sample_ratio=1.0, got "
                     f"{self.sample_ratio}): a sampled cohort would need "
                     "ragged per-architecture gathers")
-        self.codec_spec()  # codec fields fail at config time, not round 1
-        self.sampler()     # sampling fields too
         if self.n_seed < 1:
             raise ValueError(f"n_seed must be >= 1, got {self.n_seed}")
         if self.n_inverse < 1:
@@ -177,25 +255,16 @@ class FederatedConfig:
                              f"got {self.lam}")
 
     def codec_spec(self) -> CodecSpec:
-        """The resolved link codec (``codec`` spec string + the numeric
-        parameter fields; a parameterized spec like ``"quantize4"``
-        overrides the matching field)."""
-        return parse_codec(self.codec, quant_bits=self.quant_bits,
-                           dp_sigma=self.dp_sigma, dp_clip=self.dp_clip,
-                           dp_delta=self.dp_delta)
-
-    def sampler(self) -> SamplerConfig:
-        """The per-round client sampler (``sample_*`` fields resolved)."""
-        return SamplerConfig(sample_ratio=self.sample_ratio,
-                             min_active=self.sample_min_active,
-                             seed=self.sample_seed)
+        """The resolved link codec — ``fc.channel``'s spec (the flat
+        ``codec``/``quant_bits``/``dp_*`` aliases mirror its fields)."""
+        return self.channel.spec()
 
     def cohort_size(self, pool_size: Optional[int] = None) -> int:
         """Devices training per round — ``num_devices`` unless sampling
         shrinks it.  This is the static shape every compiled round path
         sizes its device axis (and mesh, and link plan) by."""
         pool = self.num_devices if pool_size is None else pool_size
-        return self.sampler().cohort_size(pool)
+        return self.sampler.cohort_size(pool)
 
     def task_spec(self) -> TaskSpec:
         """The resolved task (shape / class count / payload width)."""
@@ -475,8 +544,8 @@ class FederatedTrainer:
         return collect_seeds(self.fc, dev_x, dev_y, key)
 
     # ------------------------------------------------------------------
-    def init_state(self, num_devices: Optional[int] = None) -> dict:
-        """Fresh resumable round-loop state (see :meth:`round_once`).
+    def init_state(self, num_devices: Optional[int] = None) -> RoundState:
+        """Fresh resumable :class:`RoundState` (see :meth:`round_once`).
 
         ``num_devices`` sizes the device-axis state for a churned cohort
         pool larger (or smaller) than ``fc.num_devices``; the default
@@ -512,10 +581,9 @@ class FederatedTrainer:
         # per-device view of gout: a device only refreshes its copy when
         # its downlink succeeds (failed links keep the previous table)
         dev_gout = jnp.broadcast_to(gout, (D, C, C))
-        return {"round": 0, "key": key, "g_params": g_params,
-                "dev_params": dev_params, "gout": gout,
-                "dev_gout": dev_gout, "prev": None,
-                "converged_round": None, "seeds": None, "cum_time_s": 0.0}
+        return RoundState(round=0, key=key, g_params=g_params,
+                          dev_params=dev_params, gout=gout,
+                          dev_gout=dev_gout)
 
     def link_plan(self, g_params, n_links: Optional[int] = None) -> LinkPlan:
         """The codec-aware link plan for an ``n_links``-device cohort,
@@ -535,17 +603,27 @@ class FederatedTrainer:
         return plan
 
     def round_once(self, state, dev_x, dev_y, test_x, test_y, *,
-                   plan: Optional[LinkPlan] = None, log=None):
+                   plan: Optional[LinkPlan] = None, log=None,
+                   _pending_link=None):
         """One federated round — ``run``'s round body as a resumable
         step.  Returns ``(new_state, record)``.
 
-        ``state`` is :meth:`init_state`'s dict (or the previous round's
-        output); the round number and every PRNG draw derive from it, so
-        a state rebuilt from a checkpoint continues the exact stream an
-        uninterrupted loop would have produced.  ``dev_x``/``dev_y`` are
-        the *device pool*'s shards ``(D_pool, n_local, ...)`` — the
-        device-axis state in ``state`` must match, which is how the
-        serving driver runs churned cohorts through the same step.
+        ``state`` is :meth:`init_state`'s :class:`RoundState` (or the
+        previous round's output; a legacy mapping coerces); the round
+        number and every PRNG draw derive from it, so a state rebuilt
+        from a checkpoint continues the exact stream an uninterrupted
+        loop would have produced.  ``dev_x``/``dev_y`` are the *device
+        pool*'s shards ``(D_pool, n_local, ...)`` — the device-axis
+        state in ``state`` must match, which is how the serving driver
+        runs churned cohorts through the same step.
+
+        ``_pending_link`` is the double-buffering seam (private — the
+        :class:`~repro.core.program.LoopRoundProgram` is the caller): a
+        ``plan.dispatch`` handle for THIS round's key, collected where
+        the serial path would draw.  A handle dispatched against a plan
+        this round rebuilds (cohort-size change) is discarded — link
+        draws are pure functions of ``(plan, key)``, so dropping one
+        costs only its wasted dispatch.
 
         With ``fc.sample_ratio < 1`` the round trains only the seeded
         cohort of :meth:`FederatedConfig.cohort_size` devices
@@ -559,20 +637,21 @@ class FederatedTrainer:
         """
         fc = self.fc
         proto = fc.protocol
+        state = RoundState.from_mapping(state)
         dev_x = jnp.asarray(dev_x)
         dev_y = jnp.asarray(dev_y)
         D_pool = dev_x.shape[0]
-        p = state["round"] + 1
+        p = state.round + 1
 
         t0 = time.perf_counter()
-        kr = jax.random.fold_in(state["key"], p)
+        kr = jax.random.fold_in(state.key, p)
         use_kd = proto != "fl" and p > 1  # KD once G_out exists
-        dev_params, g_params = state["dev_params"], state["g_params"]
-        gout, dev_gout = state["gout"], state["dev_gout"]
-        seeds = state["seeds"]
+        dev_params, g_params = state.dev_params, state.g_params
+        gout, dev_gout = state.gout, state.dev_gout
+        seeds = state.seeds
 
         # ---- client sampling: gather the round's cohort off the pool ----
-        sampler = fc.sampler()
+        sampler = fc.sampler
         D = sampler.cohort_size(D_pool)
         cohort = None
         pool_params = pool_gout = None
@@ -584,9 +663,11 @@ class FederatedTrainer:
             dev_gout = dev_gout[jdx]
             dev_x, dev_y = dev_x[jdx], dev_y[jdx]
         # a caller-supplied plan sized for a different cohort (churn on
-        # top of sampling) is rebuilt for this round's link count
+        # top of sampling) is rebuilt for this round's link count — and
+        # any prefetched draw against the old plan with it
         if plan is None or plan.n_links != D:
-            plan = self.link_plan(state["g_params"], n_links=D)
+            plan = self.link_plan(state.g_params, n_links=D)
+            _pending_link = None
 
         # ---- local updates (eq. 1 / 3) ----
         dkeys = jax.random.split(jax.random.fold_in(kr, 1), D)
@@ -623,7 +704,13 @@ class FederatedTrainer:
                                        jax.random.fold_in(kr, 2))
 
         # ---- link pipeline: encode -> channel -> decode ----
-        link = plan.draw(jax.random.fold_in(kr, 3), first_round=p == 1)
+        # (collect the prefetched draw when the async program dispatched
+        # one — same key, same plan, so bitwise the same outcome)
+        if _pending_link is not None:
+            link = plan.collect(_pending_link)
+        else:
+            link = plan.draw(jax.random.fold_in(kr, 3),
+                             first_round=p == 1)
         up_ok = link["up_ok"]
         dn_ok = link["dn_ok"]
         w = up_ok.astype(np.float32) * dev_x.shape[1]  # |S_d| weights
@@ -680,7 +767,7 @@ class FederatedTrainer:
             dev_gout = pool_gout.at[jdx].set(dev_gout)
 
         compute_s = time.perf_counter() - t0
-        cum_time = state["cum_time_s"] + compute_s + link["latency_s"]
+        cum_time = state.cum_time_s + compute_s + link["latency_s"]
 
         # ---- evaluation of the round's reference device: pool device 0
         # at full participation, else the cohort's first device — it
@@ -712,10 +799,10 @@ class FederatedTrainer:
         else:
             flat = jnp.concatenate([jnp.ravel(x) for x in
                                     jax.tree.leaves(g_params)])
-        converged_round = state["converged_round"]
-        if state["prev"] is not None:
-            rel = float(jnp.linalg.norm(flat - state["prev"]) /
-                        jnp.maximum(jnp.linalg.norm(state["prev"]), 1e-12))
+        converged_round = state.converged_round
+        if state.prev is not None:
+            rel = float(jnp.linalg.norm(flat - state.prev) /
+                        jnp.maximum(jnp.linalg.norm(state.prev), 1e-12))
             # a total-outage round leaves the global state untouched, so
             # rel == 0 means "nothing arrived", not convergence: the
             # check only counts when at least one uplink decoded (the
@@ -724,11 +811,11 @@ class FederatedTrainer:
                     bool(up_ok.any()):
                 converged_round = p
 
-        new_state = {"round": p, "key": state["key"], "g_params": g_params,
-                     "dev_params": dev_params, "gout": gout,
-                     "dev_gout": dev_gout, "prev": flat,
-                     "converged_round": converged_round, "seeds": seeds,
-                     "cum_time_s": cum_time}
+        new_state = RoundState(round=p, key=state.key, g_params=g_params,
+                               dev_params=dev_params, gout=gout,
+                               dev_gout=dev_gout, prev=flat,
+                               converged_round=converged_round,
+                               seeds=seeds, cum_time_s=cum_time)
         record = {"round": p, "acc": acc, "loss": float(mloss.mean()),
                   "round_latency_s": link["latency_s"],
                   "compute_s": compute_s, "cum_time_s": cum_time,
@@ -740,13 +827,17 @@ class FederatedTrainer:
         return new_state, record
 
     # ------------------------------------------------------------------
-    def run(self, dev_x, dev_y, test_x, test_y, log=None):
+    def run(self, dev_x, dev_y, test_x, test_y, log=None,
+            options: Optional[ProgramOptions] = None):
         """Full protocol run. Returns history dict (per-round accuracy,
         losses, latency, cumulative wall-clock convergence time).
 
-        A thin driver over :meth:`init_state` + :meth:`round_once` —
-        the serving loop (``launch.service``) drives the same step with
-        churned cohorts and checkpoints between rounds.
+        A thin driver over a :class:`LoopRoundProgram` — the serving
+        loop (``launch.service``) drives the same program with churned
+        cohorts and checkpoints between rounds.  ``options`` selects
+        mesh shape / pipelining depth; the default is the strict-serial
+        depth-1 program (every depth is bitwise-identical — see
+        ``core.program``).
         """
         fc = self.fc
         spec = self._codec
@@ -773,9 +864,11 @@ class FederatedTrainer:
 
         dev_x = jnp.asarray(dev_x)
         dev_y = jnp.asarray(dev_y)
+        program = LoopRoundProgram(self, options).bind(
+            dev_x=dev_x, dev_y=dev_y, test_x=test_x, test_y=test_y,
+            plan=plan, log=log)
         for _ in range(fc.max_rounds):
-            state, rec = self.round_once(state, dev_x, dev_y, test_x,
-                                         test_y, plan=plan, log=log)
+            state, rec = program.step(state)
             if acct is not None:
                 # a device spends privacy budget only on rounds it
                 # released a (noised) payload — i.e. its cohort rounds
@@ -784,7 +877,8 @@ class FederatedTrainer:
             for k in ("acc", "loss", "round_latency_s", "compute_s",
                       "cum_time_s", "uplink_ok"):
                 history[k].append(rec[k])
-        history["converged_round"] = state["converged_round"]
+        history["pipeline"] = program.finalize()
+        history["converged_round"] = state.converged_round
 
         # histories carry lightweight seed metadata, not device arrays —
         # serialized results stay small; opt back into the raw arrays
@@ -851,9 +945,12 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
     (``jax.random.split`` is not prefix-stable, so ragged per-config
     ``s_iters`` can't split in-graph and stay equal to the loop path).
 
-    State: ``dev_params`` (G, D, ...), ``g_params`` (G, ...), ``gout``
-    (G, C, C), ``dev_gout`` (G, D, C, C), ``prev`` (G, P) flattened
-    convergence reference, ``converged`` (G,) int32 (0 = not yet).
+    State: a grid-layout :class:`RoundState` carry — ``dev_params``
+    (G, D, ...), ``g_params`` (G, ...), ``gout`` (G, C, C), ``dev_gout``
+    (G, D, C, C), ``prev`` (G, P) flattened convergence reference,
+    ``converged_round`` (G,) int32 (0 = not yet); the loop path's host
+    fields (``round``/``key``/``seeds``/``cum_time_s``) ride as None so
+    the scan carry structure is stable.
 
     ``local_train_fn``/``weighted_avg_fn``/``gout_update_fn`` default to
     the vmapped single-chip forms; the sweep engine substitutes
@@ -958,7 +1055,7 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
 
         # ---- client sampling: gather the round's cohort (G, Dc, ...)
         # off the (G, D, ...) pool carry ----
-        pool_params, pool_gout = state["dev_params"], state["dev_gout"]
+        pool_params, pool_gout = state.dev_params, state.dev_gout
         if sampled:
             chrt = xs["cohort"]                          # (G, Dc) int32
             take = jax.vmap(lambda a, i: a[i])
@@ -1025,11 +1122,11 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
             kc = jax.vmap(lambda k: jax.random.fold_in(k, 5))(kr)
             dev_params_rx, favg_rx = codec_fn(
                 dev_params, favg, kc, dev_gout,
-                state["g_params"], consts["q_levels"],
+                state.g_params, consts["q_levels"],
                 consts["dp_sigma"], consts["dp_clip"])
 
         # ---- aggregation + (FLD) conversion, success-gated by where ----
-        g_params, gout = state["g_params"], state["gout"]
+        g_params, gout = state.g_params, state.gout
         if proto == "fl":
             new_g = weighted_avg_fn(dev_params_rx, w)
             g_params = jax.tree.map(
@@ -1091,20 +1188,20 @@ def make_grid_round_step(model_apply, *, protocol: str, num_devices: int,
             flat = flatten_grid(g_params)
         rel = jax.vmap(
             lambda a, b: jnp.linalg.norm(a - b) /
-            jnp.maximum(jnp.linalg.norm(b), 1e-12))(flat, state["prev"])
+            jnp.maximum(jnp.linalg.norm(b), 1e-12))(flat, state.prev)
         # any_up mirrors the loop path's total-outage gate: an untouched
         # global state (rel == 0) on a round where nothing decoded is
         # not convergence
         hit = (p >= 2) & (rel < consts["eps"]) & any_up & \
-            (state["converged"] == 0)
-        converged = jnp.where(hit, p, state["converged"])
+            (state.converged_round == 0)
+        converged = jnp.where(hit, p, state.converged_round)
 
         out = {"acc": acc, "loss": jnp.mean(mloss, axis=1),
                "latency_s": link["latency_s"],
                "up_ok": jnp.sum(up_ok, axis=1).astype(jnp.int32)}
-        new_state = {"dev_params": dev_params, "g_params": g_params,
-                     "gout": gout, "dev_gout": dev_gout, "prev": flat,
-                     "converged": converged}
+        new_state = state.replace(
+            dev_params=dev_params, g_params=g_params, gout=gout,
+            dev_gout=dev_gout, prev=flat, converged_round=converged)
         return new_state, out
 
     return round_step

@@ -99,6 +99,12 @@ class SamplerConfig:
             raise ValueError("min_active must be >= 1: a round needs at "
                              "least one training device")
 
+    def __call__(self) -> "SamplerConfig":
+        """Transitional no-op: ``fc.sampler`` used to be a method; it is
+        now the typed sub-config field itself, and legacy ``fc.sampler()``
+        call sites resolve through this."""
+        return self
+
     def cohort_size(self, pool_size: int) -> int:
         """Devices per round for a ``pool_size`` pool: ceil(q * pool),
         at least ``min_active``, at most the pool.  The 1e-9 slack
@@ -131,3 +137,54 @@ class SamplerConfig:
         for p in range(1, rounds + 1):
             counts[self.cohort(fed_seed, p, pool_size)] += 1
         return counts
+
+
+@dataclasses.dataclass(frozen=True)
+class ChurnConfig:
+    """Seeded device churn: each round, every device of the pool is
+    independently active with probability ``p_active``; if fewer than
+    ``min_active`` come up, the draw tops the cohort back up (still
+    deterministically).  ``p_active = 1`` disables churn.
+
+    Lives here (not ``launch.service``, which re-exports it) so
+    ``FederatedConfig.churn`` can type the field without a core -> launch
+    import cycle; churn and sampling are the two participation
+    mechanisms of this module's stream contract anyway."""
+    p_active: float = 1.0
+    min_active: int = 1
+    seed: int = 0
+
+    def __post_init__(self):
+        if not 0.0 < self.p_active <= 1.0:
+            raise ValueError(f"p_active must be in (0, 1], "
+                             f"got {self.p_active}")
+        if self.min_active < 1:
+            raise ValueError("min_active must be >= 1: a round needs at "
+                             "least one training device")
+
+    def active_devices(self, fed_seed: int, round_: int,
+                       pool_size: int) -> np.ndarray:
+        """Sorted active-device indices of round ``round_`` — a pure
+        function of (seeds, round), so resumed runs re-draw identical
+        cohorts without checkpointing any RNG state.
+
+        Churn thresholds per-round participation uniforms from the same
+        primitive the client sampler ranks but under its own
+        ``MECH_CHURN`` stream tag, so sampling over a churned cohort
+        never re-reads uniforms churn already conditioned on (sharing
+        one stream biased the composed cohort toward low-index
+        survivors).  The stream is consumed even when ``p_active >= 1``
+        makes the draw degenerate — an early return used to skip the
+        rng entirely, so nudging ``p_active`` across 1.0 shifted
+        unrelated draws."""
+        u, rng = participation_uniforms(fed_seed, self.seed, round_,
+                                        pool_size, mechanism=MECH_CHURN)
+        mask = u < self.p_active
+        idx = np.flatnonzero(mask)
+        want = min(self.min_active, pool_size)
+        if len(idx) < want:
+            inactive = np.flatnonzero(~mask)
+            extra = rng.choice(inactive, size=want - len(idx),
+                               replace=False)
+            idx = np.concatenate([idx, extra])
+        return np.sort(idx)

@@ -1,0 +1,113 @@
+"""The one round-loop state: a frozen :class:`RoundState` pytree.
+
+Historically each execution surface carried its own state shape —
+``FederatedTrainer.round_once`` a mutable dict, ``make_grid_round_step``
+a positional scan-carry dict, ``launch.service`` a third dict rebuilt
+from checkpoint manifests.  This module collapses them: every round path
+takes and returns one frozen dataclass whose fields ARE the checkpoint
+manifest's keys (``launch.service`` maps them 1:1), registered as a JAX
+pytree so the compiled grid scan can carry it directly.
+
+Two layouts share the class:
+
+* **loop path** (``FederatedTrainer`` / ``launch.service``) — host-side
+  fields live: ``round`` (int), ``key`` (the run key; every per-round
+  draw derives from ``fold_in(key, round)``), ``converged_round``
+  (None | int), ``seeds`` (round-1 seed dict | None), ``cum_time_s``
+  (float);
+* **grid path** (``make_grid_round_step`` scan carry) — device-resident
+  (G, ...) fields live (``dev_params``/``g_params``/``gout``/
+  ``dev_gout``/``prev``/``converged_round`` as a (G,) int32), host
+  fields stay None so the carry structure is scan-stable.
+
+Transitional mapping compat: established callers (and the seed tests)
+index states like dicts — ``state["round"]``, ``dict(state)``.  The
+class keeps that working (``__getitem__``/``keys``/``get``; the grid
+carry's historical ``"converged"`` key aliases ``converged_round``)
+while new code uses attributes.  The dict surface is deprecated with the
+flat-config aliases and goes away with them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+
+#: Field order is the pytree flatten order AND the checkpoint manifest
+#: contract — append only.
+_FIELDS = ("round", "key", "g_params", "dev_params", "gout", "dev_gout",
+           "prev", "converged_round", "seeds", "cum_time_s")
+
+#: Historical key aliases accepted by the mapping surface.
+_ALIASES = {"converged": "converged_round"}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RoundState:
+    """One round path's complete resumable state (see module docstring).
+
+    Every field is a pytree child: Nones drop out of the leaf list, so
+    the loop layout (host scalars live) and the grid layout (host
+    scalars None) are both valid scan/checkpoint citizens without two
+    classes.
+    """
+    round: Any = 0
+    key: Any = None
+    g_params: Any = None
+    dev_params: Any = None
+    gout: Any = None
+    dev_gout: Any = None
+    prev: Any = None
+    converged_round: Any = None
+    seeds: Any = None
+    cum_time_s: Any = 0.0
+
+    # -- pytree ---------------------------------------------------------
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in _FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(**dict(zip(_FIELDS, children)))
+
+    # -- construction helpers ------------------------------------------
+    @classmethod
+    def from_mapping(cls, m: Any) -> "RoundState":
+        """Coerce a legacy state dict (or pass a RoundState through)."""
+        if isinstance(m, cls):
+            return m
+        kw = {}
+        for k, v in dict(m).items():
+            kw[_ALIASES.get(k, k)] = v
+        unknown = set(kw) - set(_FIELDS)
+        if unknown:
+            raise ValueError(f"unknown RoundState field(s) "
+                             f"{sorted(unknown)}; fields: {_FIELDS}")
+        return cls(**kw)
+
+    def replace(self, **kw) -> "RoundState":
+        """Functional field update (``dataclasses.replace`` shorthand)."""
+        kw = {_ALIASES.get(k, k): v for k, v in kw.items()}
+        return dataclasses.replace(self, **kw)
+
+    # -- transitional mapping surface ----------------------------------
+    def __getitem__(self, k: str):
+        return getattr(self, _ALIASES.get(k, k))
+
+    def get(self, k: str, default: Optional[Any] = None):
+        try:
+            return self[k]
+        except AttributeError:
+            return default
+
+    def keys(self):
+        return iter(_FIELDS)
+
+    def __iter__(self):
+        return iter(_FIELDS)
+
+    def __contains__(self, k: str) -> bool:
+        return _ALIASES.get(k, k) in _FIELDS

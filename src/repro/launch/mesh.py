@@ -49,6 +49,62 @@ def make_device_mesh(num_devices: int, shards: int | None = None):
     return jax.make_mesh((shards,), ("data",))
 
 
+def _largest_divisor(n: int, limit: int) -> int:
+    """Largest divisor of ``n`` that is <= ``limit`` (>= 1)."""
+    return max(d for d in range(1, max(1, min(n, limit)) + 1)
+               if n % d == 0)
+
+
+def grid_mesh_shape(grid_size: int, num_devices: int,
+                    shape: tuple | None = None,
+                    avail: int | None = None) -> tuple[int, int]:
+    """Resolve the ``(grid_shards, device_shards)`` shape of a 2-D pod
+    mesh without building it (the sweep engine re-resolves per program
+    group — each group's grid slice has its own G).
+
+    Auto-shaping greedily spends chips on the *grid* axis first: grid
+    points are embarrassingly parallel (no cross-point collectives at
+    all), whereas device-axis shards pay a psum per aggregation — the
+    roofline model (``roofline.analysis.recommend_execution``) reaches
+    the same ordering from the bytes-per-FLOP side.  Both entries must
+    divide their axis (shard_map blocks are equal-sized); an explicit
+    ``shape`` that doesn't is an error, the auto path picks the largest
+    divisors that fit ``avail`` chips.
+    """
+    avail = len(jax.devices()) if avail is None else avail
+    if shape is not None:
+        gs, ds = int(shape[0]), int(shape[1])
+        if gs < 1 or ds < 1:
+            raise ValueError(f"mesh shape entries must be >= 1, "
+                             f"got {shape}")
+        if grid_size % gs:
+            raise ValueError(f"grid size {grid_size} not divisible by "
+                             f"{gs} grid shards")
+        if num_devices % ds:
+            raise ValueError(f"device population {num_devices} not "
+                             f"divisible by {ds} device shards")
+        if gs * ds > avail:
+            raise ValueError(f"mesh shape {gs}x{ds} needs {gs * ds} "
+                             f"chips but only {avail} are available")
+        return gs, ds
+    gs = _largest_divisor(grid_size, avail)
+    ds = _largest_divisor(num_devices, avail // gs)
+    return gs, ds
+
+
+def make_grid_mesh(grid_size: int, num_devices: int,
+                   shape: tuple | None = None):
+    """2-D ("grid", "data") mesh for pod-scale sweeps: hyperparameter
+    grid points shard along "grid", each point's federated device axis
+    along "data" (``launch.sharding.federated_grid_pspecs``).  On a
+    1-chip host this degenerates to a (1, 1) mesh and the shard_mapped
+    program reduces to the vmapped one exactly — the same fallback
+    contract as :func:`make_device_mesh`.
+    """
+    gs, ds = grid_mesh_shape(grid_size, num_devices, shape)
+    return jax.make_mesh((gs, ds), ("grid", "data"))
+
+
 def data_axes(mesh) -> tuple:
     """Axes that shard the batch: ("pod","data") when pods exist."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

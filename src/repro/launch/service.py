@@ -43,7 +43,6 @@ CLI smoke (checkpoint + kill + resume + one served batch)::
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import tempfile
 from typing import Optional
 
@@ -54,60 +53,18 @@ import numpy as np
 from repro import checkpoint
 from repro.channel import ChannelConfig
 from repro.core.privacy import GaussianAccountant
+from repro.core.program import LoopRoundProgram, ProgramOptions
 from repro.core.protocols import (FederatedConfig, FederatedTrainer,
                                   summarize_seeds)
-from repro.core.sampling import MECH_CHURN, participation_uniforms
+from repro.core.sampling import ChurnConfig
+from repro.core.state import RoundState
+
+__all__ = ["ChurnConfig", "FederatedService", "InferenceEndpoint"]
 
 #: Keys of one round's JSON-ready history record (the ``link`` arrays
 #: stay out of the checkpoint meta).
 _RECORD_KEYS = ("round", "acc", "loss", "round_latency_s", "compute_s",
                 "cum_time_s", "uplink_ok", "n_straggle")
-
-
-@dataclasses.dataclass(frozen=True)
-class ChurnConfig:
-    """Seeded device churn: each round, every device of the pool is
-    independently active with probability ``p_active``; if fewer than
-    ``min_active`` come up, the draw tops the cohort back up (still
-    deterministically).  ``p_active = 1`` disables churn."""
-    p_active: float = 1.0
-    min_active: int = 1
-    seed: int = 0
-
-    def __post_init__(self):
-        if not 0.0 < self.p_active <= 1.0:
-            raise ValueError(f"p_active must be in (0, 1], "
-                             f"got {self.p_active}")
-        if self.min_active < 1:
-            raise ValueError("min_active must be >= 1: a round needs at "
-                             "least one training device")
-
-    def active_devices(self, fed_seed: int, round_: int,
-                       pool_size: int) -> np.ndarray:
-        """Sorted active-device indices of round ``round_`` — a pure
-        function of (seeds, round), so resumed runs re-draw identical
-        cohorts without checkpointing any RNG state.
-
-        Churn thresholds per-round participation uniforms from the same
-        primitive the client sampler ranks (``core.sampling``) but under
-        its own ``MECH_CHURN`` stream tag, so sampling over a churned
-        cohort never re-reads uniforms churn already conditioned on
-        (sharing one stream biased the composed cohort toward low-index
-        survivors).  The stream is consumed even when ``p_active >= 1``
-        makes the draw degenerate — an early return used to skip the
-        rng entirely, so nudging ``p_active`` across 1.0 shifted
-        unrelated draws."""
-        u, rng = participation_uniforms(fed_seed, self.seed, round_,
-                                        pool_size, mechanism=MECH_CHURN)
-        mask = u < self.p_active
-        idx = np.flatnonzero(mask)
-        want = min(self.min_active, pool_size)
-        if len(idx) < want:
-            inactive = np.flatnonzero(~mask)
-            extra = rng.choice(inactive, size=want - len(idx),
-                               replace=False)
-            idx = np.concatenate([idx, extra])
-        return np.sort(idx)
 
 
 class InferenceEndpoint:
@@ -210,7 +167,8 @@ class FederatedService:
                  ch: Optional[ChannelConfig] = None, *,
                  churn: Optional[ChurnConfig] = None,
                  ckpt_dir: Optional[str] = None, ckpt_every: int = 1,
-                 keep: Optional[int] = None, serve_batch: int = 16):
+                 keep: Optional[int] = None, serve_batch: int = 16,
+                 options: Optional[ProgramOptions] = None):
         if fc.model_partition is not None:
             raise ValueError(
                 "FederatedService drives homogeneous cohorts: churn "
@@ -220,7 +178,14 @@ class FederatedService:
                 "or the sweep engine")
         self.trainer = FederatedTrainer(model, fc, ch)
         self.fc = self.trainer.fc
-        self.churn = churn or ChurnConfig()
+        # explicit churn wins, then the config's own churn sub-config
+        self.churn = churn or self.fc.churn or ChurnConfig()
+        self.options = options or ProgramOptions()
+        # the unified round program: at pipeline_depth > 1 future rounds'
+        # link draws are dispatched while the current round trains; the
+        # per-round plan rides in xs, so a churn-driven cohort-size
+        # change invalidates (and cheaply re-draws) stale handles
+        self._program = LoopRoundProgram(self.trainer, self.options)
         self.ckpt_dir = ckpt_dir
         self.ckpt_every = ckpt_every
         self.keep = keep
@@ -261,29 +226,26 @@ class FederatedService:
         if self._data is None:
             raise RuntimeError("call bind_data(...) before step()")
         pool_x, pool_y, test_x, test_y = self._data
-        state = self.state
-        p = state["round"] + 1
+        state = RoundState.from_mapping(self.state)
+        p = state.round + 1
         idx = self.churn.active_devices(self.fc.seed, p,
                                         self.fc.num_devices)
         jdx = jnp.asarray(idx)
-        cohort = dict(state)
-        cohort["dev_params"] = jax.tree.map(lambda a: a[jdx],
-                                            state["dev_params"])
-        cohort["dev_gout"] = state["dev_gout"][jdx]
-        plan = self.trainer.link_plan(state["g_params"],
-                                      n_links=len(idx))
-        cohort, rec = self.trainer.round_once(
-            cohort, pool_x[jdx], pool_y[jdx], test_x, test_y,
-            plan=plan, log=log)
+        cohort = state.replace(
+            dev_params=jax.tree.map(lambda a: a[jdx], state.dev_params),
+            dev_gout=state.dev_gout[jdx])
+        plan = self.trainer.link_plan(state.g_params, n_links=len(idx))
+        cohort, rec = self._program.step(
+            cohort, {"dev_x": pool_x[jdx], "dev_y": pool_y[jdx],
+                     "test_x": test_x, "test_y": test_y, "plan": plan,
+                     "log": log})
         # scatter the cohort's device state back into the pool; shared
         # (global) fields carry over wholesale
-        new_state = dict(cohort)
-        new_state["dev_params"] = jax.tree.map(
-            lambda pool, coh: pool.at[jdx].set(coh),
-            state["dev_params"], cohort["dev_params"])
-        new_state["dev_gout"] = state["dev_gout"].at[jdx].set(
-            cohort["dev_gout"])
-        self.state = new_state
+        self.state = cohort.replace(
+            dev_params=jax.tree.map(
+                lambda pool, coh: pool.at[jdx].set(coh),
+                state.dev_params, cohort.dev_params),
+            dev_gout=state.dev_gout.at[jdx].set(cohort.dev_gout))
         # actual participants: the churned cohort, further narrowed by
         # round_once's client sampling when fc.sample_ratio < 1
         # (rec["cohort"] indexes within the churned cohort)
@@ -310,7 +272,7 @@ class FederatedService:
         """Answer one inference request batch against the current
         global model (between rounds, training state untouched)."""
         self.endpoint.submit(x)
-        return self.endpoint.flush(self.state["g_params"])
+        return self.endpoint.flush(self.state.g_params)
 
     # -- checkpoint / restore -----------------------------------------
     def _history_meta(self) -> list[dict]:
@@ -325,25 +287,25 @@ class FederatedService:
         meta.  ``prev`` is absent only before the first round."""
         if not self.ckpt_dir:
             raise RuntimeError("service has no ckpt_dir")
-        state = self.state
-        tree = {"key": np.asarray(state["key"]),
-                "g_params": state["g_params"],
-                "dev_params": state["dev_params"],
-                "gout": state["gout"],
-                "dev_gout": state["dev_gout"]}
-        if state["prev"] is not None:
-            tree["prev"] = state["prev"]
-        if state["seeds"] is not None:
-            tree["seeds"] = {"train_x": state["seeds"]["train_x"],
-                             "train_y": state["seeds"]["train_y"]}
-        if self._seed_meta is None and state["seeds"] is not None \
-                and "uploaded" in state["seeds"]:
+        state = RoundState.from_mapping(self.state)
+        tree = {"key": np.asarray(state.key),
+                "g_params": state.g_params,
+                "dev_params": state.dev_params,
+                "gout": state.gout,
+                "dev_gout": state.dev_gout}
+        if state.prev is not None:
+            tree["prev"] = state.prev
+        if state.seeds is not None:
+            tree["seeds"] = {"train_x": state.seeds["train_x"],
+                             "train_y": state.seeds["train_y"]}
+        if self._seed_meta is None and state.seeds is not None \
+                and "uploaded" in state.seeds:
             # the full round-1 dict is only in memory on the run that
             # collected it; its summary rides along in every checkpoint
-            self._seed_meta = summarize_seeds(state["seeds"])
-        meta = {"round": state["round"],
-                "cum_time_s": state["cum_time_s"],
-                "converged_round": state["converged_round"],
+            self._seed_meta = summarize_seeds(state.seeds)
+        meta = {"round": state.round,
+                "cum_time_s": state.cum_time_s,
+                "converged_round": state.converged_round,
                 "protocol": self.fc.protocol,
                 "dp_rounds": (self._acct.rounds
                               if self._acct is not None else 0),
@@ -354,7 +316,7 @@ class FederatedService:
                     if self._acct is not None else None),
                 "seed_meta": self._seed_meta,
                 "history": self._history_meta()}
-        return checkpoint.save(self.ckpt_dir, state["round"], tree,
+        return checkpoint.save(self.ckpt_dir, state.round, tree,
                                meta=meta, keep=self.keep)
 
     def restore(self, step: Optional[int] = None) -> int:
@@ -369,20 +331,28 @@ class FederatedService:
         if "seeds" in tree:
             seeds = {"train_x": jnp.asarray(tree["seeds"]["train_x"]),
                      "train_y": jnp.asarray(tree["seeds"]["train_y"])}
-        self.state = {
-            "round": meta["round"],
-            "key": jnp.asarray(tree["key"]),
-            "g_params": jax.tree.map(jnp.asarray, tree["g_params"]),
-            "dev_params": jax.tree.map(jnp.asarray, tree["dev_params"]),
-            "gout": jnp.asarray(tree["gout"]),
-            "dev_gout": jnp.asarray(tree["dev_gout"]),
-            "prev": (jnp.asarray(tree["prev"]) if "prev" in tree
-                     else None),
-            "converged_round": meta["converged_round"],
-            "seeds": seeds,
-            "cum_time_s": meta["cum_time_s"],
-        }
+        # checkpoint manifest keys ARE RoundState fields (1:1); the
+        # array tree holds the device-resident fields, the manifest meta
+        # the host scalars
+        self.state = RoundState(
+            round=meta["round"],
+            key=jnp.asarray(tree["key"]),
+            g_params=jax.tree.map(jnp.asarray, tree["g_params"]),
+            dev_params=jax.tree.map(jnp.asarray, tree["dev_params"]),
+            gout=jnp.asarray(tree["gout"]),
+            dev_gout=jnp.asarray(tree["dev_gout"]),
+            prev=(jnp.asarray(tree["prev"]) if "prev" in tree
+                  else None),
+            converged_round=meta["converged_round"],
+            seeds=seeds,
+            cum_time_s=meta["cum_time_s"],
+        )
         self.history = list(meta.get("history", []))
+        # draws dispatched before the restore point are stale (they were
+        # keyed off rounds this process will now re-run with possibly
+        # different cohort plans) — drop the whole window; re-drawing is
+        # cheap and the keys are pure functions of (key, round) anyway
+        self._program.finalize()
         self._seed_meta = meta.get("seed_meta")
         if self._acct is not None:
             self._acct.rounds = meta.get("dp_rounds", 0)
@@ -425,8 +395,11 @@ def _smoke_setup(args):
                        compute_mean_s=args.compute_mean_s,
                        deadline_s=args.deadline_s)
     churn = ChurnConfig(p_active=args.p_active, min_active=2)
+    opts = ProgramOptions(
+        pipeline_depth=getattr(args, "pipeline_depth", 1))
     svc = FederatedService(None, fc, ch, churn=churn,
-                           ckpt_dir=args.ckpt_dir, ckpt_every=1)
+                           ckpt_dir=args.ckpt_dir, ckpt_every=1,
+                           options=opts)
     svc.bind_data(dev_x, dev_y, x[1200:], y[1200:])
     return svc, (x, y)
 
@@ -448,6 +421,10 @@ def main(argv=None) -> int:
                     help="registry task shaping the synthetic workload")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--p-active", type=float, default=0.75)
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    dest="pipeline_depth",
+                    help="rounds of link draws in flight (1 = strict "
+                         "serial; 2 = double-buffered channel sim)")
     ap.add_argument("--compute-mean-s", type=float, default=0.05,
                     dest="compute_mean_s")
     ap.add_argument("--deadline-s", type=float, default=0.15,
@@ -463,9 +440,11 @@ def main(argv=None) -> int:
     svc, _ = _smoke_setup(args)
     recs = svc.run_rounds(args.rounds, log=print)
     n_straggled = sum(r["n_straggle"] for r in recs)
+    pstats = svc._program.finalize()
     print(f"trained {args.rounds} rounds: final acc={recs[-1]['acc']:.3f}"
           f" cohort sizes={[r['n_active'] for r in recs]}"
-          f" stragglers dropped={n_straggled}")
+          f" stragglers dropped={n_straggled}"
+          f" pipeline={pstats}")
 
     # one served batch against the live global model
     pool_x = np.asarray(svc._data[0])

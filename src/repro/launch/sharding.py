@@ -43,6 +43,29 @@ def federated_pspecs():
     return {"device": P("data"), "replicated": P()}
 
 
+def federated_grid_pspecs():
+    """PartitionSpecs for the pod-scale sweep program over the 2-D
+    ("grid", "data") mesh (launch.mesh.make_grid_mesh):
+
+    * ``gdev`` — (G, D, ...) operands: grid axis over "grid", federated
+      device axis over "data" (stacked params, per-point datasets,
+      per-device keys and G_out tables);
+    * ``gcfg`` — (G, ...) per-config constants and outputs (etas, link
+      budgets, per-round metrics): grid axis only, whole per-point
+      value on each "data" shard;
+    * ``data`` — (D, ...) operands shared across grid points (a common
+      dataset partition): device axis only, replicated over "grid";
+    * ``replicated`` — true scalars (the round counter).
+
+    The device-axis reductions stay psums over "data" exactly as on the
+    1-D mesh — each grid shard's psum spans only its own rows, which is
+    precisely that grid point's aggregation set, so no "grid"
+    collectives exist anywhere (grid points are independent programs
+    that happen to share one compiled body)."""
+    return {"gdev": P("grid", "data"), "gcfg": P("grid"),
+            "data": P("data"), "replicated": P()}
+
+
 # ---------------------------------------------------------------------------
 # Parameter rules
 # ---------------------------------------------------------------------------

@@ -283,6 +283,59 @@ def improvement_hint(record: dict) -> str:
             "stay sub-dominant.")
 
 
+def recommend_execution(grid_size: int, num_devices: int, *,
+                        avail: int,
+                        compute_s: float | None = None,
+                        channel_s: float | None = None,
+                        min_hidden_frac: float = 0.05) -> dict:
+    """Pick the round program's execution knobs — the 2-D
+    ``(grid, device)`` mesh shape and the channel pipelining depth —
+    from the roofline model's ordering arguments
+    (``core.program.ProgramOptions`` consumes the result; the pipeline
+    benchmark reports it next to the measured speedup).
+
+    **Mesh shape.**  Grid points are embarrassingly parallel (zero
+    collective bytes between them) while device-axis shards pay a psum
+    per aggregation, so chips go to the grid axis first — the same
+    greedy ordering ``launch.mesh.grid_mesh_shape`` implements; this
+    just re-exports its auto shape at the requested chip budget.
+
+    **Pipeline depth.**  A round is ``compute_s`` of on-chip local SGD
+    plus ``channel_s`` of host-side link simulation; the two use
+    disjoint resources (XLA executor vs Python dispatch), so double
+    buffering hides ``min(compute_s, channel_s)`` per steady-state
+    round.  Depth 2 is recommended when that hidden slice is at least
+    ``min_hidden_frac`` of the serial round; depth beyond 2 never helps
+    in steady state (only one round's draw can overlap one round's
+    SGD), so the recommendation is always 1 or 2.  With no timings the
+    depth stays 1 — the bitwise-oracle serial path.
+    """
+    from ..launch.mesh import grid_mesh_shape
+    gs, ds = grid_mesh_shape(grid_size, num_devices, avail=avail)
+    rec = {"mesh_shape": (gs, ds), "pipeline_depth": 1,
+           "hidden_s": 0.0, "est_speedup": 1.0}
+    if not compute_s or not channel_s:
+        rec["rationale"] = ("no round timings: strict-serial depth 1 "
+                            "(the bitwise oracle)")
+        return rec
+    serial = compute_s + channel_s
+    hidden = min(compute_s, channel_s)
+    rec["hidden_s"] = hidden
+    rec["est_speedup"] = serial / max(compute_s, channel_s)
+    if hidden >= min_hidden_frac * serial:
+        rec["pipeline_depth"] = 2
+        rec["rationale"] = (
+            f"channel sim is {channel_s / serial:.0%} of the serial "
+            f"round: double buffering hides {hidden * 1e3:.1f}ms/round "
+            f"(est {rec['est_speedup']:.2f}x)")
+    else:
+        rec["rationale"] = (
+            f"channel sim is only {channel_s / serial:.0%} of the "
+            f"serial round: overlap would hide < {min_hidden_frac:.0%}, "
+            f"stay serial")
+    return rec
+
+
 def summarize_combo(record: dict) -> str:
     t = record["roofline"]
     dom = dominant_term(t)

@@ -63,12 +63,15 @@ except ImportError:
 
 from ..channel import round_slot_plan
 from ..core.privacy import GaussianAccountant, gaussian_epsilon
+from ..core.program import GridRoundProgram, ProgramOptions
 from ..core.protocols import (FLD_FAMILY, FederatedTrainer,
                               gout_update_psum, make_grid_local_train,
                               make_grid_round_step, weighted_avg_psum)
 from ..core.seed_prep import SeedPrepMemo, prepare_seeds
+from ..core.state import RoundState
 from ..data.pipeline import parse_task
-from ..launch.mesh import make_device_mesh
+from ..launch.mesh import (_largest_divisor, make_device_mesh,
+                           make_grid_mesh)
 from ..registry import MODELS, TASKS
 from .axes import SweepGrid
 from .results import SweepResult
@@ -285,11 +288,13 @@ class _ProtocolProgram:
     def __init__(self, model, grid: SweepGrid, proto: str, idxs, parts,
                  test_x, test_y, memo: SeedPrepMemo, mesh,
                  codec: str = "identity", cohort_size: int | None = None,
-                 arch_models: list | None = None):
+                 arch_models: list | None = None,
+                 options: ProgramOptions | None = None):
         engine_stats.programs += 1
         fc0, ch0 = grid.points[idxs[0]]
         self.idxs = idxs
         self.codec = codec
+        self.options = options or ProgramOptions()
         points = [grid.points[i] for i in idxs]
         G, D, C, R = len(idxs), fc0.num_devices, fc0.num_classes, \
             fc0.max_rounds
@@ -299,10 +304,26 @@ class _ProtocolProgram:
         sampled = Dc < D
         dev_x, dev_y, n_local, per_config = _stack_partitions(parts)
         feat = dev_x.shape[3:] if per_config else dev_x.shape[2:]
-        if sampled and mesh is not None:
+        if self.options.mesh_shape is not None:
+            # pod-scale 2-D (grid x device) mesh: this group's G points
+            # lay out along "grid", each point's cohort along "data".
+            # The requested shape is a *budget* — each program group
+            # re-fits it to its own grid slice (the largest divisors
+            # that fit the request AND the local chip count), so a
+            # 5-point group on a 2x4 request, or a 2x4 request on a
+            # 1-chip host, still shards what it can instead of erroring.
+            avail = len(jax.devices())
+            gs = _largest_divisor(G, min(self.options.mesh_shape[0],
+                                         avail))
+            ds = _largest_divisor(Dc, min(self.options.mesh_shape[1],
+                                          avail // gs))
+            mesh = make_grid_mesh(G, Dc, shape=(gs, ds))
+        elif sampled and mesh is not None:
             # the mesh spans the cohort (only Dc devices enter the
             # shard_mapped fns), mirroring the sampled trainer's mesh
             mesh = make_device_mesh(Dc, fc0.mesh_shards or None)
+        self.mesh_shape = (tuple(mesh.devices.shape)
+                           if mesh is not None else None)
 
         # ---- host prep, per config in the loop path's exact key order;
         # seed prep is memoized on the seed-determining content (config
@@ -456,20 +477,29 @@ class _ProtocolProgram:
                                             fc0.local_iters,
                                             fc0.local_batch,
                                             per_config or sampled)
-            gdev = P(None, "data")   # (G, D, ...): shard the device dim
+            # on a 2-D ("grid", "data") mesh the (G, D, ...) state shards
+            # both axes and the per-config (G,) scalars shard "grid";
+            # every reduction stays a psum over "data" only, so each grid
+            # shard's collective spans exactly its own points' device
+            # rows — no cross-point communication is introduced.  On the
+            # 1-D ("data",) mesh gcfg degrades to P() (replicated),
+            # recovering the previous specs verbatim.
+            grid_axis = "grid" in mesh.axis_names
+            gdev = P("grid", "data") if grid_axis else P(None, "data")
+            gcfg = P("grid") if grid_axis else P()
             ddev = gdev if (per_config or sampled) else P("data")
             rep = P()
             fns["local_train_fn"] = shard_map(
                 grid_lt, mesh=mesh,
-                in_specs=(gdev, ddev, ddev, gdev, gdev, rep, rep, rep,
-                          rep),
+                in_specs=(gdev, ddev, ddev, gdev, gdev, rep, gcfg, gcfg,
+                          gcfg),
                 out_specs=(gdev, gdev, gdev, gdev), check_rep=False)
             fns["weighted_avg_fn"] = shard_map(
                 jax.vmap(weighted_avg_psum), mesh=mesh,
-                in_specs=(gdev, gdev), out_specs=rep, check_rep=False)
+                in_specs=(gdev, gdev), out_specs=gcfg, check_rep=False)
             fns["gout_update_fn"] = shard_map(
                 jax.vmap(gout_update_psum), mesh=mesh,
-                in_specs=(gdev, gdev, gdev), out_specs=rep,
+                in_specs=(gdev, gdev, gdev), out_specs=gcfg,
                 check_rep=False)
 
         round_step = make_grid_round_step(
@@ -489,7 +519,7 @@ class _ProtocolProgram:
             engine_stats.traces += 1  # Python side effect: trace-counted
             return jax.lax.scan(round_step, state, xs)
 
-        self._program = jax.jit(_sweep_program)
+        self._step_fn = jax.jit(_sweep_program)
 
         if arch_models is None:
             dev_params0 = jax.tree.map(
@@ -507,22 +537,25 @@ class _ProtocolProgram:
                     lambda p: jnp.broadcast_to(
                         p[:, None], (G, len(idx)) + p.shape[1:]).copy(),
                     base)
-        self._state0 = {
-            "dev_params": dev_params0,
-            "g_params": g_params,
-            "gout": jnp.full((G, C, C), 1.0 / C),
-            "dev_gout": jnp.full((G, D, C, C), 1.0 / C),
-            "prev": jnp.zeros(
-                (G, C * C if proto == "fd" else n_params)),
-            "converged": jnp.zeros((G,), jnp.int32),
-        }
+        self._state0 = RoundState(
+            dev_params=dev_params0,
+            g_params=g_params,
+            gout=jnp.full((G, C, C), 1.0 / C),
+            dev_gout=jnp.full((G, D, C, C), 1.0 / C),
+            prev=jnp.zeros((G, C * C if proto == "fd" else n_params)),
+            converged_round=jnp.zeros((G,), jnp.int32),
+            # host-loop fields ride as None in the grid layout
+            round=None, key=None, seeds=None, cum_time_s=None)
+        self._rp = GridRoundProgram(self._step_fn, self._state0,
+                                    options=self.options)
         self.seed_sets = seed_sets if proto in FLD_FAMILY else None
 
     def run(self):
-        """Execute the compiled scan; returns (final state, per-round
-        outputs), outputs stacked (R, Gp)."""
-        state, out = self._program(self._state0, self._xs)
-        return state, jax.tree.map(np.asarray, jax.block_until_ready(out))
+        """Execute the compiled scan through the :class:`GridRoundProgram`
+        face; returns (final state, per-round outputs), outputs stacked
+        (R, Gp)."""
+        self._rp.step(self._state0, self._xs)
+        return self._rp.finalize()
 
 
 class SweepRunner:
@@ -542,8 +575,10 @@ class SweepRunner:
     ``dev_x``/``test_x``."""
 
     def __init__(self, model, grid: SweepGrid, dev_x=None, dev_y=None,
-                 test_x=None, test_y=None, *, task_data=None):
+                 test_x=None, test_y=None, *, task_data=None,
+                 options: ProgramOptions | None = None):
         fc0, ch0 = grid.points[0]
+        self.options = options or ProgramOptions()
         if ch0.num_devices != fc0.num_devices:
             raise ValueError(
                 f"channel simulates {ch0.num_devices} links but the "
@@ -593,7 +628,8 @@ class SweepRunner:
                 gmodel, grid, proto, idxs,
                 [self.partitions[i] for i in idxs],
                 gtx, gty, memo, self.mesh, codec=codec,
-                cohort_size=csize, arch_models=arch_models)
+                cohort_size=csize, arch_models=arch_models,
+                options=self.options)
             self._programs.append((proto, idxs, prog))
         self.programs = len(self._programs)
 
@@ -653,10 +689,11 @@ class SweepRunner:
 
 
 def run_sweep(model, grid: SweepGrid, dev_x=None, dev_y=None, test_x=None,
-              test_y=None, *, task_data=None) -> SweepResult:
+              test_y=None, *, task_data=None,
+              options: ProgramOptions | None = None) -> SweepResult:
     """One-shot convenience: build a :class:`SweepRunner` and run it."""
     return SweepRunner(model, grid, dev_x, dev_y, test_x, test_y,
-                       task_data=task_data).run()
+                       task_data=task_data, options=options).run()
 
 
 def run_pointwise(model, grid: SweepGrid, dev_x=None, dev_y=None,

@@ -1,0 +1,160 @@
+"""Deprecation-alias round-trips for the typed-config redesign.
+
+``FederatedConfig``'s flat sampling/codec fields became typed
+sub-configs (``sampler``/``churn``/``channel``); the flat fields stay as
+deprecation-warning aliases for one release.  These tests pin the
+reconciliation contract of ``FederatedConfig._sync_sub`` — either
+surface constructs the same config, the aliases always mirror the sub,
+and the sweep's ``dataclasses.replace`` mutation path keeps working —
+plus the matching transitional surfaces on :class:`RoundState` and
+``SamplerConfig.__call__``.
+"""
+import dataclasses
+import warnings
+
+import jax.numpy as jnp
+import pytest
+
+from repro.channel.payload import LinkConfig
+from repro.core.protocols import FederatedConfig
+from repro.core.sampling import ChurnConfig, SamplerConfig
+from repro.core.state import RoundState
+
+
+def _fc(**kw):
+    return FederatedConfig(protocol="fd", num_devices=4, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Flat aliases -> sub-config (the legacy kwargs path)
+# ---------------------------------------------------------------------------
+
+def test_flat_sampler_kwargs_build_sub_and_warn():
+    with pytest.warns(DeprecationWarning, match="sample_ratio"):
+        fc = _fc(sample_ratio=0.5, sample_seed=3, sample_min_active=2)
+    assert fc.sampler == SamplerConfig(sample_ratio=0.5, seed=3,
+                                       min_active=2)
+    # the aliases mirror the sub after construction
+    assert fc.sample_ratio == 0.5
+    assert fc.sample_seed == 3
+    assert fc.cohort_size() == 2
+
+
+def test_flat_codec_kwargs_build_sub_and_warn():
+    with pytest.warns(DeprecationWarning, match="quant_bits"):
+        fc = _fc(codec="quantize", quant_bits=4)
+    assert fc.channel == LinkConfig(codec="quantize", quant_bits=4)
+    assert fc.codec_spec().name == "quantize"
+    assert fc.codec_spec().quant_bits == 4
+
+
+def test_defaults_warn_nothing():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        fc = _fc()
+    assert fc.sampler == SamplerConfig()
+    assert fc.channel == LinkConfig()
+    assert fc.churn is None
+
+
+# ---------------------------------------------------------------------------
+# Sub-config -> flat aliases (the canonical path)
+# ---------------------------------------------------------------------------
+
+def test_sub_config_syncs_flat_aliases_silently():
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        fc = _fc(sampler=SamplerConfig(sample_ratio=0.5, seed=3),
+                 channel=LinkConfig(codec="quantize", quant_bits=4))
+    # legacy readers (getattr on the flat names) see live values
+    assert fc.sample_ratio == 0.5
+    assert fc.sample_seed == 3
+    assert fc.codec == "quantize"
+    assert fc.quant_bits == 4
+
+
+def test_both_surfaces_agree_either_way():
+    with pytest.warns(DeprecationWarning):
+        via_flat = _fc(sample_ratio=0.5, quant_bits=4, codec="quantize")
+    via_sub = _fc(sampler=SamplerConfig(sample_ratio=0.5),
+                  channel=LinkConfig(codec="quantize", quant_bits=4))
+    assert via_flat.sampler == via_sub.sampler
+    assert via_flat.channel == via_sub.channel
+    assert via_flat.cohort_size() == via_sub.cohort_size()
+
+
+def test_flats_win_on_disagreement():
+    """``dataclasses.replace(fc, sample_ratio=q)`` hands the old sub
+    plus the new flat value — the flat edit must take effect (this is
+    the sweep axis mutation surface)."""
+    fc = _fc(sampler=SamplerConfig(sample_ratio=0.5, seed=3))
+    fc2 = dataclasses.replace(fc, sample_ratio=0.25)
+    assert fc2.sampler.sample_ratio == 0.25
+    assert fc2.sample_ratio == 0.25
+    # untouched alias groups survive the replace
+    assert fc2.sample_seed == 3
+    assert fc2.channel == fc.channel
+
+
+def test_replace_preserves_sub_configs():
+    fc = _fc(sampler=SamplerConfig(sample_ratio=0.5),
+             channel=LinkConfig(codec="quantize", quant_bits=4),
+             churn=ChurnConfig(p_active=0.75))
+    fc2 = dataclasses.replace(fc, eta=0.02)
+    assert fc2.sampler == fc.sampler
+    assert fc2.channel == fc.channel
+    assert fc2.churn == fc.churn
+
+
+# ---------------------------------------------------------------------------
+# Validation funnels through the sub-configs
+# ---------------------------------------------------------------------------
+
+def test_validation_lives_in_sub_configs():
+    with pytest.raises(ValueError, match="sample_ratio"):
+        SamplerConfig(sample_ratio=0.0)
+    with pytest.raises(ValueError, match="sample_ratio"):
+        _fc(sample_ratio=1.5)
+    with pytest.raises(ValueError, match="p_active"):
+        ChurnConfig(p_active=0.0)
+    with pytest.raises(ValueError):
+        LinkConfig(codec="no_such_codec")
+    with pytest.raises(ValueError):
+        _fc(codec="no_such_codec")
+    with pytest.raises(TypeError, match="ChurnConfig"):
+        _fc(churn={"p_active": 0.5})
+
+
+def test_sampler_call_is_transitional_noop():
+    fc = _fc()
+    assert fc.sampler() is fc.sampler
+    assert fc.sampler().cohort_size(4) == 4
+
+
+# ---------------------------------------------------------------------------
+# RoundState transitional mapping surface
+# ---------------------------------------------------------------------------
+
+def test_round_state_mapping_compat():
+    st = RoundState(round=3, key=jnp.zeros((2,), jnp.uint32),
+                    converged_round=2)
+    assert st["round"] == 3
+    assert st["converged"] == 2          # historical grid-carry key
+    assert st.get("prev") is None
+    assert st.get("no_such_field", 7) == 7
+    assert "converged" in st and "round" in st
+    assert set(st.keys()) == {
+        "round", "key", "g_params", "dev_params", "gout", "dev_gout",
+        "prev", "converged_round", "seeds", "cum_time_s"}
+    assert dict(zip(st, [st[k] for k in st]))["round"] == 3
+
+
+def test_round_state_from_mapping_round_trips():
+    st = RoundState(round=3, cum_time_s=1.5, converged_round=2)
+    assert RoundState.from_mapping(st) is st
+    again = RoundState.from_mapping(
+        {"round": 3, "cum_time_s": 1.5, "converged": 2})
+    assert again == st
+    assert st.replace(converged=4).converged_round == 4
+    with pytest.raises(ValueError, match="unknown RoundState field"):
+        RoundState.from_mapping({"round": 3, "not_a_field": 1})

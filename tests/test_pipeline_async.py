@@ -1,0 +1,174 @@
+"""Async-overlap vs strict-serial equivalence for the round programs.
+
+A link outcome is a pure function of ``(plan, key)`` and round ``q``'s
+key is ``fold_in(fold_in(run_key, q), 3)`` — known from round 1 — so the
+double-buffered program (``pipeline_depth > 1``) may dispatch draws
+rounds ahead of their collection without changing a single bit.  These
+tests lock that contract down for every protocol family, plus the
+dispatch-window bookkeeping (stats, plan invalidation under churn, and
+the restore path dropping stale handles).
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.channel import ChannelConfig
+from repro.core.program import LoopRoundProgram, ProgramOptions
+from repro.core.protocols import FederatedConfig, FederatedTrainer
+from repro.core.sampling import ChurnConfig
+from repro.data import partition_iid, synthetic_images
+from repro.launch.service import FederatedService
+from repro.models.cnn import CNN
+
+#: history keys that must agree exactly between schedules (compute_s /
+#: cum_time_s are host wall-clock measurements and legitimately differ)
+_KEYS = ("acc", "loss", "round_latency_s", "uplink_ok", "n_straggle",
+         "converged_round")
+
+
+@pytest.fixture(scope="module")
+def data():
+    x, y = synthetic_images(jax.random.PRNGKey(42), 900)
+    dev_x, dev_y = partition_iid(np.asarray(x[:800]), np.asarray(y[:800]),
+                                 4, 200, 10, seed=0)
+    return dev_x, dev_y, x[800:], y[800:]
+
+
+def _fc(protocol):
+    return FederatedConfig(protocol=protocol, num_devices=4,
+                           local_iters=4, local_batch=16, server_iters=4,
+                           server_batch=16, max_rounds=3, n_seed=6,
+                           n_inverse=12, seed=0)
+
+
+def _histories_equal(h1, h2):
+    for k in _KEYS:
+        if k not in h1:
+            assert k not in h2
+            continue
+        np.testing.assert_array_equal(np.asarray(h1[k]),
+                                      np.asarray(h2[k]),
+                                      err_msg=f"history[{k!r}]")
+
+
+@pytest.mark.parametrize("protocol", ["fl", "fd", "mix2fld"])
+def test_depth2_bitwise_equals_serial(protocol, data):
+    """The double-buffered schedule is bitwise the strict-serial oracle
+    on every protocol family (straggler stage on, so the fold_in(key, 7)
+    stream is exercised too)."""
+    dev_x, dev_y, tx, ty = data
+    ch = ChannelConfig(num_devices=4, p_up_dbm=40.0,
+                       compute_mean_s=0.05, deadline_s=0.15)
+    tr = FederatedTrainer(CNN(), _fc(protocol), ch)
+    h1 = tr.run(dev_x, dev_y, tx, ty,
+                options=ProgramOptions(pipeline_depth=1))
+    h2 = tr.run(dev_x, dev_y, tx, ty,
+                options=ProgramOptions(pipeline_depth=2))
+    _histories_equal(h1, h2)
+
+
+def test_default_run_is_depth1(data):
+    """run() without options is the strict-serial program — the
+    pre-redesign behaviour, bit for bit."""
+    dev_x, dev_y, tx, ty = data
+    ch = ChannelConfig(num_devices=4, p_up_dbm=40.0)
+    tr = FederatedTrainer(CNN(), _fc("fd"), ch)
+    h0 = tr.run(dev_x, dev_y, tx, ty)
+    assert h0["pipeline"]["pipeline_depth"] == 1
+    assert h0["pipeline"]["dispatched"] == h0["pipeline"]["collected"]
+    h2 = tr.run(dev_x, dev_y, tx, ty,
+                options=ProgramOptions(pipeline_depth=2))
+    _histories_equal(h0, h2)
+
+
+def test_dispatch_window_stats(data):
+    """Depth d keeps at most d draws in flight: over R rounds with a
+    stable plan, R + (d - 1) dispatches, R collections, d - 1 abandoned
+    at finalize."""
+    dev_x, dev_y, tx, ty = data
+    ch = ChannelConfig(num_devices=4, p_up_dbm=40.0)
+    tr = FederatedTrainer(CNN(), _fc("fd"), ch)
+    for depth in (1, 2, 3):
+        h = tr.run(dev_x, dev_y, tx, ty,
+                   options=ProgramOptions(pipeline_depth=depth))
+        stats = h["pipeline"]
+        R = 3
+        assert stats["pipeline_depth"] == depth
+        assert stats["dispatched"] == R + (depth - 1)
+        assert stats["collected"] == R
+        assert stats["abandoned"] == depth - 1
+
+
+def test_plan_change_invalidates_prefetch(data):
+    """A dispatched handle whose plan no longer matches the round's is
+    dropped, never collected — the cohort-size-change-under-churn
+    safety property, exercised directly through the program."""
+    dev_x, dev_y, tx, ty = data
+    ch = ChannelConfig(num_devices=4, p_up_dbm=40.0)
+    tr = FederatedTrainer(CNN(), _fc("fd"), ch)
+    prog = LoopRoundProgram(tr, ProgramOptions(pipeline_depth=2))
+    prog.bind(dev_x=dev_x, dev_y=dev_y, test_x=tx, test_y=ty)
+    state = tr.init_state()
+    state, _ = prog.step(state)          # prefetches round 2's draw
+    plan3 = tr.link_plan(state.g_params, n_links=3)
+    cohort = state.replace(
+        dev_params=jax.tree.map(lambda a: a[:3], state.dev_params),
+        dev_gout=state.dev_gout[:3])
+    _, rec = prog.step(cohort, {"dev_x": dev_x[:3],
+                                     "dev_y": dev_y[:3],
+                                     "plan": plan3})
+    # round 2's prefetch was drawn under the 4-link plan: must NOT count
+    # as collected (it was invalidated and re-drawn serially)
+    assert prog.collected == 1
+    assert rec["uplink_ok"] <= 3
+
+
+def test_service_depth2_matches_serial(tmp_path):
+    """The continuous-serving driver under churn produces identical
+    per-round records at depth 1 and depth 2 (stale prefetches are
+    invalidated by the per-round plan), and a depth-2 restore drops the
+    pre-restore window."""
+    x, y = synthetic_images(jax.random.PRNGKey(7), 700)
+    dev_x, dev_y = partition_iid(np.asarray(x[:600]), np.asarray(y[:600]),
+                                 4, 150, 10, seed=0)
+    fc = FederatedConfig(protocol="fd", num_devices=4, local_iters=2,
+                         local_batch=16, server_iters=2, server_batch=16,
+                         max_rounds=4, seed=0)
+    ch = ChannelConfig(num_devices=4, p_up_dbm=40.0)
+    churn = ChurnConfig(p_active=0.75, min_active=2, seed=1)
+
+    def run(depth, ckpt_dir=None):
+        svc = FederatedService(
+            CNN(), fc, ch, churn=churn, ckpt_dir=ckpt_dir,
+            options=ProgramOptions(pipeline_depth=depth))
+        svc.bind_data(dev_x, dev_y, x[600:], y[600:])
+        recs = svc.run_rounds(4)
+        return svc, recs
+
+    _, r1 = run(1)
+    svc2, r2 = run(2, ckpt_dir=str(tmp_path))
+    for a, b in zip(r1, r2):
+        for k in ("round", "acc", "loss", "round_latency_s", "uplink_ok",
+                  "n_active"):
+            assert np.asarray(a[k] == b[k]).all(), (k, a[k], b[k])
+
+    # restore mid-stream into a fresh depth-2 service: tail identical
+    svc3 = FederatedService(CNN(), fc, ch, churn=churn,
+                            ckpt_dir=str(tmp_path),
+                            options=ProgramOptions(pipeline_depth=2))
+    svc3.bind_data(dev_x, dev_y, x[600:], y[600:])
+    assert svc3.restore(step=2) == 2
+    tail = svc3.run_rounds(2)
+    for a, b in zip(r2[2:], tail):
+        for k in ("round", "acc", "loss", "uplink_ok"):
+            assert np.asarray(a[k] == b[k]).all(), (k, a[k], b[k])
+
+
+def test_program_options_validation():
+    with pytest.raises(ValueError, match="pipeline_depth"):
+        ProgramOptions(pipeline_depth=0)
+    with pytest.raises(ValueError, match="mesh_shape"):
+        ProgramOptions(mesh_shape=(2,))
+    with pytest.raises(ValueError, match="mesh_shape"):
+        ProgramOptions(mesh_shape=(0, 4))
+    assert ProgramOptions(mesh_shape=(2, 4)).mesh_shape == (2, 4)
